@@ -1,0 +1,76 @@
+"""Paper Fig. 5 (Experiment 2): DFG time vs diced event count — Claim C3.
+
+Accumulating time windows (paper: +1 day per round over ~4 months).  Two
+systems, fixed resources:
+
+* pm4py-equivalent baseline: parse/load the **full** log, then filter —
+  time ≈ constant in the dice size (dominated by the full-log load);
+* graph-store path: the per-chunk time index maps the window to a row
+  range — time ∝ events *in the dice*.
+
+The paper's crossover (~2M events, Neo4j slower beyond) came from Neo4j's
+per-event metadata overhead; our columnar adaptation removes most of that,
+so the graph path stays at-or-below the baseline all the way to the full
+log — reported as a beyond-paper result, with the full-log ratio printed
+so the C2-style overhead remains visible.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import InMemoryDFGBaseline, streaming_dfg
+from repro.data import ProcessSpec, generate_memmap_log
+
+EVENTS = int(os.environ.get("BENCH_EVENTS", 2_000_000))
+ROUNDS = 8
+
+
+def run() -> list:
+    rows = []
+    tmp = tempfile.mkdtemp(prefix="graphpm_fig5_")
+    spec = ProcessSpec(num_activities=64, seed=13, horizon_days=120)
+    log = generate_memmap_log(os.path.join(tmp, "log"), EVENTS, spec, seed=13)
+    t_min = float(log.time[0])
+    t_max = float(log.time[-1])
+
+    # preload baseline's full in-memory representation ONCE per query round
+    # (pm4py re-loads the XES per analysis session; we charge the load to
+    # each query, exactly like the paper's per-round measurements)
+    for r in range(1, ROUNDS + 1):
+        t1 = t_min + (t_max - t_min) * r / ROUNDS
+        window = (t_min, t1)
+        lo, hi = log.rows_for_window(*window)
+        n_diced = hi - lo
+
+        t0 = time.perf_counter()
+        base = InMemoryDFGBaseline()
+        rows_iter = (
+            (int(c), int(a), float(t))
+            for A, C, T in log.iter_chunks()
+            for a, c, t in zip(A, C, T)
+        )
+        psi_b = base.dfg(rows_iter, log.num_activities, time_window=window)
+        t_base = (time.perf_counter() - t0) * 1e6
+
+        t0 = time.perf_counter()
+        psi_g = streaming_dfg(log, time_window=window)
+        t_graph = (time.perf_counter() - t0) * 1e6
+
+        match = bool((psi_b == psi_g).all())
+        rows.append((
+            f"fig5_round{r}", t_graph,
+            f"diced_events={n_diced};graph_us={t_graph:.0f};"
+            f"pm4py_us={t_base:.0f};speedup={t_base / max(t_graph, 1):.2f}x;"
+            f"match={match}"
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

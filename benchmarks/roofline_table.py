@@ -1,0 +1,68 @@
+"""Aggregate dry-run artifacts into the §Roofline table (markdown + CSV)."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+COLS = [
+    "arch", "shape", "mesh", "tag", "compute_s", "memory_s", "collective_s",
+    "dominant_term", "useful_flops_ratio", "roofline_fraction",
+    "per_device_gib", "fits_hbm", "num_collectives", "compile_s",
+]
+
+
+def load(tag: str = "baseline", mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    if not os.path.isdir(ART):
+        return rows
+    for f in sorted(os.listdir(ART)):
+        if not f.endswith(f"__{tag}.json"):
+            continue
+        d = json.load(open(os.path.join(ART, f)))
+        if mesh and d.get("mesh") != mesh:
+            continue
+        d["per_device_gib"] = d.get("per_device_bytes", 0) / 2**30
+        d["num_collectives"] = d.get("collectives", {}).get("num_collectives", 0)
+        rows.append(d)
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = (
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "useful_flops | roofline_frac | GiB/chip | fits |\n"
+        "|---|---|---|---|---|---|---|---|---|---|"
+    )
+    lines = [hdr]
+    for d in rows:
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['compute_s']:.4f} | "
+            f"{d['memory_s']:.4f} | {d['collective_s']:.4f} | "
+            f"{d['dominant_term']} | {d['useful_flops_ratio']:.2f} | "
+            f"{d['roofline_fraction']:.3f} | {d['per_device_gib']:.2f} | "
+            f"{'✓' if d.get('fits_hbm') else '✗'} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> list:
+    out = []
+    for mesh in ("16x16", "2x16x16"):
+        rows = load(mesh=mesh)
+        for d in rows:
+            out.append((
+                f"roofline_{d['arch']}_{d['shape']}_{mesh}",
+                d["roofline_bound_s"] * 1e6,
+                f"dominant={d['dominant_term']};frac={d['roofline_fraction']:.3f};"
+                f"gib={d['per_device_gib']:.2f}",
+            ))
+    return out
+
+
+if __name__ == "__main__":
+    rows = load()
+    print(to_markdown(rows))

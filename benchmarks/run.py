@@ -1,0 +1,45 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Set ``BENCH_EVENTS`` to scale
+the Fig.4/Fig.5 logs (default 2M events ≈ the paper's dicing range start).
+Use ``--fast`` for a reduced smoke pass (CI).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> None:
+    if "--fast" in sys.argv:
+        os.environ.setdefault("BENCH_EVENTS", "200000")
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    from benchmarks import (
+        bench_dfg_example,
+        bench_dicing,
+        bench_kernels,
+        bench_memory_scaling,
+        roofline_table,
+    )
+
+    for mod, label in (
+        (bench_dfg_example, "table1"),
+        (bench_memory_scaling, "fig4"),
+        (bench_dicing, "fig5"),
+        (bench_kernels, "kernels"),
+        (roofline_table, "roofline"),
+    ):
+        try:
+            for row in mod.run():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{label}_ERROR,0,{e!r}", flush=True)
+    print(f"total_wall,{(time.time() - t0) * 1e6:.0f},seconds="
+          f"{time.time() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

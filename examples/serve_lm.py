@@ -1,0 +1,40 @@
+"""Batched serving example: ragged prompts, waves, per-sequence positions.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve import ServeEngine
+
+cfg = dataclasses.replace(
+    get_config("gemma2-9b").reduced(), vocab_size=512, loss_chunk=32
+)
+params = init_params(cfg, jax.random.PRNGKey(0))
+engine = ServeEngine(cfg, params, max_batch=4, max_cache=128, temperature=0.7)
+
+rng = np.random.default_rng(0)
+prompts = [
+    rng.integers(1, cfg.vocab_size, size=n).tolist()
+    for n in (3, 7, 12, 5, 9, 2, 20, 6)
+]
+t0 = time.perf_counter()
+results = engine.generate(prompts, max_new_tokens=24)
+dt = time.perf_counter() - t0
+
+total = sum(len(r.tokens) for r in results)
+print(f"{len(results)} requests, {total} tokens in {dt:.2f}s "
+      f"({total / dt:.1f} tok/s on 1 CPU core)")
+for r in results[:3]:
+    print(f"  prompt[{len(r.prompt):2d} toks] → {r.tokens[:10]}… ({r.finished})")
+
+# the engine records its own process events — minable like everything else
+repo = engine.collector.to_repository()
+print(f"\nserver telemetry: {repo.num_events} events "
+      f"({', '.join(repo.activity_names)})")

@@ -1,0 +1,19 @@
+"""GraphPM-JAX — graph-based process mining (Jalali 2020) as a production
+multi-pod JAX framework.
+
+Subpackages:
+  core       — the paper's contribution: event repositories, Algorithm 1 DFG,
+               views, distributed/streaming execution, discovery, telemetry
+  kernels    — Pallas TPU kernels (dfg_count) with jnp oracles
+  models     — assigned architecture zoo (dense/MoE/SSM/hybrid/enc-dec/VLM)
+  configs    — one config per assigned architecture + input shapes
+  sharding   — logical-axis sharding policies
+  train      — optimizer, trainer, fault tolerance, grad compression
+  serve      — KV caches, prefill/decode, batched engine
+  checkpoint — sharded async checkpoints with elastic resharding
+  data       — synthetic BPI-like log generator, XES/CSV IO, LM token pipeline
+  launch     — mesh/dryrun/train/serve/mine CLIs
+  roofline   — TPU v5e roofline analysis from compiled HLO
+"""
+
+__version__ = "0.1.0"

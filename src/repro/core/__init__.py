@@ -1,0 +1,58 @@
+"""GraphPM core — the paper's primary contribution in JAX.
+
+Event repositories (Definition 1), soundness (Definition 2), Algorithm 1
+(DFG) in scatter / one-hot-MXU / Pallas formulations, dicing, access-control
+views, distributed (shard_map) and streaming (out-of-core) execution,
+DFG-based discovery, and runtime telemetry mining.
+"""
+
+from .repository import EventRepository, GraphRepo, paper_example_repo
+from .soundness import SoundnessReport, check_columnar, check_graph, is_sound
+from .dfg import (
+    dfg,
+    dfg_algorithm1,
+    dfg_from_repository,
+    dfg_numpy,
+    dfg_onehot,
+    dfg_scatter,
+)
+from .dicing import (
+    dice_repository,
+    event_mask_for_activities,
+    event_mask_for_window,
+    pair_mask_for_window,
+)
+from .views import HIDDEN, AccessPolicy, ActivityView, AnalystSession
+from .discovery import (
+    DiscoveredModel,
+    dependency_matrix,
+    discover_dependency_graph,
+    filter_dfg,
+    footprint,
+    footprint_conformance,
+    to_dot,
+)
+from .baseline import InMemoryDFGBaseline, dfg_from_rows
+from .streaming import MemmapLog, StreamingDFGMiner, streaming_dfg
+from .distributed import distributed_dfg, lower_distributed_dfg, shard_pairs
+from .telemetry import EventCollector, StepTimer
+from .variants import TraceVariants, trace_variants, variant_filtered_repository
+from .conformance import ReplayResult, replay_fitness
+
+__all__ = [
+    "EventRepository", "GraphRepo", "paper_example_repo",
+    "SoundnessReport", "check_columnar", "check_graph", "is_sound",
+    "dfg", "dfg_algorithm1", "dfg_from_repository", "dfg_numpy",
+    "dfg_onehot", "dfg_scatter",
+    "dice_repository", "event_mask_for_activities", "event_mask_for_window",
+    "pair_mask_for_window",
+    "HIDDEN", "AccessPolicy", "ActivityView", "AnalystSession",
+    "DiscoveredModel", "dependency_matrix", "discover_dependency_graph",
+    "filter_dfg", "footprint", "footprint_conformance", "to_dot",
+    "InMemoryDFGBaseline", "dfg_from_rows",
+    "MemmapLog", "StreamingDFGMiner", "streaming_dfg",
+    "distributed_dfg", "lower_distributed_dfg", "shard_pairs",
+    "EventCollector", "StepTimer",
+    "TraceVariants", "trace_variants", "variant_filtered_repository",
+    "ReplayResult", "replay_fitness",
+]

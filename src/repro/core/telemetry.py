@@ -1,0 +1,119 @@
+"""Runtime telemetry as event logs — the framework mines itself.
+
+Every training/serving step emits process events (``load_batch → forward →
+backward → grad_sync → optimizer → [checkpoint]``) into an in-memory
+collector that converts to a standard :class:`EventRepository`.  Graph-based
+process mining over these traces is the framework's fault/straggler
+forensics: a healthy run's DFG is a clean chain; retries, restarts, and
+stragglers appear as deviating variants and timing outliers.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+import time as _time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .repository import EventRepository
+
+__all__ = ["EventCollector", "StepTimer"]
+
+
+class EventCollector:
+    """Thread-safe append-only event collector.
+
+    ``case`` is typically ``step-<n>`` (each training step is one trace),
+    ``activity`` a phase name.  ``record`` is O(1); conversion to a
+    repository is deferred."""
+
+    def __init__(self, log_name: str = "runtime"):
+        self.log_name = log_name
+        self._lock = threading.Lock()
+        self._cases: List[str] = []
+        self._activities: List[str] = []
+        self._times: List[float] = []
+        self._durations: List[float] = []
+
+    def record(
+        self,
+        case: str,
+        activity: str,
+        timestamp: Optional[float] = None,
+        duration: float = 0.0,
+    ) -> None:
+        with self._lock:
+            self._cases.append(case)
+            self._activities.append(activity)
+            self._times.append(
+                timestamp if timestamp is not None else _time.perf_counter()
+            )
+            self._durations.append(duration)
+
+    @contextlib.contextmanager
+    def span(self, case: str, activity: str):
+        t0 = _time.perf_counter()
+        try:
+            yield
+        finally:
+            self.record(case, activity, timestamp=t0,
+                        duration=_time.perf_counter() - t0)
+
+    def __len__(self) -> int:
+        return len(self._cases)
+
+    def to_repository(self) -> EventRepository:
+        with self._lock:
+            return EventRepository.from_event_table(
+                list(self._cases),
+                list(self._activities),
+                list(self._times),
+            )
+
+    def durations_by_activity(self) -> Dict[str, np.ndarray]:
+        out: Dict[str, List[float]] = {}
+        with self._lock:
+            for a, d in zip(self._activities, self._durations):
+                out.setdefault(a, []).append(d)
+        return {k: np.asarray(v) for k, v in out.items()}
+
+    def straggler_report(self, threshold: float = 3.0) -> Dict[str, Dict]:
+        """Flag activities whose max duration exceeds ``threshold`` × median —
+        the straggler-mitigation signal consumed by the trainer."""
+        rep = {}
+        for act, ds in self.durations_by_activity().items():
+            if ds.size < 3:
+                continue
+            med = float(np.median(ds))
+            mx = float(ds.max())
+            if med > 0 and mx > threshold * med:
+                rep[act] = {
+                    "median_s": med,
+                    "max_s": mx,
+                    "ratio": mx / med,
+                    "count": int(ds.size),
+                }
+        return rep
+
+
+class StepTimer:
+    """Duration tracker keyed by phase, independent of the collector."""
+
+    def __init__(self):
+        self.totals: Dict[str, float] = {}
+        self.counts: Dict[str, int] = {}
+
+    @contextlib.contextmanager
+    def phase(self, name: str):
+        t0 = _time.perf_counter()
+        try:
+            yield
+        finally:
+            dt = _time.perf_counter() - t0
+            self.totals[name] = self.totals.get(name, 0.0) + dt
+            self.counts[name] = self.counts.get(name, 0) + 1
+
+    def summary(self) -> Dict[str, Tuple[float, int]]:
+        return {k: (self.totals[k], self.counts[k]) for k in self.totals}

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for compute hot-spots the paper optimizes.
+
+The paper's single hot loop is the in-store DFG computation (its Cypher
+MATCH); :mod:`repro.kernels.dfg_count` is the TPU-native version (one-hot
+MXU accumulation + fused WHERE-clause dicing).
+"""
+
+from . import dfg_count
+
+__all__ = ["dfg_count"]

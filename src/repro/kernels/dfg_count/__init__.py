@@ -1,0 +1,9 @@
+from . import ops, ref
+from .ops import dfg_count, dfg_count_diced, pick_blocks
+from .ref import dfg_count_diced_ref, dfg_count_ref
+
+__all__ = [
+    "ops", "ref",
+    "dfg_count", "dfg_count_diced", "pick_blocks",
+    "dfg_count_ref", "dfg_count_diced_ref",
+]

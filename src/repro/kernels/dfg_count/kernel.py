@@ -1,0 +1,144 @@
+"""Pallas TPU kernel for DFG counting (Algorithm 1's hot loop).
+
+GPU/graph-DB intuition would scatter-add each directly-follows pair into
+``Ψ[src, dst]`` — scatters serialize on TPU.  The TPU-native formulation
+builds one-hot tiles **in VMEM** from the integer id blocks and accumulates
+
+    Ψ[i·BA:(i+1)·BA, j·BA:(j+1)·BA] += OneHot_src(block)ᵀ · OneHot_dst(block)
+
+on the MXU.  Grid ``(A/BA_src, A/BA_dst, E/BE)`` with the event dimension
+innermost (fastest-varying) so each output tile stays resident while the
+event stream flows through; the tile is zeroed at the first event block
+(standard Pallas accumulation pattern).
+
+VMEM working set per step (BE=1024, BA=128, f32):
+  2 one-hots 1024×128×4 B = 1 MiB + out tile 64 KiB  « 16 MiB v5e VMEM.
+MXU alignment: BE multiple of 8 (sublane), BA multiple of 128 (lane).
+
+The fused **dicing** variant additionally streams the pair timestamps and
+applies ``t0 ≤ t < t1`` in-register — the paper's WHERE clause at zero extra
+HBM traffic (no filtered copy is ever materialized).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dfg_kernel", "dfg_dice_kernel", "dfg_count_pallas"]
+
+
+def dfg_kernel(src_ref, dst_ref, valid_ref, out_ref, *, block_a: int):
+    """One grid step: accumulate a (BA, BA) tile over one event block."""
+    i = pl.program_id(0)  # src-activity tile
+    j = pl.program_id(1)  # dst-activity tile
+    e = pl.program_id(2)  # event block (innermost)
+
+    @pl.when(e == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    src = src_ref[...]  # (BE,) int32
+    dst = dst_ref[...]
+    valid = valid_ref[...]
+
+    a0 = i * block_a
+    b0 = j * block_a
+    cols = jax.lax.broadcasted_iota(jnp.int32, (src.shape[0], block_a), 1)
+    oh_src = (src[:, None] == (a0 + cols)) & valid[:, None]
+    oh_dst = dst[:, None] == (b0 + cols)
+    out_ref[...] += jax.lax.dot_general(
+        oh_src.astype(jnp.float32),
+        oh_dst.astype(jnp.float32),
+        dimension_numbers=(((0,), (0,)), ((), ())),  # contract over events
+        preferred_element_type=jnp.float32,
+    )
+
+
+def dfg_dice_kernel(
+    src_ref, dst_ref, valid_ref, ts_src_ref, ts_dst_ref, win_ref, out_ref,
+    *, block_a: int
+):
+    """Fused dicing: valid &= (t0 <= t_src) & (t_src < t1) & same for dst.
+
+    Paper semantics — both endpoints of the pair must be inside the window."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    e = pl.program_id(2)
+
+    @pl.when(e == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    src = src_ref[...]
+    dst = dst_ref[...]
+    t0 = win_ref[0, 0]
+    t1 = win_ref[0, 1]
+    ts_s = ts_src_ref[...]
+    ts_d = ts_dst_ref[...]
+    valid = (
+        valid_ref[...]
+        & (ts_s >= t0) & (ts_s < t1)
+        & (ts_d >= t0) & (ts_d < t1)
+    )
+
+    a0 = i * block_a
+    b0 = j * block_a
+    cols = jax.lax.broadcasted_iota(jnp.int32, (src.shape[0], block_a), 1)
+    oh_src = (src[:, None] == (a0 + cols)) & valid[:, None]
+    oh_dst = dst[:, None] == (b0 + cols)
+    out_ref[...] += jax.lax.dot_general(
+        oh_src.astype(jnp.float32),
+        oh_dst.astype(jnp.float32),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def dfg_count_pallas(
+    src: jax.Array,
+    dst: jax.Array,
+    valid: jax.Array,
+    *,
+    num_activities_padded: int,
+    block_e: int,
+    block_a: int,
+    interpret: bool,
+    ts_src: jax.Array | None = None,
+    ts_dst: jax.Array | None = None,
+    window: jax.Array | None = None,
+) -> jax.Array:
+    """Raw pallas_call wrapper.  All shapes must be pre-padded:
+    len(src) % block_e == 0, num_activities_padded % block_a == 0."""
+    e_total = src.shape[0]
+    a_pad = num_activities_padded
+    grid = (a_pad // block_a, a_pad // block_a, e_total // block_e)
+
+    ev_spec = pl.BlockSpec((block_e,), lambda i, j, e: (e,))
+    out_spec = pl.BlockSpec((block_a, block_a), lambda i, j, e: (i, j))
+    out_shape = jax.ShapeDtypeStruct((a_pad, a_pad), jnp.float32)
+
+    if window is None:
+        kern = functools.partial(dfg_kernel, block_a=block_a)
+        return pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[ev_spec, ev_spec, ev_spec],
+            out_specs=out_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(src, dst, valid)
+
+    win_spec = pl.BlockSpec((1, 2), lambda i, j, e: (0, 0))
+    kern = functools.partial(dfg_dice_kernel, block_a=block_a)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[ev_spec, ev_spec, ev_spec, ev_spec, ev_spec, win_spec],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(src, dst, valid, ts_src, ts_dst, window)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the dfg_count Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dfg_count_ref", "dfg_count_diced_ref"]
+
+
+@functools.partial(jax.jit, static_argnames=("num_activities",))
+def dfg_count_ref(
+    src: jax.Array, dst: jax.Array, valid: jax.Array, *, num_activities: int
+) -> jax.Array:
+    psi = jnp.zeros((num_activities, num_activities), dtype=jnp.int32)
+    v = valid.astype(jnp.int32)
+    # clip ids so padded/garbage rows can't index OOB (they carry v == 0)
+    s = jnp.clip(src, 0, num_activities - 1)
+    d = jnp.clip(dst, 0, num_activities - 1)
+    # rows with ids outside range contribute 0
+    in_range = (src >= 0) & (src < num_activities) & (dst >= 0) & (dst < num_activities)
+    return psi.at[s, d].add(v * in_range.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("num_activities",))
+def dfg_count_diced_ref(
+    src: jax.Array,
+    dst: jax.Array,
+    valid: jax.Array,
+    ts_src: jax.Array,
+    ts_dst: jax.Array,
+    window: jax.Array,
+    *,
+    num_activities: int,
+) -> jax.Array:
+    t0, t1 = window[0], window[1]
+    v = (
+        valid
+        & (ts_src >= t0) & (ts_src < t1)
+        & (ts_dst >= t0) & (ts_dst < t1)
+    )
+    return dfg_count_ref(src, dst, v, num_activities=num_activities)

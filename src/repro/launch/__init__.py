@@ -1,0 +1,2 @@
+"""Launch entry points: mesh.py (production meshes), dryrun.py (lower +
+compile every arch × shape × mesh), train.py, serve.py, mine.py."""

@@ -1,0 +1,44 @@
+"""Production meshes.
+
+Built as FUNCTIONS so importing this module never touches jax device state.
+``dryrun.py`` sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
+before any jax import; tests/benches see the single real CPU device.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh", "mesh_devices"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devs)} — "
+            "run under dryrun.py (placeholder host devices) or on the pod"
+        )
+    return jax.make_mesh(
+        shape, axes,
+        devices=devs[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_test_mesh(shape=(1, 1), axes=("data", "model")):
+    n = math.prod(shape)
+    return jax.make_mesh(
+        shape, axes,
+        devices=jax.devices()[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def mesh_devices(mesh) -> int:
+    return math.prod(list(mesh.shape.values()))

@@ -1,0 +1,233 @@
+"""Step functions + abstract inputs + shardings per (cfg, shape, mesh).
+
+Used by the dry-run (lower/compile only) and by the real trainer/server on
+hardware — same code path, so the dry-run proves the production config.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainHParams
+from repro.models import (
+    decode_step,
+    init_caches,
+    init_params,
+    prefill,
+    train_loss,
+)
+from repro.models.moe import DistCtx
+from repro.sharding.spec import (
+    ShardingRules,
+    batch_shardings,
+    cache_shardings,
+    make_rules,
+    param_shardings,
+)
+from repro.train.optimizer import OptState, adamw_update, init_opt_state
+
+__all__ = [
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+    "abstract_train_args",
+    "abstract_prefill_args",
+    "abstract_decode_args",
+    "abstract_params",
+]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0)
+    )
+
+
+def _abstract_batch(cfg: ModelConfig, shape: ShapeConfig, with_labels: bool):
+    B, S = shape.global_batch, shape.seq_len
+    s_text = S - (cfg.n_patches if cfg.family == "vlm" else 0)
+    batch = {"tokens": _sds((B, s_text), jnp.int32)}
+    if with_labels:
+        batch["labels"] = _sds((B, s_text), jnp.int32)
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = _sds((B, cfg.n_patches, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+def _q_chunk(shape: ShapeConfig, cfg: ModelConfig = None) -> int:
+    if cfg is not None and cfg.q_chunk:
+        return cfg.q_chunk
+    return 512 if shape.seq_len > 8192 else 1024
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def abstract_train_args(cfg, shape):
+    p = abstract_params(cfg)
+    o = jax.eval_shape(init_opt_state, p)
+    b = _abstract_batch(cfg, shape, with_labels=True)
+    return p, o, b
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh,
+    hp: TrainHParams = TrainHParams(),
+):
+    rules = make_rules(mesh, shape)
+    p, o, b = abstract_train_args(cfg, shape)
+    p_sh = param_shardings(rules, p, cfg)
+    o_sh = OptState(
+        step=rules.nd(P()),
+        mu=param_shardings(rules, o.mu, cfg),
+        nu=param_shardings(rules, o.nu, cfg),
+    )
+    b_sh = batch_shardings(rules, b)
+    scalar = rules.nd(P())
+    qc = _q_chunk(shape, cfg)
+    # all archs get the dist ctx for training: sequence-parallel
+    # activations (sp_axes) + data-local MoE dispatch (moe_axes)
+    sp = ("model",) if rules.model_axis else ()
+    dist = DistCtx(mesh, rules.batch_axes, sp_axes=sp)
+
+    # microbatching (gradient accumulation): MoE dispatch transients scale
+    # with per-device tokens — accumulate to stay inside HBM
+    k = cfg.microbatches or (
+        4 if cfg.top_k >= 8 else (2 if cfg.n_experts else 1)
+    )
+
+    def _loss(pp, bb):
+        if cfg.cast_params_once:
+            # cast before the FSDP gathers: the all-gather moves bf16, the
+            # f32 master copy never leaves its shard.  MoE expert weights
+            # are skipped: a convert feeding the dispatch shard_map trips an
+            # XLA:CPU partitioner CHECK ("invalid binary opcode copy").
+            def cast(path, x):
+                keys = [getattr(p, "key", "") for p in path]
+                if "moe" in keys or x.ndim < 2:
+                    return x
+                return x.astype(jnp.bfloat16)
+
+            pp = jax.tree_util.tree_map_with_path(cast, pp)
+        return train_loss(cfg, pp, bb, q_chunk=qc, dist=dist)
+
+    def train_step(params, opt_state, batch):
+        grad_fn = jax.value_and_grad(_loss)
+        if k == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch
+            )
+
+            def body(acc, mbatch):
+                l, g = grad_fn(params, mbatch)
+                return (
+                    acc[0] + l,
+                    jax.tree.map(
+                        lambda a, gg: a + gg.astype(jnp.float32), acc[1], g
+                    ),
+                ), None
+
+            zeros = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params
+            )
+            (loss, gsum), _ = jax.lax.scan(body, (jnp.float32(0.0), zeros), mb)
+            loss = loss / k
+            grads = jax.tree.map(lambda g: g / k, gsum)
+        new_p, new_o, metrics = adamw_update(hp, params, grads, opt_state)
+        return new_p, new_o, loss, metrics
+
+    in_sh = (p_sh, o_sh, b_sh)
+    out_sh = (p_sh, o_sh, scalar, {"lr": scalar, "grad_norm": scalar})
+    return train_step, in_sh, out_sh, (p, o, b), (0, 1)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+
+def abstract_prefill_args(cfg, shape):
+    p = abstract_params(cfg)
+    b = _abstract_batch(cfg, shape, with_labels=False)
+    return p, b
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    rules = make_rules(mesh, shape)
+    p, b = abstract_prefill_args(cfg, shape)
+    p_sh = param_shardings(rules, p, cfg)
+    b_sh = batch_shardings(rules, b)
+    qc = _q_chunk(shape, cfg)
+    cache_len = shape.seq_len
+    # all archs: head-shard constraints + SP + data-local MoE dispatch
+    sp = ("model",) if rules.model_axis else ()
+    dist = DistCtx(mesh, rules.batch_axes, sp_axes=sp, head_shard=True)
+
+    def prefill_step(params, batch):
+        return prefill(cfg, params, batch, cache_len, q_chunk=qc, dist=dist)
+
+    caches_shape = jax.eval_shape(prefill_step, p, b)[0]
+    c_sh = cache_shardings(rules, caches_shape)
+    logits_sh = rules.nd(
+        P(
+            rules.batch_if(shape.global_batch),
+            rules.model_if(cfg.vocab_size),
+        )
+    )
+    return prefill_step, (p_sh, b_sh), (c_sh, logits_sh), (p, b), ()
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def abstract_decode_args(cfg, shape):
+    p = abstract_params(cfg)
+    B = shape.global_batch
+    toks = _sds((B, 1), jnp.int32)
+    caches = jax.eval_shape(
+        lambda: init_caches(cfg, B, shape.seq_len)
+    )
+    pos = _sds((), jnp.int32)
+    return p, toks, caches, pos
+
+
+def make_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    rules = make_rules(mesh, shape)
+    p, toks, caches, pos = abstract_decode_args(cfg, shape)
+    p_sh = param_shardings(rules, p, cfg)
+    c_sh = cache_shardings(rules, caches)
+    b = rules.batch_if(shape.global_batch)
+    tok_sh = rules.nd(P(b, None))
+    pos_sh = rules.nd(P())
+    logits_sh = rules.nd(P(b, rules.model_if(cfg.vocab_size)))
+    dist = (
+        DistCtx(mesh, rules.batch_axes)
+        if cfg.n_experts and rules.batch_axes
+        else None
+    )
+
+    def serve_step(params, tokens, cache, position):
+        return decode_step(cfg, params, tokens, cache, position, dist=dist)
+
+    in_sh = (p_sh, tok_sh, c_sh, pos_sh)
+    out_sh = (logits_sh, c_sh)
+    return serve_step, in_sh, out_sh, (p, toks, caches, pos), (2,)

@@ -1,0 +1,13 @@
+from .model import (
+    count_params,
+    decode_step,
+    init_caches,
+    init_params,
+    prefill,
+    train_loss,
+)
+
+__all__ = [
+    "count_params", "decode_step", "init_caches", "init_params",
+    "prefill", "train_loss",
+]

@@ -1,0 +1,373 @@
+"""GQA attention for the assigned architectures.
+
+Covers: grouped-query attention, RoPE (per-kind base for gemma3), sliding
+window / local layers, attention-logit softcapping (gemma2), QK-norm
+(gemma3/olmoe), gemma2 query scaling, encoder (bidirectional) and
+cross-attention (whisper), KV caches (full, ring/window), and
+**q-chunked attention** for long sequences: scores are materialized only
+per q-chunk — (B, H, chunk, S_k) — which bounds activation memory for the
+32k prefill shapes; local layers additionally slice keys to the window, so
+their compute is O(S · W), not O(S²).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import apply_rope, normal_init, rms_norm, softcap
+
+__all__ = ["init_attn", "attn_train", "attn_decode", "init_attn_cache"]
+
+NEG_INF = -2.0**30  # large-but-finite: keeps fully-masked rows NaN-free
+
+
+def _rope_base(cfg: ModelConfig, kind: str) -> float:
+    if kind == "local" and cfg.rope_base_local is not None:
+        return cfg.rope_base_local
+    return cfg.rope_base
+
+
+def _scale(cfg: ModelConfig) -> float:
+    if cfg.query_scale is not None:
+        return cfg.query_scale**-0.5
+    return float(cfg.head_dim) ** -0.5
+
+
+def _head_shard(cfg: ModelConfig, dist, q, k, v):
+    """Pin q/k/v to an explicit head-axis sharding (§Perf hillclimb #1).
+
+    The fused projection dim (KV·G·hd) shards cleanly over ``model``, but
+    its reshape to (KV, G, hd) does not — GSPMD then shards the *head_dim
+    contraction* and all-reduces the (B, KV, G, qc, S) scores every q-chunk.
+    Constraining the head axis with the least padding (KV vs G; uneven dims
+    are allowed in sharding constraints) keeps scores device-local: 2× padded
+    compute at worst instead of TB-scale score reductions.
+    """
+    if dist is None or cfg.attn_head_shard == "none" or not dist.head_shard:
+        return q, k, v
+    mesh = dist.mesh
+    if "model" not in mesh.axis_names:
+        return q, k, v
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ms = mesh.shape["model"]
+    if cfg.n_heads % ms == 0:
+        # the fused-dim sharding already lands exactly on head boundaries —
+        # GSPMD shards heads cleanly on its own; constraining here only
+        # forces resharding (measured: gemma2-9b train 14.0 → 23.9 s coll)
+        return q, k, v
+    KV, G = cfg.n_kv_heads, cfg.n_heads // max(cfg.n_kv_heads, 1)
+    waste_kv = (-(-KV // ms) * ms) / KV if KV else 1e9
+    waste_g = (-(-G // ms) * ms) / G if G else 1e9
+    if min(waste_kv, waste_g) > 2.0:
+        return q, k, v  # padding waste would exceed the comm it saves
+    b = dist.moe_axes if dist.moe_axes else None
+    if waste_kv <= waste_g:
+        q_spec = P(b, None, "model", None, None)  # (B,S,KV,G,hd)
+        kv_spec = P(b, None, "model", None)  # (B,S,KV,hd)
+    else:
+        q_spec = P(b, None, None, "model", None)
+        kv_spec = P(b, None, None, None)  # k/v replicated across model
+    c = lambda x, s: jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, s)
+    )
+    return c(q, q_spec), c(k, kv_spec), c(v, kv_spec)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attn(cfg: ModelConfig, key, cross: bool = False) -> Dict:
+    """Attention parameter subtree. Weights stored fused:
+    wq (D, H·hd), wk/wv (D, KV·hd), wo (H·hd, D)."""
+    ks = jax.random.split(key, 6)
+    D = cfg.d_model
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pd = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": normal_init(ks[0], (D, H * hd), dtype=pd),
+        "wk": normal_init(ks[1], (D, KV * hd), dtype=pd),
+        "wv": normal_init(ks[2], (D, KV * hd), dtype=pd),
+        "wo": normal_init(ks[3], (H * hd, D), dtype=pd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype=pd)
+        p["k_norm"] = jnp.zeros((hd,), dtype=pd)
+    return p
+
+
+def init_attn_cache(
+    cfg: ModelConfig, kind: str, batch: int, cache_len: int, dtype=jnp.bfloat16
+) -> Dict:
+    """KV cache for one attention layer.  Local layers keep a ring buffer of
+    ``window`` slots (keys cached post-RoPE, so ring order is irrelevant —
+    softmax is permutation-invariant over the key set)."""
+    cap = cache_len
+    if kind == "local" and cfg.window:
+        cap = min(cfg.window, cache_len)
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, cap, KV, hd), dtype=dtype),
+        "v": jnp.zeros((batch, cap, KV, hd), dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# q-chunked attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _attend_chunk(q, k, v, mask, scale, cap):
+    """q (B, qc, KV, G, hd); k/v (B, Sk, KV, hd); mask (qc, Sk) or None."""
+    scores = jnp.einsum(
+        "bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    scores = softcap(scores, cap)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+
+
+def attn_train(
+    cfg: ModelConfig,
+    params: Dict,
+    x: jax.Array,
+    kind: str,
+    *,
+    positions: Optional[jax.Array] = None,
+    q_chunk: int = 1024,
+    causal: bool = True,
+    kv_source: Optional[jax.Array] = None,
+    return_kv: bool = False,
+    dist=None,
+) -> jax.Array | Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence attention (training / prefill).
+
+    ``kind``: "global" (causal full), "local" (causal windowed).
+    ``causal=False`` gives the whisper encoder (bidirectional).
+    ``kv_source``: cross-attention (keys/values from the encoder output).
+    """
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KV
+    dt = x.dtype
+
+    src = x if kv_source is None else kv_source
+    Sk = src.shape[1]
+    q = (x @ params["wq"].astype(dt)).reshape(B, S, KV, G, hd)
+    k = (src @ params["wk"].astype(dt)).reshape(B, Sk, KV, hd)
+    v = (src @ params["wv"].astype(dt)).reshape(B, Sk, KV, hd)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, params["k_norm"], cfg.rms_eps)
+
+    if kv_source is None:  # self-attention gets RoPE
+        pos = (
+            positions
+            if positions is not None
+            else jnp.arange(S, dtype=jnp.int32)[None, :]
+        )
+        base = _rope_base(cfg, kind)
+        q = apply_rope(q.reshape(B, S, KV * G, hd), pos, base).reshape(
+            B, S, KV, G, hd
+        )
+        k = apply_rope(k, pos, base)
+
+    q, k, v = _head_shard(cfg, dist, q, k, v)
+    scale = _scale(cfg)
+    cap = cfg.attn_logit_softcap
+    window = cfg.window if kind == "local" else None
+
+    qc = min(q_chunk, S)
+    pad = (-S) % qc
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    nq = (S + pad) // qc
+    qs = q.reshape(B, nq, qc, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    if window is not None and causal and kv_source is None and Sk > window + qc:
+        # local layers: slice keys to [start, start + W + qc) per q chunk —
+        # compute is O(S·W) instead of O(S²)
+        W = window
+        kwin = W + qc
+
+        def body(i, qi):
+            q0 = i * qc
+            start = jnp.maximum(0, q0 - W)
+            # clamp so the static-size slice stays in bounds
+            start = jnp.minimum(start, Sk - kwin)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, kwin, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, kwin, axis=1)
+            qpos = q0 + jnp.arange(qc)
+            kpos = start + jnp.arange(kwin)
+            m = (
+                (qpos[:, None] >= kpos[None, :])
+                & (qpos[:, None] - kpos[None, :] < W)
+            )
+            return _attend_chunk(qi, ks, vs, m, scale, cap)
+
+        # remat per chunk: backward replays one q-chunk at a time, so probs
+        # never materialize beyond (B, KV, G, qc, W+qc) — flash-style memory
+        out = jax.lax.map(
+            jax.checkpoint(lambda iq: body(iq[0], iq[1])),
+            (jnp.arange(nq), qs),
+        )
+    else:
+
+        def body(i, qi):
+            qpos = i * qc + jnp.arange(qc)
+            kpos = jnp.arange(Sk)
+            if causal and kv_source is None:
+                m = qpos[:, None] >= kpos[None, :]
+                if window is not None:
+                    m &= qpos[:, None] - kpos[None, :] < window
+            else:
+                m = None
+            return _attend_chunk(qi, k, v, m, scale, cap)
+
+        out = jax.lax.map(
+            jax.checkpoint(lambda iq: body(iq[0], iq[1])),
+            (jnp.arange(nq), qs),
+        )
+
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S + pad, H * hd)[:, :S]
+    out = out @ params["wo"].astype(dt)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against a cache)
+# ---------------------------------------------------------------------------
+
+
+def attn_decode(
+    cfg: ModelConfig,
+    params: Dict,
+    x: jax.Array,  # (B, 1, D)
+    kind: str,
+    cache: Dict,
+    pos: jax.Array,  # scalar int32 — number of tokens already in cache
+    *,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Dict]:
+    B, _, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KV
+    dt = x.dtype
+
+    q = (x @ params["wq"].astype(dt)).reshape(B, 1, KV, G, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.rms_eps)
+    vector_pos = hasattr(pos, "ndim") and pos.ndim == 1  # per-seq positions
+    if vector_pos:
+        posb = pos[:, None].astype(jnp.int32)
+    else:
+        posb = jnp.full((B, 1), pos, dtype=jnp.int32)
+    base = _rope_base(cfg, kind)
+    q = apply_rope(q.reshape(B, 1, KV * G, hd), posb, base).reshape(
+        B, 1, KV, G, hd
+    )
+    scale = _scale(cfg)
+    cap = cfg.attn_logit_softcap
+
+    if cross_kv is not None:
+        k, v = cross_kv  # (B, S_enc, KV, hd) — static, no cache update
+        scores = (
+            jnp.einsum("bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32)
+            * scale
+        )
+        scores = softcap(scores, cap)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = (
+            jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+            .reshape(B, 1, H * hd)
+            .astype(dt)
+        )
+        return out @ params["wo"].astype(dt), cache
+
+    k_new = (x @ params["wk"].astype(dt)).reshape(B, 1, KV, hd)
+    v_new = (x @ params["wv"].astype(dt)).reshape(B, 1, KV, hd)
+    if cfg.qk_norm:
+        k_new = rms_norm(k_new, params["k_norm"], cfg.rms_eps)
+    k_new = apply_rope(k_new, posb, base)
+
+    cap_len = cache["k"].shape[1]
+    is_ring = kind == "local" and cfg.window is not None
+    if vector_pos:
+        slot = pos % cap_len if is_ring else jnp.minimum(pos, cap_len - 1)
+        onehot = (jnp.arange(cap_len)[None, :] == slot[:, None])  # (B, S)
+        ck = jnp.where(
+            onehot[:, :, None, None],
+            k_new.astype(cache["k"].dtype),
+            cache["k"],
+        )
+        cv = jnp.where(
+            onehot[:, :, None, None],
+            v_new.astype(cache["v"].dtype),
+            cache["v"],
+        )
+        idx = jnp.arange(cap_len)[None, :]
+        valid = (idx <= slot[:, None]) | (pos[:, None] >= cap_len)  # (B, S)
+        vmask = valid[:, None, None, None, :]
+    else:
+        slot = pos % cap_len if is_ring else jnp.minimum(pos, cap_len - 1)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1
+        )
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1
+        )
+        # validity: ring buffers are fully valid once wrapped; otherwise ≤ pos
+        idx = jnp.arange(cap_len)
+        valid = (idx <= slot) | (pos >= cap_len)
+        vmask = valid[None, None, None, None, :]
+    scores = (
+        jnp.einsum(
+            "bqkgh,bskh->bkgqs", q, ck.astype(dt), preferred_element_type=jnp.float32
+        )
+        * scale
+    )
+    scores = softcap(scores, cap)
+    scores = jnp.where(vmask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, cv.astype(dt)).reshape(
+        B, 1, H * hd
+    )
+    out = out @ params["wo"].astype(dt)
+    return out, {"k": ck, "v": cv}
+
+
+def prefill_fill_cache(
+    cfg: ModelConfig,
+    kind: str,
+    k: jax.Array,
+    v: jax.Array,
+    cache_len: int,
+    dtype=jnp.bfloat16,
+) -> Dict:
+    """Build a cache from full-sequence K/V (post-RoPE) after prefill."""
+    B, S = k.shape[0], k.shape[1]
+    cap = cache_len
+    if kind == "local" and cfg.window:
+        cap = min(cfg.window, cache_len)
+    if S >= cap:
+        ks, vs = k[:, S - cap : S], v[:, S - cap : S]
+        # ring layout: element at position p lives in slot p % cap
+        slots = (jnp.arange(S - cap, S)) % cap if kind == "local" and cfg.window else jnp.arange(cap)
+        ck = jnp.zeros((B, cap) + k.shape[2:], dtype).at[:, slots].set(ks.astype(dtype))
+        cv = jnp.zeros((B, cap) + v.shape[2:], dtype).at[:, slots].set(vs.astype(dtype))
+    else:
+        ck = jnp.zeros((B, cap) + k.shape[2:], dtype).at[:, :S].set(k.astype(dtype))
+        cv = jnp.zeros((B, cap) + v.shape[2:], dtype).at[:, :S].set(v.astype(dtype))
+    return {"k": ck, "v": cv}

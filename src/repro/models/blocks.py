@@ -1,0 +1,179 @@
+"""Per-layer ("entry") assembly: norm → mixer (attn | mamba) → norm → ffn
+(dense MLP | MoE), with gemma-style optional post-norms.  Entries are the
+elements of ``cfg.layer_pattern``; a stack of ``n_units`` repetitions is
+scanned over in the model (stacked-parameter scan keeps HLO size and compile
+time flat in depth)."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .attention import attn_decode, attn_train, init_attn, prefill_fill_cache
+from .common import rms_norm
+from .mamba import init_mamba, mamba_decode, mamba_train
+from .mlp import init_mlp, mlp
+from .moe import DistCtx, init_moe, moe_apply
+
+__all__ = ["init_entry", "entry_train", "entry_prefill", "entry_decode"]
+
+
+def _has_ffn(cfg: ModelConfig, idx: int) -> Optional[str]:
+    """What follows the mixer at pattern position ``idx``:
+    'moe' | 'mlp' | None (pure-mamba archs fold the MLP into the mixer)."""
+    if cfg.is_moe_layer(idx):
+        return "moe"
+    if cfg.d_ff > 0:
+        return "mlp"
+    return None
+
+
+def init_entry(cfg: ModelConfig, kind: str, idx: int, key, cross: bool = False) -> Dict:
+    ks = jax.random.split(key, 4)
+    pd = jnp.dtype(cfg.param_dtype)
+    D = cfg.d_model
+    p: Dict = {"ln1": jnp.zeros((D,), dtype=pd)}
+    if kind == "mamba":
+        p["mamba"] = init_mamba(cfg, ks[0])
+    else:
+        p["attn"] = init_attn(cfg, ks[0])
+    if cfg.post_norms:
+        p["ln1_post"] = jnp.zeros((D,), dtype=pd)
+    if cross:  # whisper decoder: add a cross-attention sub-block
+        p["ln_x"] = jnp.zeros((D,), dtype=pd)
+        p["xattn"] = init_attn(cfg, ks[3], cross=True)
+    ffn = _has_ffn(cfg, idx)
+    if ffn:
+        p["ln2"] = jnp.zeros((D,), dtype=pd)
+        if cfg.post_norms:
+            p["ln2_post"] = jnp.zeros((D,), dtype=pd)
+        if ffn == "moe":
+            p["moe"] = init_moe(cfg, ks[1])
+        else:
+            p["mlp"] = init_mlp(cfg, ks[1])
+    return p
+
+
+def _ffn_apply(cfg, idx, p, x, dist=None):
+    ffn = _has_ffn(cfg, idx)
+    if ffn is None:
+        return x, 0.0
+    h = rms_norm(x, p["ln2"], cfg.rms_eps)
+    if ffn == "moe":
+        h, aux = moe_apply(cfg, p["moe"], h, dist)
+    else:
+        h, aux = mlp(cfg, p["mlp"], h), 0.0
+    if cfg.post_norms:
+        h = rms_norm(h, p["ln2_post"], cfg.rms_eps)
+    return x + h, aux
+
+
+def entry_train(
+    cfg: ModelConfig,
+    kind: str,
+    idx: int,
+    p: Dict,
+    x: jax.Array,
+    *,
+    causal: bool = True,
+    enc_out: Optional[jax.Array] = None,
+    q_chunk: int = 1024,
+    dist: Optional[DistCtx] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (x, aux_loss)."""
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    if kind == "mamba":
+        h = mamba_train(cfg, p["mamba"], h)
+    else:
+        h = attn_train(cfg, p["attn"], h, kind, causal=causal,
+                       q_chunk=q_chunk, dist=dist)
+    if cfg.post_norms:
+        h = rms_norm(h, p["ln1_post"], cfg.rms_eps)
+    x = x + h
+    if enc_out is not None:  # whisper decoder cross-attention
+        h = rms_norm(x, p["ln_x"], cfg.rms_eps)
+        h = attn_train(cfg, p["xattn"], h, "global", kv_source=enc_out,
+                       causal=False, q_chunk=q_chunk)
+        x = x + h
+    return _ffn_apply(cfg, idx, p, x, dist)
+
+
+def entry_prefill(
+    cfg: ModelConfig,
+    kind: str,
+    idx: int,
+    p: Dict,
+    x: jax.Array,
+    cache_len: int,
+    *,
+    enc_out: Optional[jax.Array] = None,
+    q_chunk: int = 1024,
+    cache_dtype=jnp.bfloat16,
+    dist: Optional[DistCtx] = None,
+) -> Tuple[jax.Array, Dict]:
+    """Forward + build this entry's decode cache."""
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    cache: Dict = {}
+    if kind == "mamba":
+        h, cache = mamba_train(cfg, p["mamba"], h, return_cache=True)
+    else:
+        h, (k, v) = attn_train(
+            cfg, p["attn"], h, kind, q_chunk=q_chunk, return_kv=True,
+            dist=dist,
+        )
+        cache = prefill_fill_cache(cfg, kind, k, v, cache_len, cache_dtype)
+    if cfg.post_norms:
+        h = rms_norm(h, p["ln1_post"], cfg.rms_eps)
+    x = x + h
+    if enc_out is not None:
+        h = rms_norm(x, p["ln_x"], cfg.rms_eps)
+        dt = x.dtype
+        KV, hd = cfg.n_kv_heads, cfg.head_dim
+        Senc = enc_out.shape[1]
+        kx = (enc_out @ p["xattn"]["wk"].astype(dt)).reshape(-1, Senc, KV, hd)
+        vx = (enc_out @ p["xattn"]["wv"].astype(dt)).reshape(-1, Senc, KV, hd)
+        h = attn_train(cfg, p["xattn"], h, "global", kv_source=enc_out,
+                       causal=False, q_chunk=q_chunk)
+        x = x + h
+        cache = {"self": cache, "cross_k": kx.astype(cache_dtype),
+                 "cross_v": vx.astype(cache_dtype)}
+    x, _ = _ffn_apply(cfg, idx, p, x, dist)
+    return x, cache
+
+
+def entry_decode(
+    cfg: ModelConfig,
+    kind: str,
+    idx: int,
+    p: Dict,
+    x: jax.Array,  # (B, 1, D)
+    cache: Dict,
+    pos: jax.Array,
+    dist: Optional[DistCtx] = None,
+) -> Tuple[jax.Array, Dict]:
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    is_encdec_entry = "cross_k" in cache
+    self_cache = cache["self"] if is_encdec_entry else cache
+    if kind == "mamba":
+        h, new_self = mamba_decode(cfg, p["mamba"], h, self_cache)
+    else:
+        h, new_self = attn_decode(cfg, p["attn"], h, kind, self_cache, pos)
+    if cfg.post_norms:
+        h = rms_norm(h, p["ln1_post"], cfg.rms_eps)
+    x = x + h
+    if is_encdec_entry:
+        h = rms_norm(x, p["ln_x"], cfg.rms_eps)
+        h, _ = attn_decode(
+            cfg, p["xattn"], h, "global", {}, pos,
+            cross_kv=(cache["cross_k"], cache["cross_v"]),
+        )
+        x = x + h
+        new_cache = dict(cache)
+        new_cache["self"] = new_self
+    else:
+        new_cache = new_self
+    x, _ = _ffn_apply(cfg, idx, p, x, dist)
+    return x, new_cache

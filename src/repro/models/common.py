@@ -1,0 +1,144 @@
+"""Shared model components: norms, RoPE, activations, losses, init."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rms_norm",
+    "apply_rope",
+    "rope_angles",
+    "softcap",
+    "activation",
+    "sinusoidal_positions",
+    "chunked_cross_entropy",
+    "normal_init",
+]
+
+
+def normal_init(key, shape, scale: float = 0.02, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in f32, gemma-style (1 + w) scaling with zeros-init weight."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Logit soft-capping: cap * tanh(x / cap) (gemma2)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return functools.partial(jax.nn.gelu, approximate=True)
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions: jax.Array, head_dim: int, base: float) -> jax.Array:
+    """(…, head_dim/2) angles for given integer positions."""
+    inv_freq = 1.0 / (
+        base ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+    return positions.astype(jnp.float32)[..., None] * inv_freq
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, base: float) -> jax.Array:
+    """x: (..., S, H, head_dim); positions: (..., S). Pairs split as
+    [first half, second half] (HF convention)."""
+    if base <= 0:  # architecture without RoPE (whisper/jamba)
+        return x
+    hd = x.shape[-1]
+    ang = rope_angles(positions, hd, base)  # (..., S, hd/2)
+    sin = jnp.sin(ang)[..., None, :]  # broadcast over heads
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> np.ndarray:
+    """Whisper-style sinusoidal embedding table (length, dim)."""
+    log_timescale = np.log(10_000.0) / (dim // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(dim // 2))
+    scaled = np.arange(length)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(scaled), np.cos(scaled)], axis=1).astype(
+        np.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def chunked_cross_entropy(
+    h: jax.Array,
+    w_vocab: jax.Array,
+    labels: jax.Array,
+    *,
+    chunk: int = 512,
+    final_softcap: Optional[float] = None,
+    label_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Mean NLL with the (B, S, V) logits never materialized for full S.
+
+    ``h`` (B, S, D); ``w_vocab`` (V, D) — possibly vocab-sharded; ``labels``
+    (B, S) int32.  Scans over sequence chunks: per step the logits tensor is
+    (B, chunk, V).  This is the memory trick that keeps 262k-vocab training
+    inside HBM (DESIGN §5).
+    """
+    B, S, D = h.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        lm = jnp.zeros((B, S + pad), dtype=jnp.float32).at[:, :S].set(
+            1.0 if label_mask is None else label_mask.astype(jnp.float32)
+        )
+    else:
+        lm = (
+            jnp.ones((B, S), dtype=jnp.float32)
+            if label_mask is None
+            else label_mask.astype(jnp.float32)
+        )
+    nc = (S + pad) // c
+    hs = h.reshape(B, nc, c, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nc, c).transpose(1, 0, 2)
+    ms = lm.reshape(B, nc, c).transpose(1, 0, 2)
+
+    @jax.checkpoint  # backward re-derives per-chunk logits: the (B, S, V)
+    # tensor never exists — neither forward nor as saved residuals
+    def body(carry, xs):
+        hc, lc, mc = xs
+        logits = jnp.einsum(
+            "bqd,vd->bqv", hc, w_vocab, preferred_element_type=jnp.float32
+        )
+        logits = softcap(logits, final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - ll) * mc
+        return (carry[0] + nll.sum(), carry[1] + mc.sum()), None
+
+    (total, denom), _ = jax.lax.scan(body, (0.0, 0.0), (hs, ls, ms))
+    return total / jnp.maximum(denom, 1.0)

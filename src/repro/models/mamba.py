@@ -1,0 +1,254 @@
+"""Mamba-2 SSD (state-space duality) block — TPU-native SSM.
+
+The selective scan is computed in its *dual* chunked-matmul form
+(arXiv 2405.21060 §6): within chunks of length Q the recurrence becomes
+dense attention-like matmuls (MXU work); across chunks a short
+``lax.scan`` passes the (H, P, N) state.  This is the hardware adaptation
+recorded in DESIGN §4 — Jamba's Mamba-1 layers also run through this block
+(d_state 16 preserved).
+
+Block layout (mamba_ssm convention):
+  in_proj: D → [z (d_inner), x (d_inner), B (G·N), C (G·N), dt (H)]
+  causal depthwise conv (width 4) over the [x, B, C] channels
+  SSD core, per-head RMS-norm gated by z, out_proj: d_inner → D.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import normal_init, rms_norm
+
+__all__ = ["init_mamba", "mamba_train", "mamba_decode", "init_mamba_cache"]
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    H = cfg.ssm_n_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_d_state
+    G = cfg.ssm_n_groups
+    conv_ch = d_in + 2 * G * N
+    return d_in, H, P, N, G, conv_ch
+
+
+def init_mamba(cfg: ModelConfig, key) -> Dict:
+    pd = jnp.dtype(cfg.param_dtype)
+    d_in, H, P, N, G, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_in + 2 * G * N + H
+    return {
+        "in_proj": normal_init(ks[0], (cfg.d_model, proj_out), dtype=pd),
+        "conv_w": normal_init(ks[1], (cfg.conv_width, conv_ch), dtype=pd),
+        "conv_b": jnp.zeros((conv_ch,), dtype=pd),
+        "A_log": jnp.zeros((H,), dtype=pd),  # A = -exp(A_log) ∈ (-∞, 0)
+        "D": jnp.ones((H,), dtype=pd),
+        "dt_bias": jnp.zeros((H,), dtype=pd),
+        "norm_w": jnp.zeros((d_in,), dtype=pd),
+        "out_proj": normal_init(ks[4], (d_in, cfg.d_model), dtype=pd),
+    }
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    d_in, H, P, N, G, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype=dtype),
+        "state": jnp.zeros((batch, H, P, N), dtype=dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    d_in, H, P, N, G, _ = _dims(cfg)
+    z, xBC, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * G * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along time. xBC (B, L, C); w (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC)
+    for i in range(W):  # width is 4 — unrolled taps, still one fused HLO
+        out = out + pad[:, i : i + xBC.shape[1]] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise cumulative sums: out[..., i, j] =
+    Σ_{k=j+1..i} dA[..., k] for i ≥ j, -inf above the diagonal."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(Q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, L, H, P)
+    dt: jax.Array,  # (B, L, H) — post-softplus
+    A: jax.Array,  # (H,) negative
+    Bm: jax.Array,  # (B, L, G, N)
+    Cm: jax.Array,  # (B, L, G, N)
+    chunk: int,
+    init_state: jax.Array | None = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B, L, H, P), final_state (B, H, P, N))."""
+    Bsz, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (L + pad) // Q
+
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(f32)
+    Bc = jnp.repeat(Bm.reshape(Bsz, nc, Q, G, N), rep, axis=3)  # (B,c,Q,H,N)
+    Cc = jnp.repeat(Cm.reshape(Bsz, nc, Q, G, N), rep, axis=3)
+
+    dA = dtc * A.astype(f32)  # (B, c, Q, H)
+    dA_cs = jnp.cumsum(dA, axis=2)  # within-chunk cumsum
+
+    # ---- intra-chunk (block-diagonal) term --------------------------------
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # (B, c, H, Q, Q)
+    CB = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc, preferred_element_type=f32)
+    xdt = xc.astype(f32) * dtc[..., None]  # (B,c,Q,H,P)
+    y_diag = jnp.einsum(
+        "bchqk,bchqk,bckhp->bcqhp",
+        CB, Lmat, xdt,
+        preferred_element_type=f32,
+    )
+    # note: einsum above multiplies CB ⊙ L then contracts k
+
+    # ---- chunk states -------------------------------------------------------
+    decay_tail = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (B,c,Q,H)
+    S_chunk = jnp.einsum(
+        "bcqhn,bcqh,bcqhp->bchpn", Bc, decay_tail, xdt,
+        preferred_element_type=f32,
+    )
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # (B, c, H)
+
+    # ---- inter-chunk recurrence (short scan over nc) -----------------------
+    def scan_fn(carry, xs):
+        S_c, decay_c = xs  # (B,H,P,N), (B,H)
+        new = S_c + decay_c[..., None, None] * carry
+        return new, carry  # emit the state *entering* this chunk
+
+    init = (
+        init_state.astype(f32)
+        if init_state is not None
+        else jnp.zeros((Bsz, H, P, N), f32)
+    )
+    final_state, S_in = jax.lax.scan(
+        scan_fn,
+        init,
+        (S_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    S_in = S_in.transpose(1, 0, 2, 3, 4)  # (B, c, H, P, N)
+
+    # ---- inter-chunk output term ---------------------------------------------
+    state_decay = jnp.exp(dA_cs)  # (B,c,Q,H)
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bcqh->bcqhp", Cc, S_in, state_decay,
+        preferred_element_type=f32,
+    )
+
+    y = (y_diag + y_off).reshape(Bsz, nc * Q, H, P)[:, :L]
+    return y, final_state
+
+
+def mamba_train(
+    cfg: ModelConfig,
+    params: Dict,
+    x: jax.Array,
+    *,
+    return_cache: bool = False,
+) -> jax.Array | Tuple[jax.Array, Dict]:
+    """Full-sequence SSD forward. x: (B, L, D)."""
+    Bsz, L, D = x.shape
+    d_in, H, P, N, G, conv_ch = _dims(cfg)
+    dt_ = x.dtype
+
+    proj = x @ params["in_proj"].astype(dt_)
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    xBC = _causal_conv(xBC, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_))
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(Bsz, L, H, P)
+    Bm = Bm.reshape(Bsz, L, G, N)
+    Cm = Cm.reshape(Bsz, L, G, N)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    y, last_state = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + xs.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bsz, L, d_in).astype(dt_)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.rms_eps)
+    out = y @ params["out_proj"].astype(dt_)
+    if return_cache:
+        # conv cache holds the *pre-conv* channel inputs of the last
+        # (width-1) steps, taken from the pre-conv projection:
+        proj_tail = proj[:, max(0, L - (cfg.conv_width - 1)) :]
+        _, xBC_tail, _ = _split_proj(cfg, proj_tail)
+        pad_t = cfg.conv_width - 1 - xBC_tail.shape[1]
+        if pad_t:
+            xBC_tail = jnp.pad(xBC_tail, ((0, 0), (pad_t, 0), (0, 0)))
+        cache = {
+            "conv": xBC_tail.astype(jnp.float32),
+            "state": last_state,
+        }
+        return out, cache
+    return out
+
+
+def mamba_decode(
+    cfg: ModelConfig, params: Dict, x: jax.Array, cache: Dict
+) -> Tuple[jax.Array, Dict]:
+    """Single-token recurrent step. x: (B, 1, D) — O(1) in context length."""
+    Bsz = x.shape[0]
+    d_in, H, P, N, G, conv_ch = _dims(cfg)
+    dt_ = x.dtype
+
+    proj = x[:, 0] @ params["in_proj"].astype(dt_)  # (B, proj_out)
+    z, xBC_new, dt_raw = _split_proj(cfg, proj)
+
+    # conv ring: window = [cache, new]
+    win = jnp.concatenate(
+        [cache["conv"], xBC_new[:, None].astype(cache["conv"].dtype)], axis=1
+    )  # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", win, params["conv_w"].astype(win.dtype))
+    xBC = jax.nn.silu(conv_out + params["conv_b"].astype(win.dtype))
+    new_conv = win[:, 1:]
+
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(Bsz, H, P).astype(jnp.float32)
+    rep = H // G
+    Bm = jnp.repeat(Bm.reshape(Bsz, G, N), rep, axis=1).astype(jnp.float32)
+    Cm = jnp.repeat(Cm.reshape(Bsz, G, N), rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B, H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)  # (B, H)
+
+    # S' = decay·S + dt·x ⊗ B ;  y = (S'·C) + D·x
+    state = cache["state"] * decay[..., None, None] + jnp.einsum(
+        "bhp,bhn,bh->bhpn", xs, Bm, dt
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, Cm)
+    y = y + xs * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bsz, d_in).astype(dt_)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.rms_eps)
+    out = (y @ params["out_proj"].astype(dt_))[:, None]
+    return out, {"conv": new_conv, "state": state}

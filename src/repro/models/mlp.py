@@ -1,0 +1,38 @@
+"""Dense MLP blocks: gated (llama/gemma-style) and plain (starcoder/whisper)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import activation, normal_init
+
+__all__ = ["init_mlp", "mlp"]
+
+
+def init_mlp(cfg: ModelConfig, key, d_ff: int | None = None) -> Dict:
+    d_ff = d_ff or cfg.d_ff
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": normal_init(ks[0], (cfg.d_model, d_ff), dtype=pd),
+        "w_down": normal_init(ks[1], (d_ff, cfg.d_model), dtype=pd),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = normal_init(ks[2], (cfg.d_model, d_ff), dtype=pd)
+    return p
+
+
+def mlp(cfg: ModelConfig, params: Dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    act = activation(cfg.act)
+    up = x @ params["w_up"].astype(dt)
+    if cfg.mlp_gated:
+        gate = act(x @ params["w_gate"].astype(dt))
+        h = gate * up
+    else:
+        h = act(up)
+    return h @ params["w_down"].astype(dt)

@@ -1,0 +1,346 @@
+"""Top-level models: decoder-only LM (dense / MoE / SSM / hybrid / VLM) and
+encoder–decoder (whisper), built from scanned stacks of pattern units.
+
+Public functional API (everything jit/pjit-able):
+  init_params(cfg, key)                  → params pytree
+  train_loss(cfg, params, batch)         → scalar loss
+  prefill(cfg, params, batch, cache_len) → (caches, last_logits)
+  decode_step(cfg, params, batch, caches, pos) → (logits, new_caches)
+  init_caches(cfg, batch, cache_len)     → zeroed caches (decode dry-run)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .attention import init_attn_cache
+from .blocks import entry_decode, entry_prefill, entry_train, init_entry
+from .common import chunked_cross_entropy, rms_norm, sinusoidal_positions, softcap
+from .mamba import init_mamba_cache
+from .moe import DistCtx
+
+__all__ = [
+    "init_params",
+    "train_loss",
+    "prefill",
+    "decode_step",
+    "init_caches",
+    "count_params",
+]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    pd = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.n_units + cfg.n_enc_layers + 4)
+    pattern = cfg.layer_pattern
+    cross = cfg.family == "encdec"
+
+    units = []
+    for u in range(cfg.n_units):
+        eks = jax.random.split(keys[u], len(pattern))
+        unit = {
+            f"e{i}": init_entry(cfg, kind, i, eks[i], cross=cross)
+            for i, kind in enumerate(pattern)
+        }
+        units.append(unit)
+
+    params: Dict = {
+        "embed": 0.02 * jax.random.normal(
+            keys[-1], (cfg.vocab_size, cfg.d_model)
+        ).astype(pd),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype=pd),
+        "units": _stack_trees(units),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = 0.02 * jax.random.normal(
+            keys[-2], (cfg.vocab_size, cfg.d_model)
+        ).astype(pd)
+
+    if cfg.family == "encdec":
+        enc_units = [
+            {"e0": init_entry(cfg, "global", 0, keys[cfg.n_units + u])}
+            for u in range(cfg.n_enc_layers)
+        ]
+        params["enc_units"] = _stack_trees(enc_units)
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), dtype=pd)
+    return params
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact parameter count via abstract init (no allocation)."""
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if active_only and "moe" in keys and keys[-1] in (
+            "w_up", "w_down", "w_gate"
+        ):
+            n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Shared forward plumbing
+# ---------------------------------------------------------------------------
+
+
+def _remat_wrap(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)  # "full": save only inputs
+
+
+def _sp_constrain(x, dist):
+    """Sequence-parallel activation constraint at unit boundaries."""
+    if dist is None or not dist.sp_axes:
+        return x
+    import numpy as _np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    size = int(_np.prod([dist.mesh.shape[a] for a in dist.sp_axes]))
+    if x.ndim != 3 or x.shape[1] % size != 0:
+        return x  # uneven seq (whisper's 1500 frames): leave unconstrained
+    spec = P(dist.moe_axes if dist.moe_axes else None, dist.sp_axes, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(dist.mesh, spec))
+
+
+def _scan_units(cfg: ModelConfig, units, x, entry_fn, dist=None):
+    """Scan over stacked pattern units. ``entry_fn(unit_params, x) -> (x, aux)``."""
+
+    def body(carry, unit_p):
+        h, aux = carry
+        h = _sp_constrain(h, dist)
+        h, a = entry_fn(unit_p, h)
+        return (h, aux + a), None
+
+    body = _remat_wrap(cfg, body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), units)
+    return x, aux
+
+
+def _embed_tokens(cfg: ModelConfig, params, tokens):
+    h = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    if cfg.scale_embed:
+        h = h * jnp.sqrt(float(cfg.d_model)).astype(h.dtype)
+    return h
+
+
+def _vocab_weight(cfg: ModelConfig, params):
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+def _encode(cfg: ModelConfig, params, frames):
+    """Whisper encoder over stub frame embeddings (B, S_enc, D)."""
+    pos = sinusoidal_positions(frames.shape[1], cfg.d_model)
+    h = frames.astype(jnp.dtype(cfg.dtype)) + jnp.asarray(
+        pos, dtype=cfg.dtype
+    )[None]
+    h, _ = _scan_units(
+        cfg, params["enc_units"], h,
+        lambda up, hh: entry_train(cfg, "global", 0, up["e0"], hh, causal=False),
+    )
+    return rms_norm(h, params["enc_norm"], cfg.rms_eps)
+
+
+def _decoder_inputs(cfg: ModelConfig, params, batch) -> Tuple[jax.Array, int]:
+    """Token (+modality) embeddings.  Returns (embeds, n_prefix) where
+    n_prefix = positions that carry no next-token loss (VLM patches)."""
+    h = _embed_tokens(cfg, params, batch["tokens"])
+    n_prefix = 0
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        vis = batch["vision_embeds"].astype(h.dtype)
+        h = jnp.concatenate([vis, h], axis=1)
+        n_prefix = vis.shape[1]
+    if cfg.family == "encdec":
+        pos = sinusoidal_positions(h.shape[1], cfg.d_model)
+        h = h + jnp.asarray(pos, dtype=h.dtype)[None]
+    return h, n_prefix
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def train_loss(
+    cfg: ModelConfig, params: Dict, batch: Dict, *, q_chunk: int = 1024,
+    dist: Optional[DistCtx] = None,
+) -> jax.Array:
+    """Next-token cross-entropy (+ MoE aux).  ``batch``:
+      tokens (B, S) int32; labels (B, S) int32
+      [vlm]  vision_embeds (B, P, D)
+      [encdec] frames (B, S_enc, D)
+    """
+    h, n_prefix = _decoder_inputs(cfg, params, batch)
+    enc_out = (
+        _encode(cfg, params, batch["frames"]) if cfg.family == "encdec" else None
+    )
+    pattern = cfg.layer_pattern
+
+    def entry_fn(unit_p, hh):
+        aux = jnp.float32(0.0)
+        for i, kind in enumerate(pattern):
+            hh, a = entry_train(
+                cfg, kind, i, unit_p[f"e{i}"], hh,
+                enc_out=enc_out, q_chunk=q_chunk, dist=dist,
+            )
+            aux = aux + a
+        return hh, aux
+
+    h, aux = _scan_units(cfg, params["units"], h, entry_fn, dist=dist)
+    h = rms_norm(h, params["final_norm"], cfg.rms_eps)
+    if n_prefix:
+        h = h[:, n_prefix:]
+    loss = chunked_cross_entropy(
+        h,
+        _vocab_weight(cfg, params).astype(h.dtype),
+        batch["labels"],
+        chunk=cfg.loss_chunk,
+        final_softcap=cfg.final_logit_softcap,
+    )
+    return loss + cfg.router_aux_coef * aux
+
+
+# ---------------------------------------------------------------------------
+# Serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_caches(
+    cfg: ModelConfig, batch: int, cache_len: int, cache_dtype=jnp.bfloat16
+) -> Dict:
+    """Zeroed caches with the exact decode-time structure (stacked units)."""
+    pattern = cfg.layer_pattern
+    cross = cfg.family == "encdec"
+    unit_caches = []
+    for u in range(cfg.n_units):
+        entry = {}
+        for i, kind in enumerate(pattern):
+            if kind == "mamba":
+                c = init_mamba_cache(cfg, batch)
+            else:
+                c = init_attn_cache(cfg, kind, batch, cache_len, cache_dtype)
+            if cross:
+                c = {
+                    "self": c,
+                    "cross_k": jnp.zeros(
+                        (batch, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim),
+                        cache_dtype,
+                    ),
+                    "cross_v": jnp.zeros(
+                        (batch, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim),
+                        cache_dtype,
+                    ),
+                }
+            entry[f"e{i}"] = c
+        unit_caches.append(entry)
+    return _stack_trees(unit_caches)
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Dict,
+    batch: Dict,
+    cache_len: int,
+    *,
+    q_chunk: int = 1024,
+    cache_dtype=jnp.bfloat16,
+    dist: Optional[DistCtx] = None,
+    last_index: Optional[jax.Array] = None,
+) -> Tuple[Dict, jax.Array]:
+    """Run the full prompt, build caches, return logits at the last position."""
+    h, _ = _decoder_inputs(cfg, params, batch)
+    enc_out = (
+        _encode(cfg, params, batch["frames"]) if cfg.family == "encdec" else None
+    )
+    pattern = cfg.layer_pattern
+
+    def body(hh, unit_p):
+        caches = {}
+        for i, kind in enumerate(pattern):
+            hh, c = entry_prefill(
+                cfg, kind, i, unit_p[f"e{i}"], hh, cache_len,
+                enc_out=enc_out, q_chunk=q_chunk, cache_dtype=cache_dtype,
+                dist=dist,
+            )
+            caches[f"e{i}"] = c
+        return hh, caches
+
+    h, caches = jax.lax.scan(body, h, params["units"])
+    h = rms_norm(h, params["final_norm"], cfg.rms_eps)
+    if last_index is None:
+        last = h[:, -1]
+    else:  # ragged prompts (batched serving): per-seq last real position
+        last = h[jnp.arange(h.shape[0]), last_index]
+    logits = jnp.einsum(
+        "bd,vd->bv", last, _vocab_weight(cfg, params).astype(last.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    logits = softcap(logits, cfg.final_logit_softcap)
+    return caches, logits
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Dict,
+    tokens: jax.Array,  # (B, 1)
+    caches: Dict,
+    pos: jax.Array,  # scalar int32: tokens already in cache
+    *,
+    dist: Optional[DistCtx] = None,
+) -> Tuple[jax.Array, Dict]:
+    h = _embed_tokens(cfg, params, tokens)
+    if cfg.family == "encdec":
+        # sinusoidal position for the current (dynamic) step; handles scalar
+        # or per-sequence vector positions
+        half = cfg.d_model // 2
+        inv = jnp.exp(
+            -jnp.log(10_000.0) / (half - 1) * jnp.arange(half, dtype=jnp.float32)
+        )
+        posf = jnp.atleast_1d(jnp.asarray(pos, jnp.float32))  # (1,) or (B,)
+        ang = posf[:, None] * inv[None, :]
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        h = h + pe[:, None, :].astype(h.dtype)
+    pattern = cfg.layer_pattern
+
+    def body(hh, xs):
+        unit_p, unit_c = xs
+        new_c = {}
+        for i, kind in enumerate(pattern):
+            hh, c = entry_decode(
+                cfg, kind, i, unit_p[f"e{i}"], hh, unit_c[f"e{i}"], pos,
+                dist=dist,
+            )
+            new_c[f"e{i}"] = c
+        return hh, new_c
+
+    h, new_caches = jax.lax.scan(body, h, (params["units"], caches))
+    h = rms_norm(h, params["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum(
+        "bqd,vd->bqv", h, _vocab_weight(cfg, params).astype(h.dtype),
+        preferred_element_type=jnp.float32,
+    )[:, 0]
+    logits = softcap(logits, cfg.final_logit_softcap)
+    return logits, new_caches

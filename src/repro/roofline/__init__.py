@@ -1,0 +1,4 @@
+from . import hw
+from .analyze import analyze_compiled, model_flops, parse_collectives
+
+__all__ = ["hw", "analyze_compiled", "model_flops", "parse_collectives"]

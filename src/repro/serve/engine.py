@@ -1,0 +1,126 @@
+"""Batched serving engine: wave batching with ragged prompts.
+
+Requests are grouped into fixed-size waves; within a wave prompts are
+right-padded, prefilled once (per-sequence last-position logits), then
+decoded with **per-sequence positions** (vector ``pos``) so each stream
+advances from its own true length.  Finished sequences (stop token or
+length) are masked out; the wave ends when all finish.
+
+Greedy or temperature sampling; deterministic per seed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.telemetry import EventCollector
+from repro.models import decode_step, prefill
+
+__all__ = ["ServeEngine", "GenerationResult"]
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    prompt: List[int]
+    tokens: List[int]
+    finished: str  # "stop" | "length"
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_batch: int = 8,
+        max_cache: int = 512,
+        q_chunk: int = 64,
+        temperature: float = 0.0,
+        seed: int = 0,
+        collector: Optional[EventCollector] = None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_cache = max_cache
+        self.q_chunk = q_chunk
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.collector = collector or EventCollector("server")
+
+        self._prefill = jax.jit(
+            lambda p, b, li: prefill(
+                cfg, p, b, self.max_cache, q_chunk=q_chunk, last_index=li
+            )
+        )
+        self._decode = jax.jit(
+            lambda p, t, c, pos: decode_step(cfg, p, t, c, pos)
+        )
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / self.temperature, axis=-1)
+
+    def generate(
+        self,
+        prompts: List[List[int]],
+        max_new_tokens: int = 32,
+        stop_token: Optional[int] = None,
+    ) -> List[GenerationResult]:
+        results: List[Optional[GenerationResult]] = [None] * len(prompts)
+        order = sorted(range(len(prompts)), key=lambda i: len(prompts[i]))
+        for w0 in range(0, len(order), self.max_batch):
+            wave = order[w0 : w0 + self.max_batch]
+            self._run_wave(wave, prompts, results, max_new_tokens, stop_token)
+        return [r for r in results if r is not None]
+
+    def _run_wave(self, wave, prompts, results, max_new, stop_token):
+        B = len(wave)
+        lens = np.asarray([len(prompts[i]) for i in wave], dtype=np.int32)
+        L = int(lens.max())
+        toks = np.zeros((B, L), dtype=np.int32)
+        for r, i in enumerate(wave):
+            toks[r, : lens[r]] = prompts[i]
+        case = f"wave-{wave[0]}"
+        with self.collector.span(case, "prefill"):
+            caches, logits = self._prefill(
+                self.params,
+                {"tokens": jnp.asarray(toks)},
+                jnp.asarray(lens - 1),
+            )
+        pos = jnp.asarray(lens)  # next write slot per sequence
+        out = [[] for _ in range(B)]
+        done = np.zeros(B, dtype=bool)
+        finished = ["length"] * B
+        for t in range(max_new):
+            nxt = self._sample(logits)
+            nxt_np = np.asarray(nxt)
+            for r in range(B):
+                if not done[r]:
+                    tok = int(nxt_np[r])
+                    if stop_token is not None and tok == stop_token:
+                        done[r] = True
+                        finished[r] = "stop"
+                    else:
+                        out[r].append(tok)
+            if done.all() or t == max_new - 1:
+                break
+            with self.collector.span(case, "decode"):
+                logits, caches = self._decode(
+                    self.params, nxt[:, None].astype(jnp.int32), caches, pos
+                )
+            pos = pos + 1
+            if int(pos.max()) >= self.max_cache:
+                break
+        for r, i in enumerate(wave):
+            results[i] = GenerationResult(
+                prompt=list(prompts[i]), tokens=out[r], finished=finished[r]
+            )

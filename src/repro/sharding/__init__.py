@@ -1,0 +1,12 @@
+from .spec import (
+    ShardingRules,
+    batch_shardings,
+    cache_shardings,
+    make_rules,
+    param_shardings,
+)
+
+__all__ = [
+    "ShardingRules", "batch_shardings", "cache_shardings", "make_rules",
+    "param_shardings",
+]

@@ -1,0 +1,215 @@
+"""Logical-axis sharding rules → NamedSharding.
+
+Weights carry *logical axes*; a :class:`ShardingRules` maps logical names to
+mesh axes.  Key decisions (DESIGN §5):
+
+* Fused projection dims (`qkv` = heads·head_dim, `ffn`, `vocab`, experts'
+  ffn) shard over ``model`` — divisible by 16 for every assigned arch
+  (head counts alone are not, e.g. starcoder2's 24 or llava's 56).
+* Every rule is **divisibility-guarded**: jit in_shardings demand exact
+  divisibility, so a dim that doesn't divide (whisper's 51865 vocab,
+  kv_heads=8 on a 16-way model axis) falls back to the next-best axis or
+  replication, never to an invalid spec.
+* ``batch`` shards over (``pod``, ``data``) for train/prefill/decode.
+* ``long_500k`` (batch=1) swaps the batch rule for **sequence sharding** of
+  the KV cache (context parallelism for single-stream decode).
+* KV caches shard kv_heads over ``model`` when divisible (gemma2-27b,
+  olmoe), else the cache *sequence* dim over ``model`` (llava, gemma3 …) —
+  this is what keeps 32k×128 caches inside 16 GiB/chip.
+* Stacked-unit leading dims are never sharded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+__all__ = [
+    "ShardingRules", "make_rules", "param_shardings", "batch_shardings",
+    "cache_shardings",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    batch_axes: Tuple[str, ...]  # mesh axes carrying the batch
+    model_axis: Optional[str]  # mesh axis carrying tensor parallelism
+    seq_axes: Tuple[str, ...] = ()  # cache sequence sharding (long decode)
+    # ZeRO/FSDP: params + grads + optimizer state additionally sharded over
+    # these axes for training (weights are all-gathered per scanned unit,
+    # grads reduce-scattered — the standard GSPMD FSDP pattern).  Without it
+    # a 47B model needs ~47 GiB/chip of f32 param+Adam state at TP=16.
+    fsdp_axes: Tuple[str, ...] = ()
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis] if self.model_axis else 1
+
+    def axes_size(self, axes) -> int:
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def nd(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # -- divisibility-guarded axis pickers ---------------------------------
+    def model_if(self, dim: int):
+        m = self.model_axis
+        return m if (m and dim % self.mesh.shape[m] == 0) else None
+
+    def batch_if(self, dim: int):
+        if self.batch_axes and dim % self.axes_size(self.batch_axes) == 0:
+            return self.batch_axes
+        return None
+
+    def fsdp_if(self, dim: int):
+        if self.fsdp_axes and dim % self.axes_size(self.fsdp_axes) == 0:
+            return self.fsdp_axes
+        return None
+
+
+def make_rules(mesh: Mesh, shape: ShapeConfig) -> ShardingRules:
+    axes = list(mesh.axis_names)
+    model_axis = "model" if "model" in axes else None
+    data_axes = tuple(a for a in axes if a in ("pod", "data"))
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
+    if shape.kind == "decode" and shape.global_batch < dsize:
+        # long-context single-stream decode: batch unshardable → shard cache
+        # sequence over the data axes instead (context parallelism)
+        return ShardingRules(
+            mesh, batch_axes=(), model_axis=model_axis, seq_axes=data_axes
+        )
+    return ShardingRules(
+        mesh, batch_axes=data_axes, model_axis=model_axis,
+        fsdp_axes=data_axes if shape.kind == "train" else (),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings (path-pattern → PartitionSpec)
+# ---------------------------------------------------------------------------
+
+
+def _param_spec(path_keys, shape, r: ShardingRules, moe_ep: bool = False) -> P:
+    name = path_keys[-1]
+    inside_unit = "units" in path_keys or "enc_units" in path_keys
+    u = (None,) if inside_unit else ()  # stacked-unit leading dim
+    d = shape[len(u):]  # logical dims past the unit stack
+
+    def mi(i):  # model axis iff divisible
+        return r.model_if(d[i])
+
+    def fi(i):  # fsdp axes iff training + divisible
+        return r.fsdp_if(d[i])
+
+    if name in ("embed", "lm_head"):
+        v = r.model_if(d[0])
+        return P(v, fi(1) if v else r.model_if(d[1]))
+    if name in ("wq", "wk", "wv"):  # (D, fused)
+        return P(*u, fi(0), mi(1))
+    if name == "wo":  # (fused, D)
+        return P(*u, mi(0), fi(1))
+    if name in ("w_up", "w_gate"):
+        if "moe" in path_keys:  # (E, D, F)
+            if moe_ep and r.model_if(d[0]):
+                return P(*u, "model", fi(1), None)  # expert parallel
+            return P(*u, None, fi(1), mi(2))
+        return P(*u, fi(0), mi(1))  # (D, F)
+    if name == "w_down":
+        if "moe" in path_keys:  # (E, F, D)
+            if moe_ep and r.model_if(d[0]):
+                return P(*u, "model", None, fi(2))
+            return P(*u, None, mi(1), fi(2))
+        return P(*u, mi(0), fi(1))  # (F, D)
+    if name == "router":  # (D, E) — small, replicated
+        return P(*u, None, None)
+    if name == "in_proj":  # mamba (D, proj_out)
+        return P(*u, fi(0), mi(1))
+    if name == "out_proj":  # mamba (d_inner, D)
+        return P(*u, mi(0), fi(1))
+    if name == "conv_w":  # (W, C)
+        return P(*u, None, mi(1))
+    if name in ("conv_b", "norm_w", "A_log", "D", "dt_bias"):
+        return P(*u, mi(0))
+    # norms and anything else: replicated beyond the unit stack
+    return P(*u, *([None] * len(d)))
+
+
+def param_shardings(r: ShardingRules, params_shape, cfg=None) -> Dict:
+    """Tree of NamedShardings matching a params (or abstract params) tree."""
+    moe_ep = bool(cfg is not None and getattr(cfg, "moe_expert_parallel", False))
+
+    def one(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        spec = _param_spec(keys, leaf.shape, r, moe_ep=moe_ep)
+        assert len(spec) == len(leaf.shape), (keys, spec, leaf.shape)
+        return r.nd(spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(r: ShardingRules, batch_shape) -> Dict:
+    """tokens/labels (B, S); vision_embeds/frames (B, S', D)."""
+
+    def one(path, leaf):
+        spec = [r.batch_if(leaf.shape[0])] + [None] * (len(leaf.shape) - 1)
+        return r.nd(P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def cache_shardings(r: ShardingRules, cache_shape) -> Dict:
+    """Attention caches (U, B, S, KV, hd); mamba conv (U, B, W, C) and
+    state (U, B, H, P, N); cross k/v (U, B, S_enc, KV, hd)."""
+
+    def attn_spec(shape) -> P:
+        _, B, S, KV, _ = shape
+        b = r.batch_if(B)
+        if r.seq_axes:  # long-context mode: context parallelism
+            seq = (
+                r.seq_axes
+                if S % r.axes_size(r.seq_axes) == 0
+                else None
+            )
+            kv = r.model_if(KV)
+            if kv is None and seq is not None:
+                # fold model into the seq shard when kv can't split
+                both = tuple(r.seq_axes) + (r.model_axis,)
+                if r.model_axis and S % r.axes_size(both) == 0:
+                    seq = both
+            return P(None, b, seq, kv if kv else None, None)
+        kv = r.model_if(KV)
+        if kv is not None:
+            return P(None, b, None, kv, None)
+        m = r.model_if(S)  # fall back: shard the cache sequence over model
+        return P(None, b, m, None, None)
+
+    def one(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        name = keys[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v", "cross_k", "cross_v") and nd == 5:
+            return r.nd(attn_spec(leaf.shape))
+        if name == "conv" and nd == 4:  # (U, B, W, C)
+            return r.nd(P(None, r.batch_if(leaf.shape[1]), None,
+                          r.model_if(leaf.shape[3])))
+        if name == "state" and nd == 5:  # (U, B, H, P, N)
+            return r.nd(P(None, r.batch_if(leaf.shape[1]),
+                          r.model_if(leaf.shape[2]), None, None))
+        return r.nd(P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

@@ -1,0 +1,81 @@
+"""Hand-rolled optimizer stack (optax is not available offline).
+
+AdamW with decoupled weight decay, global-norm clipping, and
+linear-warmup + cosine-decay schedule.  Pure pytree transforms; optimizer
+state shards exactly like the parameters (same tree structure)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainHParams
+
+__all__ = ["OptState", "init_opt_state", "adamw_update", "lr_schedule",
+           "global_norm"]
+
+
+class OptState(NamedTuple):
+    step: jax.Array  # scalar int32
+    mu: Dict  # first moment (params tree)
+    nu: Dict  # second moment (params tree)
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=zeros,
+        nu=jax.tree.map(jnp.copy, zeros),
+    )
+
+
+def lr_schedule(hp: TrainHParams, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = hp.learning_rate * s / max(hp.warmup_steps, 1)
+    prog = jnp.clip(
+        (s - hp.warmup_steps) / max(hp.total_steps - hp.warmup_steps, 1), 0, 1
+    )
+    cos = hp.learning_rate * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < hp.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(
+    hp: TrainHParams, params, grads, state: OptState
+) -> Tuple[Dict, OptState, Dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, hp.grad_clip / (gnorm + 1e-9))
+    lr = lr_schedule(hp, step)
+    b1, b2 = hp.beta1, hp.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + hp.eps)
+        if p.ndim >= 2:  # decay matrices only (standard practice)
+            delta = delta + hp.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, OptState(step, new_mu, new_nu), metrics

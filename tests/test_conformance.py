@@ -1,0 +1,75 @@
+"""Token-replay conformance on discovered models."""
+
+import numpy as np
+
+from repro.core import (
+    EventRepository,
+    dfg_from_repository,
+    discover_dependency_graph,
+)
+from repro.core.conformance import replay_fitness
+from repro.data import ProcessSpec, generate_repository
+
+
+def _discover(repo, **kw):
+    psi = dfg_from_repository(repo)
+    starts, ends = repo.trace_boundaries()
+    return discover_dependency_graph(
+        psi, repo.activity_names, starts, ends,
+        min_count=kw.get("min_count", 1),
+        min_dependency=kw.get("min_dependency", -1.0),
+    )
+
+
+def test_self_replay_is_perfect():
+    """A model discovered from the log with no filtering replays the log
+    with fitness 1."""
+    repo = EventRepository.from_traces(
+        [["a", "b", "c"], ["a", "c"], ["a", "b", "b", "c"]]
+    )
+    model = _discover(repo)
+    res = replay_fitness(repo, model)
+    assert res.fitness == 1.0
+    assert res.perfectly_fitting == repo.num_traces
+    assert res.deviating_edges == {}
+
+
+def test_unseen_behaviour_detected():
+    repo_train = EventRepository.from_traces([["a", "b", "c"]] * 10)
+    model = _discover(repo_train)
+    repo_test = EventRepository.from_traces(
+        [["a", "b", "c"], ["a", "c", "b"]],  # second trace deviates
+        activity_vocab=repo_train.activity_names,
+    )
+    res = replay_fitness(repo_test, model)
+    assert res.trace_fitness[0] == 1.0
+    assert res.trace_fitness[1] < 1.0
+    assert ("a", "c") in res.deviating_edges or ("c", "b") in res.deviating_edges
+
+
+def test_filtered_model_partial_fitness():
+    """Filtering rare edges out of the model lowers replay fitness by
+    exactly the traces using them."""
+    traces = [["a", "b", "d"]] * 90 + [["a", "c", "d"]] * 10
+    repo = EventRepository.from_traces(traces)
+    model = _discover(repo, min_count=50)  # drops the a→c→d path
+    res = replay_fitness(repo, model)
+    assert res.perfectly_fitting == 90
+    assert 0.5 < res.fitness < 1.0
+    assert res.deviating_edges.get(("a", "c")) == 10
+
+
+def test_replay_scales_vectorized():
+    repo = generate_repository(2000, ProcessSpec(num_activities=15, seed=8))
+    model = _discover(repo)
+    res = replay_fitness(repo, model)
+    assert res.fitness == 1.0  # unfiltered self-replay
+    s = res.summary()
+    assert s["total_traces"] == 2000
+
+
+def test_empty_repo_fitness():
+    repo = EventRepository.from_traces([])
+    model = _discover(generate_repository(5, ProcessSpec(num_activities=3, seed=1)))
+    res = replay_fitness(repo, model)
+    assert res.fitness == 1.0

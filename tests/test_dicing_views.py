@@ -1,0 +1,142 @@
+"""Dicing (Experiment 2 semantics) and access-control views (privacy)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AccessPolicy,
+    ActivityView,
+    AnalystSession,
+    EventRepository,
+    HIDDEN,
+    dfg_from_repository,
+    dice_repository,
+    pair_mask_for_window,
+)
+from repro.core.views import AccessDenied
+from repro.data import ProcessSpec, generate_repository
+
+
+def test_window_mask_paper_semantics():
+    repo = EventRepository.from_event_table(
+        ["c", "c", "c", "c"], ["a", "b", "c", "d"], [0.0, 1.0, 2.0, 3.0]
+    )
+    # window [1, 3): only events b (t=1) and c (t=2) inside
+    psi = dfg_from_repository(repo, time_window=(1.0, 3.0))
+    names = repo.activity_names
+    assert psi.sum() == 1
+    assert psi[names.index("b"), names.index("c")] == 1
+
+
+def test_paper_vs_pm4py_semantics_agree_for_contiguous_windows():
+    """For time-sorted traces, a contiguous window keeps a contiguous
+    subsequence of every trace → re-linking adds nothing."""
+    repo = generate_repository(300, ProcessSpec(num_activities=12, seed=5))
+    t0 = float(np.quantile(repo.event_time, 0.2))
+    t1 = float(np.quantile(repo.event_time, 0.6))
+    paper = dfg_from_repository(repo, time_window=(t0, t1))
+    diced = dice_repository(repo, time_window=(t0, t1))
+    pm4py_style = dfg_from_repository(diced)
+    np.testing.assert_array_equal(paper, pm4py_style)
+
+
+def test_dice_repository_stays_sound():
+    from repro.core import check_columnar
+
+    repo = generate_repository(100, ProcessSpec(num_activities=8, seed=2))
+    t0 = float(np.quantile(repo.event_time, 0.3))
+    t1 = float(np.quantile(repo.event_time, 0.8))
+    diced = dice_repository(repo, time_window=(t0, t1))
+    assert check_columnar(diced).ok
+    assert diced.num_events <= repo.num_events
+
+
+def test_empty_window_gives_zero_dfg():
+    repo = generate_repository(50, ProcessSpec(num_activities=6, seed=1))
+    psi = dfg_from_repository(repo, time_window=(-10.0, -5.0))
+    assert psi.sum() == 0
+
+
+def test_activity_dice():
+    repo = EventRepository.from_traces([["a", "b", "c", "a"]])
+    diced = dice_repository(repo, activities=["a", "c"])
+    # re-linking semantics: a->c (b removed), c->a
+    psi = dfg_from_repository(diced)
+    names = diced.activity_names
+    assert psi[names.index("a"), names.index("c")] == 1
+    assert psi[names.index("c"), names.index("a")] == 1
+
+
+# -- views / privacy ---------------------------------------------------------
+
+
+def test_activity_view_grouping_preserves_mass():
+    """The postal-code example: grouped DFG sums equal ungrouped sums
+    (restricted to visible groups)."""
+    repo = EventRepository.from_traces(
+        [["reg_a", "reg_b", "pay_x"], ["reg_a", "pay_y", "pay_x"]]
+    )
+    view = ActivityView(
+        mapping={
+            "reg_a": "register", "reg_b": "register",
+            "pay_x": "payment", "pay_y": "payment",
+        }
+    )
+    psi = dfg_from_repository(repo)
+    grouped = view.apply_to_dfg(psi, repo.activity_names)
+    assert grouped.shape == (2, 2)
+    assert grouped.sum() == psi.sum()
+
+
+def test_hidden_activities_are_removed():
+    repo = EventRepository.from_traces([["a", "secret", "b"]])
+    view = ActivityView(mapping={"a": "a", "b": "b"})  # secret -> HIDDEN
+    psi = dfg_from_repository(repo, view=view)
+    assert psi.shape == (2, 2)
+    # flows through the hidden node are not exposed
+    assert psi.sum() == 0
+
+
+def test_analyst_session_aggregate_only():
+    repo = generate_repository(50, ProcessSpec(num_activities=6, seed=9))
+    sess = AnalystSession(repo, AccessPolicy(aggregate_only=True))
+    psi, names = sess.dfg()
+    assert psi.shape == (6, 6)
+    with pytest.raises(AccessDenied):
+        sess.events()
+    # raw repo must not be reachable as a public attribute
+    assert not hasattr(sess, "repo")
+    assert not any(
+        isinstance(getattr(sess, n, None), type(repo))
+        for n in dir(sess)
+        if not n.startswith("_")
+    )
+
+
+def test_analyst_session_policy_blocks_dicing():
+    repo = generate_repository(20, ProcessSpec(num_activities=5, seed=4))
+    sess = AnalystSession(
+        repo, AccessPolicy(aggregate_only=True, time_windows_allowed=False)
+    )
+    with pytest.raises(AccessDenied):
+        sess.dfg(time_window=(0.0, 1.0))
+
+
+def test_k_anonymity_floor():
+    repo = EventRepository.from_traces([["a", "b"]] * 3 + [["a", "c"]])
+    sess = AnalystSession(repo, AccessPolicy(min_group_count=2))
+    psi, names = sess.dfg()
+    assert psi[names.index("a"), names.index("c")] == 0  # suppressed (count 1)
+    assert psi[names.index("a"), names.index("b")] == 3
+
+
+def test_view_applied_in_session():
+    repo = EventRepository.from_traces([["a1", "a2"], ["a1", "a3"]])
+    view = ActivityView(mapping={"a1": "g1", "a2": "g2", "a3": "g2"})
+    sess = AnalystSession(repo, AccessPolicy(view=view))
+    psi, names = sess.dfg()
+    assert names == ["g1", "g2"]
+    assert psi[0, 1] == 2
+    hist, hnames = sess.activity_histogram()
+    assert hnames == ["g1", "g2"]
+    assert hist.tolist() == [2, 2]

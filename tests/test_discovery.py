@@ -1,0 +1,118 @@
+"""DFG-based discovery (Fig. 1 step 3): filtering, dependency graphs,
+footprints, conformance, and mining-of-telemetry."""
+
+import numpy as np
+
+from repro.core import (
+    EventCollector,
+    EventRepository,
+    dependency_matrix,
+    dfg_from_repository,
+    discover_dependency_graph,
+    filter_dfg,
+    footprint,
+    footprint_conformance,
+    to_dot,
+)
+
+
+def _simple_repo():
+    # a -> b -> d  and  a -> c -> d, 10 traces each
+    return EventRepository.from_traces(
+        [["a", "b", "d"]] * 10 + [["a", "c", "d"]] * 10
+    )
+
+
+def test_filter_dfg_thresholds_noise():
+    repo = EventRepository.from_traces(
+        [["a", "b"]] * 9 + [["a", "c"]]  # a->c is noise
+    )
+    psi = dfg_from_repository(repo)
+    filtered = filter_dfg(psi, min_count=2)
+    names = repo.activity_names
+    assert filtered[names.index("a"), names.index("c")] == 0
+    assert filtered[names.index("a"), names.index("b")] == 9
+
+
+def test_dependency_matrix_properties():
+    psi = dfg_from_repository(_simple_repo())
+    dep = dependency_matrix(psi)
+    assert dep.shape == psi.shape
+    assert (dep <= 1.0).all() and (dep >= -1.0).all()
+    # antisymmetry off-diagonal
+    off = ~np.eye(psi.shape[0], dtype=bool)
+    np.testing.assert_allclose(dep[off], -dep.T[off], atol=1e-12)
+
+
+def test_discover_dependency_graph_structure():
+    repo = _simple_repo()
+    psi = dfg_from_repository(repo)
+    starts, ends = repo.trace_boundaries()
+    model = discover_dependency_graph(
+        psi, repo.activity_names, starts, ends, min_count=1, min_dependency=0.5
+    )
+    assert ("a", "b") in model.edge_set
+    assert ("a", "c") in model.edge_set
+    assert ("b", "d") in model.edge_set
+    assert ("c", "d") in model.edge_set
+    assert model.start_activities == {"a": 20}
+    assert model.end_activities == {"d": 20}
+    dot = to_dot(model)
+    assert "digraph" in dot and '"a" -> "b"' in dot
+
+
+def test_footprint_relations():
+    # a->b always, b||c (both orders), d never follows a
+    repo = EventRepository.from_traces(
+        [["a", "b", "c"], ["a", "c", "b"]]
+    )
+    psi = dfg_from_repository(repo)
+    fp = footprint(psi)
+    n = repo.activity_names
+    ai, bi, ci = n.index("a"), n.index("b"), n.index("c")
+    assert fp[ai, bi] == 1  # a -> b
+    assert fp[bi, ai] == 2  # b <- a
+    assert fp[bi, ci] == 3  # b || c
+    assert fp[ai, ai] == 0  # never
+
+
+def test_footprint_conformance_metric():
+    r1 = _simple_repo()
+    psi1 = dfg_from_repository(r1)
+    assert footprint_conformance(footprint(psi1), footprint(psi1)) == 1.0
+    # perturbed log misses one path
+    r2 = EventRepository.from_traces(
+        [["a", "b", "d"]] * 20, activity_vocab=r1.activity_names
+    )
+    c = footprint_conformance(footprint(psi1), footprint(dfg_from_repository(r2)))
+    assert 0.0 < c < 1.0
+
+
+def test_mining_runtime_telemetry():
+    """The framework mines its own execution: a healthy loop's DFG is a
+    chain; an injected retry shows up as a variant."""
+    col = EventCollector()
+    for step in range(5):
+        case = f"step-{step}"
+        for phase in ["load", "forward", "backward", "optim"]:
+            col.record(case, phase, timestamp=float(step * 10 + ["load", "forward", "backward", "optim"].index(phase)))
+    # inject a retry in step 3
+    col.record("step-3", "retry", timestamp=35.5)
+    repo = col.to_repository()
+    psi = dfg_from_repository(repo)
+    names = repo.activity_names
+    # the chain edges dominate
+    assert psi[names.index("load"), names.index("forward")] == 5
+    assert psi[names.index("forward"), names.index("backward")] == 5
+    # the deviation is visible
+    assert psi[names.index("optim"), names.index("retry")] == 1
+
+
+def test_straggler_report():
+    col = EventCollector()
+    for i in range(10):
+        col.record(f"s{i}", "grad_sync", timestamp=float(i), duration=1.0)
+    col.record("s10", "grad_sync", timestamp=10.0, duration=30.0)  # straggler
+    rep = col.straggler_report(threshold=3.0)
+    assert "grad_sync" in rep
+    assert rep["grad_sync"]["ratio"] > 3.0

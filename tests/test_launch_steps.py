@@ -1,0 +1,80 @@
+"""launch/steps.py integration: every step kind lowers + compiles on a
+1×1 (data, model) test mesh with reduced configs — the same builder code
+the production dry-run uses, exercised in-process."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_test_mesh
+from repro.launch.steps import (
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+TRAIN = ShapeConfig("t", seq_len=32, global_batch=4, kind="train")
+PREFILL = ShapeConfig("p", seq_len=32, global_batch=2, kind="prefill")
+DECODE = ShapeConfig("d", seq_len=32, global_batch=2, kind="decode")
+
+ARCHS = ["starcoder2-3b", "gemma2-9b", "mixtral-8x7b", "mamba2-370m",
+         "jamba-v0.1-52b", "whisper-tiny", "llava-next-34b"]
+
+
+def _cfg(arch):
+    cfg = get_config(arch).reduced()
+    # reduced shapes must divide the tiny seq len
+    return dataclasses.replace(
+        cfg, vocab_size=128, loss_chunk=16, q_chunk=16,
+        microbatches=2 if cfg.n_experts else 1, ssm_chunk=8,
+    )
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_test_mesh((1, 1), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_lowers(arch, mesh):
+    cfg = _cfg(arch)
+    fn, in_sh, out_sh, args, donate = make_train_step(cfg, TRAIN, mesh)
+    compiled = jax.jit(
+        fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate
+    ).lower(*args).compile()
+    assert compiled.cost_analysis().get("flops", 0) > 0
+
+
+@pytest.mark.parametrize("arch", ["gemma2-9b", "mixtral-8x7b", "whisper-tiny"])
+def test_prefill_step_lowers(arch, mesh):
+    cfg = _cfg(arch)
+    fn, in_sh, out_sh, args, donate = make_prefill_step(cfg, PREFILL, mesh)
+    compiled = jax.jit(
+        fn, in_shardings=in_sh, out_shardings=out_sh
+    ).lower(*args).compile()
+    assert compiled is not None
+
+
+@pytest.mark.parametrize("arch", ["gemma2-9b", "mamba2-370m", "jamba-v0.1-52b"])
+def test_decode_step_lowers_and_runs(arch, mesh):
+    cfg = _cfg(arch)
+    fn, in_sh, out_sh, args, donate = make_decode_step(cfg, DECODE, mesh)
+    jitted = jax.jit(
+        fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate
+    )
+    compiled = jitted.lower(*args).compile()
+    assert compiled is not None
+    # and actually execute it with concrete zeros on the 1-device mesh
+    import jax.numpy as jnp
+
+    from repro.models import init_caches, init_params
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.zeros((DECODE.global_batch, 1), jnp.int32)
+    caches = init_caches(cfg, DECODE.global_batch, DECODE.seq_len)
+    logits, new_caches = jitted(params, toks, caches, jnp.int32(3))
+    assert np.isfinite(np.asarray(logits, np.float32)).all()

@@ -1,0 +1,186 @@
+"""Per-architecture smoke tests: REDUCED configs of the same family run one
+forward/train step (and a prefill→decode step) on CPU; shapes + finiteness
+asserted.  Full configs are exercised only via the dry-run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import (
+    count_params,
+    decode_step,
+    init_caches,
+    init_params,
+    prefill,
+    train_loss,
+)
+
+BATCH, SEQ = 2, 32
+
+
+def _batch_for(cfg, batch=BATCH, seq=SEQ):
+    rng = np.random.default_rng(0)
+    b = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(batch, seq)), jnp.int32
+        ),
+        "labels": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(batch, seq)), jnp.int32
+        ),
+    }
+    if cfg.family == "vlm":
+        b["vision_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.n_patches, cfg.d_model)), jnp.float32
+        )
+    if cfg.family == "encdec":
+        b["frames"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.enc_seq, cfg.d_model)), jnp.float32
+        )
+    return b
+
+
+@pytest.fixture(scope="module")
+def reduced_params():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = get_config(name).reduced()
+            cache[name] = (cfg, init_params(cfg, jax.random.PRNGKey(0)))
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_train_step_smoke(arch, reduced_params):
+    cfg, params = reduced_params(arch)
+    batch = _batch_for(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: train_loss(cfg, p, batch, q_chunk=16)
+    )(params)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g))) for g in flat), (
+        f"{arch}: non-finite grads"
+    )
+    # loss near ln(V) at init (uniform predictions)
+    assert abs(float(loss) - np.log(cfg.vocab_size)) < 2.0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_prefill_decode_smoke(arch, reduced_params):
+    cfg, params = reduced_params(arch)
+    batch = _batch_for(cfg)
+    caches, logits = prefill(cfg, params, batch, cache_len=SEQ + 4, q_chunk=16)
+    assert logits.shape == (BATCH, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, dtype=np.float32)))
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    total = SEQ + (cfg.n_patches if cfg.family == "vlm" else 0)
+    logits2, caches2 = decode_step(
+        cfg, params, tok, caches, jnp.int32(total)
+    )
+    assert logits2.shape == (BATCH, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits2, dtype=np.float32)))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_decode_matches_forward(arch, reduced_params):
+    """Prefill(S) then decode(token S) must equal prefill(S+1) logits —
+    the KV-cache/decode path is numerically consistent with the parallel
+    forward."""
+    if arch == "whisper-tiny":
+        pytest.skip("encdec decode uses dynamic sinusoidal pos — covered below")
+    cfg, params = reduced_params(arch)
+    if cfg.n_experts:
+        # exact-consistency check needs drop-free routing: with finite
+        # capacity, the (S+1)-token forward can drop different tokens than
+        # the S-token prefill (standard Switch semantics, not a bug)
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, capacity_factor=float(cfg.n_experts))
+    rng = np.random.default_rng(7)
+    S = 24
+    toks = rng.integers(0, cfg.vocab_size, size=(1, S + 1))
+    b_s = {"tokens": jnp.asarray(toks[:, :S], jnp.int32)}
+    b_s1 = {"tokens": jnp.asarray(toks, jnp.int32)}
+    if cfg.family == "vlm":
+        vis = jnp.asarray(rng.normal(size=(1, cfg.n_patches, cfg.d_model)),
+                          jnp.float32)
+        b_s["vision_embeds"] = vis
+        b_s1["vision_embeds"] = vis
+    n_prefix = cfg.n_patches if cfg.family == "vlm" else 0
+    cache_len = S + 1 + n_prefix
+    caches, _ = prefill(cfg, params, b_s, cache_len=cache_len, q_chunk=16,
+                        cache_dtype=jnp.float32)
+    last_tok = jnp.asarray(toks[:, S : S + 1], jnp.int32)
+    logits_dec, _ = decode_step(
+        cfg, params, last_tok, caches, jnp.int32(S + n_prefix)
+    )
+    _, logits_par = prefill(cfg, params, b_s1, cache_len=cache_len + 1,
+                            q_chunk=16, cache_dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray(logits_par), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_whisper_decode_consistency(reduced_params):
+    cfg, params = reduced_params("whisper-tiny")
+    rng = np.random.default_rng(3)
+    S = 12
+    toks = rng.integers(0, cfg.vocab_size, size=(1, S + 1))
+    frames = jnp.asarray(rng.normal(size=(1, cfg.enc_seq, cfg.d_model)),
+                         jnp.float32)
+    b_s = {"tokens": jnp.asarray(toks[:, :S], jnp.int32), "frames": frames}
+    b_s1 = {"tokens": jnp.asarray(toks, jnp.int32), "frames": frames}
+    caches, _ = prefill(cfg, params, b_s, cache_len=S + 1, q_chunk=16,
+                        cache_dtype=jnp.float32)
+    logits_dec, _ = decode_step(
+        cfg, params, jnp.asarray(toks[:, S : S + 1], jnp.int32), caches,
+        jnp.int32(S),
+    )
+    _, logits_par = prefill(cfg, params, b_s1, cache_len=S + 2, q_chunk=16,
+                            cache_dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray(logits_par), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_param_counts_sane():
+    """Full configs match published parameter scales (±15%)."""
+    expected = {
+        "starcoder2-3b": 3.0e9,
+        "gemma3-12b": 12.0e9,
+        "gemma2-27b": 27.0e9,
+        "gemma2-9b": 9.0e9,
+        "llava-next-34b": 34.0e9,
+        "olmoe-1b-7b": 7.0e9,
+        "mixtral-8x7b": 47.0e9,
+        "mamba2-370m": 0.37e9,
+        "jamba-v0.1-52b": 52.0e9,
+    }
+    for name, want in expected.items():
+        got = count_params(get_config(name))
+        assert abs(got - want) / want < 0.25, (
+            f"{name}: {got / 1e9:.2f}B vs expected {want / 1e9:.1f}B"
+        )
+
+
+def test_active_params_moe():
+    olmoe = get_config("olmoe-1b-7b")
+    active = count_params(olmoe, active_only=True)
+    total = count_params(olmoe)
+    assert active < total
+    # ~1B active of ~7B total
+    assert 0.7e9 < active < 1.8e9, f"olmoe active {active / 1e9:.2f}B"
+
+
+def test_sliding_window_cache_bounded():
+    """Local layers must not allocate beyond the window (long-context
+    viability)."""
+    cfg = get_config("mixtral-8x7b").reduced()
+    caches = init_caches(cfg, batch=1, cache_len=1024)
+    k = caches["e0"]["k"]  # (U, B, cap, KV, hd)
+    assert k.shape[2] == cfg.window  # ring buffer, not 1024

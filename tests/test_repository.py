@@ -1,0 +1,86 @@
+"""Repository forms, canonicalization, conversions, persistence."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EventRepository,
+    check_columnar,
+    check_graph,
+    paper_example_repo,
+)
+
+
+def test_from_event_table_canonicalizes_unsorted_input():
+    # deliberately shuffled rows; two interleaved cases
+    cases = ["c2", "c1", "c1", "c2", "c1"]
+    acts = ["x", "a", "b", "y", "c"]
+    times = [10.0, 1.0, 2.0, 11.0, 3.0]
+    repo = EventRepository.from_event_table(cases, acts, times)
+    assert check_columnar(repo).ok
+    # c1 events first (sorted trace names), in time order
+    got = [
+        (repo.trace_names[t], repo.activity_names[a])
+        for t, a in zip(repo.event_trace, repo.event_activity)
+    ]
+    assert got == [("c1", "a"), ("c1", "b"), ("c1", "c"), ("c2", "x"), ("c2", "y")]
+
+
+def test_roundtrip_graph_columnar():
+    repo = paper_example_repo()
+    g = repo.to_graph()
+    assert check_graph(g).ok
+    back = g.to_columnar()
+    assert check_columnar(back).ok
+    # same DFG either way
+    from repro.core import dfg_from_repository
+
+    np.testing.assert_array_equal(
+        dfg_from_repository(repo), dfg_from_repository(back)
+    )
+
+
+def test_df_pairs_validity():
+    repo = EventRepository.from_traces([["a", "b", "c"], ["b", "c"]])
+    src, dst, valid = repo.df_pairs()
+    assert src.shape == dst.shape == valid.shape == (4,)
+    assert valid.tolist() == [True, True, False, True]
+
+
+def test_padded_pairs_multiple():
+    repo = EventRepository.from_traces([["a", "b", "c"], ["b", "c"]])
+    src, dst, valid, st, dt = repo.padded_pairs(8)
+    assert src.shape == (8,)
+    assert valid[4:].sum() == 0
+
+
+def test_events_of_activity_is_preset_operator():
+    repo = paper_example_repo()
+    # •a2 = {e2, e4} → indices 1 and 3 in canonical order
+    assert repo.events_of_activity("a2").tolist() == [1, 3]
+
+
+def test_trace_boundaries():
+    repo = EventRepository.from_traces([["a", "b"], ["a", "c"], ["b", "c"]])
+    starts, ends = repo.trace_boundaries()
+    names = repo.activity_names
+    assert starts[names.index("a")] == 2
+    assert starts[names.index("b")] == 1
+    assert ends[names.index("c")] == 2
+    assert ends[names.index("b")] == 1
+
+
+def test_save_load_roundtrip(tmp_path):
+    repo = paper_example_repo()
+    repo.save(str(tmp_path / "repo"))
+    back = EventRepository.load(str(tmp_path / "repo"))
+    np.testing.assert_array_equal(repo.event_activity, back.event_activity)
+    np.testing.assert_array_equal(repo.event_trace, back.event_trace)
+    assert back.activity_names == repo.activity_names
+
+
+def test_unknown_activity_rejected_with_fixed_vocab():
+    with pytest.raises(ValueError):
+        EventRepository.from_event_table(
+            ["c1"], ["zzz"], [0.0], activity_vocab=["a", "b"]
+        )

@@ -1,0 +1,133 @@
+"""Definition 2 soundness — positive, negative, and property-based."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    EventRepository,
+    GraphRepo,
+    check_columnar,
+    check_graph,
+    paper_example_repo,
+)
+
+
+def _sound_graph():
+    return paper_example_repo().to_graph()
+
+
+def test_paper_example_is_sound():
+    assert check_graph(_sound_graph()).ok
+    assert check_columnar(paper_example_repo()).ok
+
+
+def test_trace_in_two_logs_violates_s1():
+    g = _sound_graph()
+    g.logs.add("log:l2")
+    g.relations.add(("log:l2", "trace:t1"))
+    rep = check_graph(g)
+    assert not rep.ok and any("S1" in v for v in rep.violations)
+
+
+def test_event_in_two_traces_violates_s2():
+    g = _sound_graph()
+    g.relations.add(("trace:t2", "e1"))
+    rep = check_graph(g)
+    assert not rep.ok and any("S2" in v for v in rep.violations)
+
+
+def test_event_two_outgoing_flows_violates_s4():
+    g = _sound_graph()
+    g.relations.add(("e1", "e3"))  # e1 already flows to e2
+    rep = check_graph(g)
+    assert not rep.ok and any("S4" in v for v in rep.violations)
+
+
+def test_event_two_incoming_flows_violates_s3():
+    g = _sound_graph()
+    g.relations.add(("e1", "e3"))
+    rep = check_graph(g)
+    assert any("S3" in v or "S4" in v for v in rep.violations)
+
+
+def test_event_without_activity_violates_s5():
+    g = _sound_graph()
+    g.relations.discard(("e1", "act:a1"))
+    rep = check_graph(g)
+    assert not rep.ok and any("S5" in v for v in rep.violations)
+
+
+def test_event_two_activities_violates_s5():
+    g = _sound_graph()
+    g.relations.add(("e1", "act:a2"))
+    rep = check_graph(g)
+    assert not rep.ok and any("S5" in v for v in rep.violations)
+
+
+def test_columnar_non_contiguous_traces_detected():
+    repo = EventRepository(
+        event_activity=np.array([0, 1, 0], dtype=np.int32),
+        event_trace=np.array([0, 1, 0], dtype=np.int32),  # trace 0 split!
+        event_time=np.array([0.0, 1.0, 2.0]),
+        trace_log=np.zeros(2, dtype=np.int32),
+        activity_names=["a", "b"],
+        trace_names=["t1", "t2"],
+        log_names=["l1"],
+    )
+    rep = check_columnar(repo)
+    assert not rep.ok and any("S3/S4" in v for v in rep.violations)
+
+
+def test_columnar_time_order_detected():
+    repo = EventRepository(
+        event_activity=np.array([0, 1], dtype=np.int32),
+        event_trace=np.array([0, 0], dtype=np.int32),
+        event_time=np.array([2.0, 1.0]),  # decreasing
+        trace_log=np.zeros(1, dtype=np.int32),
+        activity_names=["a", "b"],
+        trace_names=["t1"],
+        log_names=["l1"],
+    )
+    rep = check_columnar(repo)
+    assert not rep.ok
+
+
+# -- property: every repository built through the public constructor is sound
+traces_strategy = st.lists(
+    st.lists(st.sampled_from(["a", "b", "c", "d", "e"]), min_size=1, max_size=12),
+    min_size=0,
+    max_size=12,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(traces=traces_strategy)
+def test_from_traces_always_sound(traces):
+    repo = EventRepository.from_traces(traces)
+    assert check_columnar(repo).ok
+    g = repo.to_graph()
+    assert check_graph(g).ok
+    # graph roundtrip preserves DFG
+    from repro.core import dfg_from_repository
+
+    back = g.to_columnar()
+    np.testing.assert_array_equal(
+        dfg_from_repository(repo),
+        dfg_from_repository(back),
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=40),
+    k=st.integers(min_value=1, max_value=5),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_from_event_table_sound_for_random_tables(n, k, seed):
+    rng = np.random.default_rng(seed)
+    cases = [f"c{int(x)}" for x in rng.integers(0, k, size=n)]
+    acts = [f"a{int(x)}" for x in rng.integers(0, 4, size=n)]
+    times = rng.uniform(0, 100, size=n)
+    repo = EventRepository.from_event_table(cases, acts, times)
+    assert check_columnar(repo).ok
