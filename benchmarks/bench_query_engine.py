@@ -1,0 +1,125 @@
+"""Query-engine benchmarks: what does the declarative layer cost, and what
+do its pushdowns buy?
+
+Three measurements, emitted as CSV rows (and ``BENCH_query.json``):
+
+* **overhead** — ``Q.log(repo).dfg(backend=...)`` with a cold cache vs the
+  hand-dispatched direct call.  The delta is fingerprint + canonicalize +
+  plan; it must stay small relative to counting.
+* **pushdown** — a 1/8-horizon dice on a memmap log (paper Experiment 2
+  shape): the engine's row-range pushdown via the chunk time index vs a
+  full-log scan.  Time should scale with the dice, not the log.
+* **cache** — the same diced query re-issued: plan/result-cache hit
+  latency vs cold execution.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+EVENTS = int(os.environ.get("BENCH_EVENTS", 2_000_000))
+REPEAT = 5
+
+
+def _best(fn, n=REPEAT) -> float:
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run() -> list:
+    from repro.core import dfg_from_repository, streaming_dfg
+    from repro.data import ProcessSpec, generate_memmap_log, generate_repository
+    from repro.query import Q, QueryEngine
+
+    rows = []
+    results = {}
+
+    # -- 1. planning overhead on an in-memory repository --------------------
+    repo = generate_repository(5_000, ProcessSpec(num_activities=32, seed=11))
+    direct_us = _best(lambda: dfg_from_repository(repo, backend="scatter"))
+
+    eng = QueryEngine()
+
+    def planned():
+        eng.cache.clear()  # keep the executor honest: no result reuse
+        Q.log(repo).using(eng).dfg(backend="scatter")
+
+    planned_us = _best(planned)
+    overhead_us = max(planned_us - direct_us, 0.0)
+    rows.append((
+        "query_overhead", planned_us,
+        f"direct_us={direct_us:.0f};overhead_us={overhead_us:.0f};"
+        f"ratio={planned_us / max(direct_us, 1):.2f}x",
+    ))
+    results["overhead"] = {
+        "events": repo.num_events,
+        "direct_us": direct_us,
+        "planned_us": planned_us,
+        "overhead_us": overhead_us,
+    }
+
+    # -- 2. predicate pushdown on a diced memmap log -------------------------
+    tmp = tempfile.mkdtemp(prefix="graphpm_benchq_")
+    log = generate_memmap_log(
+        os.path.join(tmp, "log"), EVENTS,
+        ProcessSpec(num_activities=64, seed=17, horizon_days=120), seed=17,
+    )
+    t_min, t_max = float(log.time[0]), float(log.time[-1])
+    window = (t_min, t_min + (t_max - t_min) / 8.0)
+    lo, hi = log.rows_for_window(*window)
+    ooc = QueryEngine(memory_budget_events=0)  # always out-of-core
+
+    def diced():
+        ooc.cache.clear()
+        Q.log(log).using(ooc).window(*window).dfg()
+
+    diced_us = _best(diced, n=3)
+    full_us = _best(lambda: streaming_dfg(log), n=3)
+    rows.append((
+        "query_pushdown_dice8", diced_us,
+        f"diced_events={hi - lo};full_scan_us={full_us:.0f};"
+        f"win={full_us / max(diced_us, 1):.2f}x",
+    ))
+    results["pushdown"] = {
+        "events": log.num_events,
+        "diced_events": hi - lo,
+        "diced_us": diced_us,
+        "full_scan_us": full_us,
+    }
+
+    # -- 3. plan/result cache hit ---------------------------------------------
+    ooc.cache.clear()
+    t0 = time.perf_counter()
+    first = Q.log(log).using(ooc).window(*window).dfg()
+    cold_us = (time.perf_counter() - t0) * 1e6
+    hit_holder = {}
+
+    def hit():
+        hit_holder["r"] = Q.log(log).using(ooc).window(*window).dfg()
+
+    hit_us = _best(hit)
+    assert hit_holder["r"].from_cache and not first.from_cache
+    assert (hit_holder["r"].value == first.value).all()
+    rows.append((
+        "query_cache_hit", hit_us,
+        f"cold_us={cold_us:.0f};speedup={cold_us / max(hit_us, 1):.0f}x",
+    ))
+    results["cache"] = {"cold_us": cold_us, "hit_us": hit_us}
+
+    with open("BENCH_query.json", "w") as f:
+        json.dump(results, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -22,6 +22,7 @@ def main() -> None:
         bench_dicing,
         bench_kernels,
         bench_memory_scaling,
+        bench_query_engine,
         roofline_table,
     )
 
@@ -30,6 +31,7 @@ def main() -> None:
         (bench_memory_scaling, "fig4"),
         (bench_dicing, "fig5"),
         (bench_kernels, "kernels"),
+        (bench_query_engine, "query"),
         (roofline_table, "roofline"),
     ):
         try:

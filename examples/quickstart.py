@@ -1,4 +1,4 @@
-"""Quickstart: the paper's pipeline in 30 lines.
+"""Quickstart: the paper's pipeline in 30 lines, through the query engine.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,26 +7,26 @@ import numpy as np
 
 from repro.core import (
     check_columnar,
-    dfg_from_repository,
     discover_dependency_graph,
     filter_dfg,
     paper_example_repo,
     to_dot,
 )
 from repro.data import ProcessSpec, generate_repository
+from repro.query import Q, default_engine
 
 # --- 1. the paper's worked example (Fig. 3 → Table 1) ----------------------
 repo = paper_example_repo()
-psi = dfg_from_repository(repo)
+res = Q.log(repo).dfg()
 print("Table 1 (paper worked example):")
-print("      " + "  ".join(repo.activity_names))
-for name, row in zip(repo.activity_names, psi):
+print("      " + "  ".join(res.names))
+for name, row in zip(res.names, res.value):
     print(f"  {name}  " + "   ".join(str(int(x)) for x in row))
 
 # --- 2. a bigger synthetic log: load → DFG in-store → discover -------------
 repo = generate_repository(2_000, ProcessSpec(num_activities=12, seed=4))
 assert check_columnar(repo).ok
-psi = dfg_from_repository(repo, backend="scatter")
+psi = Q.log(repo).dfg(backend="scatter").value
 print(f"\nlog: {repo.num_events} events, {repo.num_traces} traces, "
       f"{int(psi.sum())} directly-follows pairs")
 
@@ -41,6 +41,15 @@ print(to_dot(model)[:400] + "\n…")
 # --- 3. dicing (the paper's Experiment 2 semantics) -------------------------
 t0 = float(np.quantile(repo.event_time, 0.25))
 t1 = float(np.quantile(repo.event_time, 0.75))
-diced = dfg_from_repository(repo, time_window=(t0, t1))
+diced = Q.log(repo).window(t0, t1).dfg()
 print(f"\ndiced to the middle half of the horizon: "
-      f"{int(diced.sum())} pairs ({int(psi.sum())} undiced)")
+      f"{int(diced.value.sum())} pairs ({int(psi.sum())} undiced)")
+
+# --- 4. the query engine: plans, pushdowns, and the result cache ------------
+print("\nquery plan for the diced query:")
+print(Q.log(repo).window(t0, t1).explain())
+again = Q.log(repo).window(t0, t1).dfg()
+stats = default_engine().stats
+print(f"\nre-issued the same query: from_cache={again.from_cache} "
+      f"(engine: {stats.queries} queries, {stats.executions} executions, "
+      f"{stats.cache_hits} cache hits)")

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .compat import shard_map
+
 __all__ = [
     "distributed_dfg",
     "shard_pairs",
@@ -126,12 +128,11 @@ def distributed_dfg(
             psi_local = jax.lax.psum(psi_local, axis_name=axes)
         return psi_local
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(all_axes_spec, all_axes_spec, all_axes_spec),
         out_specs=P(),  # fully replicated aggregate — the only thing leaving
-        check_vma=False,
     )
     sharding = NamedSharding(mesh, all_axes_spec)
     args = [
@@ -160,9 +161,8 @@ def lower_distributed_dfg(
             psi_local = jax.lax.psum(psi_local, axis_name=ax)
         return psi_local
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         shard_fn, mesh=mesh, in_specs=(spec, spec, spec), out_specs=P(),
-        check_vma=False,
     )
     n_dev = _n_devices(mesh)
     padded = max(n_dev, math.ceil(num_pairs / n_dev) * n_dev)

@@ -87,11 +87,26 @@ class AccessDenied(PermissionError):
 
 class AnalystSession:
     """Capability-style handle: all queries run *in-store* (device-side when
-    distributed) and only aggregates cross the boundary."""
+    distributed) and only aggregates cross the boundary.
 
-    def __init__(self, repo: EventRepository, policy: AccessPolicy):
+    Aggregate endpoints compile to :mod:`repro.query` plans, so analyst
+    traffic gets the engine's predicate pushdown and the shared plan/result
+    cache (repeated dashboard queries are O(1))."""
+
+    def __init__(self, repo: EventRepository, policy: AccessPolicy, engine=None):
         self.__repo = repo  # name-mangled: not reachable as a public attr
         self.policy = policy
+        self.__engine = engine
+
+    def __query(self):
+        from repro.query import Q
+
+        q = Q.log(self.__repo)
+        if self.__engine is not None:
+            q = q.using(self.__engine)
+        if self.policy.view is not None:
+            q = q.view(self.policy.view)
+        return q
 
     # -- aggregate endpoints -------------------------------------------------
     def dfg(
@@ -99,33 +114,20 @@ class AnalystSession:
         time_window: Optional[Tuple[float, float]] = None,
         backend: str = "auto",
     ) -> Tuple[np.ndarray, List[str]]:
-        from .dfg import dfg_from_repository
-
         if time_window is not None and not self.policy.time_windows_allowed:
             raise AccessDenied("time dicing not permitted by policy")
-        psi = dfg_from_repository(
-            self.__repo, backend=backend, time_window=time_window,
-            view=self.policy.view,
-        )
-        names = (
-            self.policy.view.visible_names(self.__repo.activity_names)
-            if self.policy.view
-            else list(self.__repo.activity_names)
-        )
+        q = self.__query()
+        if time_window is not None:
+            q = q.window(*time_window)  # commutes with the view in the plan
+        res = q.dfg(backend=backend)
+        psi, names = res.value, list(res.names)
         if self.policy.min_group_count:
             psi = np.where(psi >= self.policy.min_group_count, psi, 0)
         return psi, names
 
     def activity_histogram(self) -> Tuple[np.ndarray, List[str]]:
-        counts = np.bincount(
-            self.__repo.event_activity, minlength=self.__repo.num_activities
-        ).astype(np.int64)
-        if self.policy.view is not None:
-            g, labels = self.policy.view.group_matrix(self.__repo.activity_names)
-            counts = counts @ g
-            keep = [i for i, l in enumerate(labels) if l != HIDDEN]
-            return counts[keep], [labels[i] for i in keep]
-        return counts, list(self.__repo.activity_names)
+        res = self.__query().histogram()
+        return res.value, list(res.names)
 
     def trace_length_stats(self) -> Dict[str, float]:
         lens = np.bincount(self.__repo.event_trace, minlength=self.__repo.num_traces)

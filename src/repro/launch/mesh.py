@@ -11,6 +11,8 @@ import math
 
 import jax
 
+from repro.core.compat import make_mesh
+
 __all__ = ["make_production_mesh", "make_test_mesh", "mesh_devices"]
 
 
@@ -24,20 +26,12 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {n} devices for the production mesh, have {len(devs)} — "
             "run under dryrun.py (placeholder host devices) or on the pod"
         )
-    return jax.make_mesh(
-        shape, axes,
-        devices=devs[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh(shape, axes, devices=devs[:n])
 
 
 def make_test_mesh(shape=(1, 1), axes=("data", "model")):
     n = math.prod(shape)
-    return jax.make_mesh(
-        shape, axes,
-        devices=jax.devices()[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh(shape, axes, devices=jax.devices()[:n])
 
 
 def mesh_devices(mesh) -> int:

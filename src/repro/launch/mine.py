@@ -1,4 +1,7 @@
-"""Process-mining CLI — the paper's pipeline end to end.
+"""Process-mining CLI — the paper's pipeline end to end, through the
+declarative query engine (``repro.query``): the CLI states *what* to mine
+(log, dice, sink) and the engine's cost model picks the physical path
+(streaming scan, device kernel, or mesh-distributed psum).
 
     # generate a synthetic BPI-like log and mine it
     PYTHONPATH=src python -m repro.launch.mine --events 500000 --dice-days 30
@@ -22,7 +25,8 @@ def main() -> None:
     ap.add_argument("--activities", type=int, default=32)
     ap.add_argument("--dice-days", type=float, default=None)
     ap.add_argument("--backend", default="auto",
-                    choices=["auto", "scatter", "onehot", "pallas"])
+                    choices=["auto", "scatter", "onehot", "pallas",
+                             "streaming"])
     ap.add_argument("--distributed", action="store_true",
                     help="shard_map DFG over the production mesh "
                          "(512 placeholder host devices)")
@@ -36,14 +40,9 @@ def main() -> None:
             + os.environ.get("XLA_FLAGS", "")
         )
 
-    from repro.core import (
-        discover_dependency_graph,
-        distributed_dfg,
-        dfg_numpy,
-        streaming_dfg,
-        to_dot,
-    )
+    from repro.core import discover_dependency_graph, to_dot
     from repro.data import ProcessSpec, generate_memmap_log
+    from repro.query import Q, QueryEngine
 
     tmp = tempfile.mkdtemp(prefix="graphpm_mine_")
     spec = ProcessSpec(num_activities=args.activities, seed=7)
@@ -56,45 +55,29 @@ def main() -> None:
         t_min = float(log.time[0])
         window = (t_min, t_min + args.dice_days * 86400.0)
 
-    t0 = time.perf_counter()
+    mesh = None
     if args.distributed:
-        import jax
         from repro.launch.mesh import make_production_mesh
 
         mesh = make_production_mesh(multi_pod=True)
-        # stream the (possibly diced) rows to pair columns
-        import numpy as np
+    engine = QueryEngine(
+        mesh=mesh,
+        # --distributed pins the device path: lift the out-of-core budget so
+        # the pairs materialize onto the mesh instead of streaming host-side
+        memory_budget_events=(
+            max(args.events + 1, 1 << 22) if mesh is not None else 1 << 22
+        ),
+    )
+    q = Q.log(log).using(engine)
+    if window is not None:
+        q = q.window(*window)
 
-        rng = log.rows_for_window(*window) if window else None
-        srcs, dsts, valids = [], [], []
-        from repro.core.streaming import StreamingDFGMiner
-
-        # build pairs chunk-wise (host), count on the mesh (device)
-        prev = {}
-        for a, c, t in log.iter_chunks(row_range=rng):
-            order = np.lexsort((np.arange(len(t)), t, c))
-            a, c = a[order], c[order]
-            same = np.zeros(len(a), bool)
-            same[1:] = c[1:] == c[:-1]
-            srcs.append(a[:-1][same[1:]])
-            dsts.append(a[1:][same[1:]])
-            first = ~same
-            for i in np.nonzero(first)[0]:
-                if int(c[i]) in prev:
-                    srcs.append(np.array([prev[int(c[i])]], np.int32))
-                    dsts.append(np.array([a[i]], np.int32))
-            last = np.ones(len(a), bool)
-            last[:-1] = ~same[1:]
-            for i in np.nonzero(last)[0]:
-                prev[int(c[i])] = int(a[i])
-        src = np.concatenate(srcs).astype(np.int32)
-        dst = np.concatenate(dsts).astype(np.int32)
-        valid = np.ones_like(src, dtype=bool)
-        psi = distributed_dfg(mesh, src, dst, valid, log.num_activities)
-        mode = f"distributed({'x'.join(str(s) for s in mesh.devices.shape)})"
-    else:
-        psi = streaming_dfg(log, time_window=window)
-        mode = "streaming"
+    t0 = time.perf_counter()
+    res = q.dfg(backend=args.backend)
+    psi = res.value
+    mode = res.physical.backend
+    if mode == "distributed":
+        mode += f"({'x'.join(str(s) for s in mesh.devices.shape)})"
     dfg_s = time.perf_counter() - t0
 
     from repro.core.discovery import filter_dfg
@@ -114,6 +97,7 @@ def main() -> None:
     print(json.dumps({
         "events": log.num_events,
         "mode": mode,
+        "plan": res.physical.describe(),
         "diced": window is not None,
         "gen_s": round(gen_s, 2),
         "dfg_s": round(dfg_s, 3),

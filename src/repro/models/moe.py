@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core.compat import shard_map
 from .common import activation, normal_init
 
 __all__ = ["init_moe", "moe_apply", "DistCtx"]
@@ -86,7 +87,7 @@ def _moe_sharded(cfg: ModelConfig, params: Dict, x: jax.Array, dist: DistCtx):
         return out, aux
 
     rep = P(None, None, None)
-    mapped = jax.shard_map(
+    mapped = shard_map(
         local,
         mesh=dist.mesh,
         in_specs=(
@@ -97,7 +98,6 @@ def _moe_sharded(cfg: ModelConfig, params: Dict, x: jax.Array, dist: DistCtx):
         ),
         out_specs=(P(axes, None, None), P()),
         axis_names=set(axes),  # manual over batch; 'model' stays auto (TP)
-        check_vma=False,
     )
     return mapped(
         x, params["router"], params["w_up"], params["w_down"],

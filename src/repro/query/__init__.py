@@ -1,0 +1,52 @@
+"""``repro.query`` — the declarative process-query engine.
+
+One entry point::
+
+    from repro.query import Q
+
+    result = Q.log(repo).window(t0, t1).activities(keep).view(v).dfg()
+    result.value        # the Ψ count matrix
+    result.names        # its activity (or group) labels
+    result.from_cache   # True when served from the plan/result cache
+
+The chain compiles to a logical plan (:mod:`repro.query.ast`), is rewritten
+by count-preserving rules (:mod:`repro.query.optimize`), mapped to a
+physical backend by a small cost model (:mod:`repro.query.planner`), and
+executed on the repo's existing primitives (:mod:`repro.query.execute`)
+with an LRU plan/result cache (:mod:`repro.query.cache`).
+"""
+
+from .ast import (
+    Activities,
+    ApplyView,
+    DFGSink,
+    HistogramSink,
+    LogicalPlan,
+    Q,
+    Query,
+    QueryPlanError,
+    TopVariants,
+    VariantsSink,
+    Window,
+)
+from .cache import QueryCache, fingerprint
+from .execute import (
+    EngineStats,
+    QueryEngine,
+    QueryResult,
+    default_engine,
+    set_default_engine,
+)
+from .optimize import canonicalize
+from .planner import PhysicalPlan, SourceInfo, plan_physical, source_info
+
+__all__ = [
+    "Q", "Query", "QueryPlanError",
+    "Window", "Activities", "TopVariants", "ApplyView",
+    "DFGSink", "HistogramSink", "VariantsSink", "LogicalPlan",
+    "QueryCache", "fingerprint",
+    "QueryEngine", "QueryResult", "EngineStats",
+    "default_engine", "set_default_engine",
+    "canonicalize", "plan_physical", "PhysicalPlan", "SourceInfo",
+    "source_info",
+]

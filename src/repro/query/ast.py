@@ -1,0 +1,272 @@
+"""Logical query algebra + the fluent ``Q`` builder.
+
+The paper's headline interface is a *single declarative query* (Cypher with
+WHERE-clause dicing) executed where the data lives.  This module is the
+repo's equivalent of that Cypher surface: an analyst writes
+
+    Q.log(repo).window(t0, t1).activities(["a", "b"]).view(view).dfg()
+
+and the chain compiles to a :class:`LogicalPlan` — ``source → ops → sink`` —
+that the optimizer rewrites and the engine executes on the backend the cost
+model picks.  Nothing here touches data; plans are frozen, hashable, and
+serialize to a stable key for the plan/result cache.
+
+Grammar::
+
+    plan   := source  op*  sink
+    source := "repository" (EventRepository) | "memmap" (MemmapLog)
+    op     := Window(t0, t1)            -- WHERE t0 <= time < t1, paper
+                                           semantics (both pair endpoints)
+            | Activities(keep, relink)  -- keep only these activities;
+                                           relink=False: pair predicate
+                                           (paper semantics), relink=True:
+                                           pm4py re-linking (materializes)
+            | TopVariants(k)            -- keep traces of the top-k variants
+                                           (materializes)
+            | ApplyView(mapping)        -- access-control projection (§2.2)
+    sink   := DFGSink(backend) | HistogramSink() | VariantsSink(k)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+from repro.core.repository import EventRepository
+from repro.core.streaming import MemmapLog
+from repro.core.views import HIDDEN, ActivityView
+
+__all__ = [
+    "Window",
+    "Activities",
+    "TopVariants",
+    "ApplyView",
+    "DFGSink",
+    "HistogramSink",
+    "VariantsSink",
+    "LogicalPlan",
+    "Query",
+    "Q",
+    "QueryPlanError",
+    "source_kind",
+]
+
+
+class QueryPlanError(ValueError):
+    """Raised for queries outside the supported algebra (bad op/sink combo,
+    unsupported source, unknown activity names)."""
+
+
+# ---------------------------------------------------------------------------
+# Operators
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Window:
+    """Time dice ``t0 <= time < t1``; a pair counts iff both endpoints fall
+    inside (the paper's WHERE clause — the E×E relation stays fixed)."""
+
+    t0: float
+    t1: float
+
+    @property
+    def empty(self) -> bool:
+        return self.t0 >= self.t1
+
+
+@dataclasses.dataclass(frozen=True)
+class Activities:
+    """Activity filter.  ``relink=False``: a pair counts iff both endpoints
+    execute a kept activity (pure predicate — commutes past counting).
+    ``relink=True``: pm4py semantics — drop events, re-link survivors
+    (materializes a diced repository; a plan barrier)."""
+
+    keep: Tuple[str, ...]
+    relink: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class TopVariants:
+    """Keep only traces of the ``k`` most frequent variants (materializes)."""
+
+    k: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ApplyView:
+    """Access-control projection: raw activity → group label (or HIDDEN).
+    Canonical, hashable mirror of :class:`repro.core.views.ActivityView`."""
+
+    mapping: Tuple[Tuple[str, str], ...]
+    default: str = HIDDEN
+
+    @staticmethod
+    def from_view(view: Union[ActivityView, "ApplyView", Dict[str, str]]) -> "ApplyView":
+        if isinstance(view, ApplyView):
+            return view
+        if isinstance(view, ActivityView):
+            return ApplyView(
+                mapping=tuple(sorted(view.mapping.items())), default=view.default
+            )
+        return ApplyView(mapping=tuple(sorted(view.items())))
+
+    def to_view(self) -> ActivityView:
+        return ActivityView(mapping=dict(self.mapping), default=self.default)
+
+
+Op = Union[Window, Activities, TopVariants, ApplyView]
+
+#: ops that force materializing an intermediate repository — predicates
+#: cannot be pushed across them
+BARRIER_OPS = (TopVariants,)
+
+
+def is_barrier(op: Op) -> bool:
+    return isinstance(op, BARRIER_OPS) or (
+        isinstance(op, Activities) and op.relink
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sinks
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DFGSink:
+    """Ψ count matrix — Algorithm 1.  ``backend="auto"`` defers to the cost
+    model; anything else pins the physical operator."""
+
+    backend: str = "auto"
+
+
+@dataclasses.dataclass(frozen=True)
+class HistogramSink:
+    """Per-activity event counts (the aggregate-only histogram endpoint)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantsSink:
+    """Trace-variant table, optionally truncated to the top ``k``."""
+
+    k: Optional[int] = None
+
+
+Sink = Union[DFGSink, HistogramSink, VariantsSink]
+
+
+# ---------------------------------------------------------------------------
+# Plan
+# ---------------------------------------------------------------------------
+
+
+def source_kind(source) -> str:
+    if isinstance(source, EventRepository):
+        return "repository"
+    if isinstance(source, MemmapLog):
+        return "memmap"
+    raise QueryPlanError(
+        f"unsupported query source {type(source).__name__}; "
+        "expected EventRepository or MemmapLog"
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalPlan:
+    source: str  # "repository" | "memmap"
+    ops: Tuple[Op, ...]
+    sink: Sink
+
+    def _payload(self) -> list:
+        def enc(x) -> list:
+            return [type(x).__name__, dataclasses.asdict(x)]
+
+        return [self.source, [enc(o) for o in self.ops], enc(self.sink)]
+
+    def key(self) -> str:
+        """Stable content hash — the cache key half owned by the plan."""
+        blob = json.dumps(self._payload(), sort_keys=True, default=repr)
+        return hashlib.sha256(blob.encode()).hexdigest()[:32]
+
+    def describe(self) -> str:
+        ops = " → ".join(
+            f"{type(o).__name__}{dataclasses.astuple(o) if not isinstance(o, ApplyView) else (len(o.mapping),)}"
+            for o in self.ops
+        ) or "(no ops)"
+        return f"{self.source} → {ops} → {type(self.sink).__name__}"
+
+
+# ---------------------------------------------------------------------------
+# Fluent builder
+# ---------------------------------------------------------------------------
+
+
+class Query:
+    """Immutable fluent chain.  Non-terminal methods return a new Query;
+    terminal methods (:meth:`dfg`, :meth:`histogram`, :meth:`variants`)
+    hand the plan to a :class:`repro.query.execute.QueryEngine`."""
+
+    def __init__(self, source, ops: Tuple[Op, ...] = (), engine=None):
+        self._kind = source_kind(source)
+        self.source = source
+        self.ops = tuple(ops)
+        self._engine = engine
+
+    def _with(self, op: Op) -> "Query":
+        return Query(self.source, self.ops + (op,), self._engine)
+
+    # -- non-terminals -------------------------------------------------------
+    def window(self, t0: float, t1: float) -> "Query":
+        return self._with(Window(float(t0), float(t1)))
+
+    def activities(self, keep: Sequence[str], relink: bool = False) -> "Query":
+        return self._with(Activities(tuple(str(a) for a in keep), relink))
+
+    def top_variants(self, k: int) -> "Query":
+        return self._with(TopVariants(int(k)))
+
+    def view(self, view) -> "Query":
+        return self._with(ApplyView.from_view(view))
+
+    def using(self, engine) -> "Query":
+        """Pin a specific :class:`QueryEngine` (default: the module-level
+        shared engine with the shared cache)."""
+        q = Query(self.source, self.ops, engine)
+        return q
+
+    # -- terminals -----------------------------------------------------------
+    def _run(self, sink: Sink):
+        from .execute import default_engine
+
+        engine = self._engine or default_engine()
+        return engine.run(self, sink)
+
+    def dfg(self, backend: str = "auto"):
+        return self._run(DFGSink(backend=backend))
+
+    def histogram(self):
+        return self._run(HistogramSink())
+
+    def variants(self, k: Optional[int] = None):
+        return self._run(VariantsSink(k=k))
+
+    # -- introspection -------------------------------------------------------
+    def logical_plan(self, sink: Sink) -> LogicalPlan:
+        return LogicalPlan(self._kind, self.ops, sink)
+
+    def explain(self, sink: Optional[Sink] = None) -> str:
+        from .execute import default_engine
+
+        engine = self._engine or default_engine()
+        return engine.explain(self, sink or DFGSink())
+
+
+class Q:
+    """Entry point: ``Q.log(repo_or_memmap)``."""
+
+    @staticmethod
+    def log(source) -> Query:
+        return Query(source)

@@ -1,0 +1,178 @@
+"""Plan + result cache keyed on (repository fingerprint, canonical plan).
+
+Dashboard-style workloads re-issue the same handful of queries against a
+slowly changing store; the paper's in-store architecture makes those O(1)
+once the store can recognize "same data, same query".  Both halves of the
+key are content hashes:
+
+* the **fingerprint** digests the source's actual bytes (columns + names
+  for an :class:`EventRepository`; meta + column files for a
+  :class:`MemmapLog`), so *any* append or rewrite invalidates;
+* the **plan key** hashes the canonical logical plan, so two differently
+  chained but equivalent queries share an entry.
+
+Entries are LRU-evicted and returned as copies — a caller mutating a result
+matrix can never corrupt the cache.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+import hashlib
+import json
+import os
+import threading
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.repository import EventRepository
+from repro.core.streaming import MemmapLog
+
+__all__ = [
+    "fingerprint",
+    "fingerprint_repository",
+    "fingerprint_memmap",
+    "QueryCache",
+    "CacheStats",
+]
+
+
+# ---------------------------------------------------------------------------
+# Source fingerprints
+# ---------------------------------------------------------------------------
+
+
+#: per-column sample size; columns up to 3× this hash in full
+_SAMPLE_ROWS = 1 << 16
+
+
+def _digest_column(h, col, sample_rows: int = _SAMPLE_ROWS) -> None:
+    """Full hash for small columns; head + tail + strided sample for large
+    ones, so fingerprinting stays O(sample) and a cache *hit* is cheap even
+    on multi-GB repositories.  Appends/truncations always change the shape
+    (hashed); an in-place edit of a large column is caught only if it lands
+    in the sample — same tradeoff as the memmap fingerprint."""
+    arr = np.ascontiguousarray(col)
+    h.update(str(arr.dtype).encode())
+    h.update(str(arr.shape).encode())
+    n = arr.shape[0]
+    if n <= 3 * sample_rows:
+        h.update(arr.tobytes())
+        return
+    h.update(arr[:sample_rows].tobytes())
+    h.update(arr[-sample_rows:].tobytes())
+    stride = max(n // sample_rows, 1)
+    h.update(np.ascontiguousarray(arr[::stride]).tobytes())
+
+
+def fingerprint_repository(repo: EventRepository) -> str:
+    h = hashlib.sha256()
+    for col in (repo.event_activity, repo.event_trace, repo.event_time,
+                repo.trace_log):
+        _digest_column(h, col)
+    h.update(json.dumps(
+        [repo.activity_names, len(repo.trace_names), repo.log_names]
+    ).encode())
+    return "repo:" + h.hexdigest()[:32]
+
+
+def fingerprint_memmap(log: MemmapLog, sample_rows: int = 4096) -> str:
+    """O(sample) digest: meta + column file sizes + head/tail row samples.
+    Appending rows changes ``num_events``/file sizes; editing in place is
+    caught for the sampled ranges (full-file hashing would defeat the
+    out-of-core design)."""
+    h = hashlib.sha256()
+    h.update(json.dumps([
+        log.num_events, log.num_activities, log.num_traces, log.chunk_rows,
+    ]).encode())
+    for name in ("activity.i32", "case.i32", "time.f64"):
+        h.update(str(os.path.getsize(os.path.join(log.path, name))).encode())
+    k = min(sample_rows, log.num_events)
+    for col in (log.activity, log.case, log.time):
+        h.update(np.asarray(col[:k]).tobytes())
+        h.update(np.asarray(col[log.num_events - k:]).tobytes())
+    return "memmap:" + h.hexdigest()[:32]
+
+
+def fingerprint(source) -> str:
+    if isinstance(source, EventRepository):
+        return fingerprint_repository(source)
+    if isinstance(source, MemmapLog):
+        return fingerprint_memmap(source)
+    raise TypeError(f"cannot fingerprint {type(source).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# LRU result cache
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    invalidations: int = 0
+
+
+def _copy_result(result):
+    """Deep-enough copy: fresh arrays, shared immutable plan objects."""
+    out = copy.copy(result)
+    value = result.value
+    if isinstance(value, np.ndarray):
+        out.value = value.copy()
+    else:
+        out.value = copy.deepcopy(value)
+    if result.names is not None:
+        out.names = list(result.names)
+    return out
+
+
+class QueryCache:
+    """LRU over (fingerprint, plan_key) → QueryResult.  Thread-safe: the
+    serving layer shares one cache across concurrent tenants."""
+
+    def __init__(self, max_entries: int = 256):
+        self.max_entries = max_entries
+        self._entries: "OrderedDict[Tuple[str, str], object]" = OrderedDict()
+        self.stats = CacheStats()
+        self._lock = threading.Lock()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def get(self, key: Tuple[str, str]):
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.stats.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return _copy_result(entry)
+
+    def put(self, key: Tuple[str, str], result) -> None:
+        entry = _copy_result(result)
+        with self._lock:
+            self._entries[key] = entry
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+
+    def invalidate_source(self, fp: str) -> int:
+        """Drop every entry for one source fingerprint (explicit refresh)."""
+        with self._lock:
+            dead = [k for k in self._entries if k[0] == fp]
+            for k in dead:
+                del self._entries[k]
+            self.stats.invalidations += len(dead)
+            return len(dead)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()

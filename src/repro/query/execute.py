@@ -1,0 +1,534 @@
+"""Query execution: one engine, every physical backend.
+
+``QueryEngine.run`` takes a fluent :class:`~repro.query.ast.Query` plus a
+sink, canonicalizes the logical plan (:mod:`repro.query.optimize`), consults
+the plan/result cache (:mod:`repro.query.cache`), picks a physical plan
+(:mod:`repro.query.planner`), and dispatches to the repo's existing
+execution primitives:
+
+* ``dfg_numpy`` / ``dfg`` (scatter | onehot | pallas) on pair columns,
+* the fused ``dfg_count_diced`` Pallas kernel when the window pushes into
+  the kernel's WHERE clause,
+* ``streaming_dfg`` over a :class:`MemmapLog` with the time window pushed
+  to a row range via the chunk time index,
+* ``distributed_dfg`` over a device mesh.
+
+Every path produces counts bit-identical to the corresponding direct
+single-backend call — the equivalence tests pin this against the paper's
+Algorithm 1 oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dfg import dfg, dfg_numpy
+from repro.core.dicing import dice_repository, pair_mask_for_window
+from repro.core.distributed import distributed_dfg
+from repro.core.repository import EventRepository
+from repro.core.streaming import MemmapLog, streaming_dfg
+from repro.core.variants import trace_variants, variant_filtered_repository
+from repro.core.views import HIDDEN
+
+from .ast import (
+    Activities,
+    ApplyView,
+    DFGSink,
+    HistogramSink,
+    LogicalPlan,
+    Query,
+    QueryPlanError,
+    Sink,
+    TopVariants,
+    VariantsSink,
+    Window,
+    is_barrier,
+)
+from .cache import QueryCache, fingerprint
+from .optimize import canonicalize, compose_views
+from .planner import (
+    MEMORY_BUDGET_EVENTS,
+    TINY_PAIRS,
+    PhysicalPlan,
+    SourceInfo,
+    plan_physical,
+    source_info,
+)
+
+__all__ = [
+    "QueryResult",
+    "EngineStats",
+    "QueryEngine",
+    "default_engine",
+    "set_default_engine",
+    "memmap_activity_names",
+    "repository_from_memmap",
+]
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """What a terminal query call returns.
+
+    ``value`` is the sink's payload (Ψ matrix, histogram vector, or
+    :class:`TraceVariants`); ``names`` labels its activity axis where that
+    makes sense (None for variants).
+    """
+
+    value: object
+    names: Optional[List[str]]
+    logical: LogicalPlan
+    physical: PhysicalPlan
+    from_cache: bool
+    wall_s: float
+    rewrites: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass
+class EngineStats:
+    queries: int = 0
+    executions: int = 0  # backend runs (cache misses)
+    cache_hits: int = 0
+
+
+def memmap_activity_names(log: MemmapLog) -> List[str]:
+    """MemmapLog stores integer activity ids; the engine labels them the
+    same way the mining CLI does."""
+    return [f"act_{i:03d}" for i in range(log.num_activities)]
+
+
+def repository_from_memmap(log: MemmapLog) -> EventRepository:
+    """Materialize an in-budget memmap log as a canonical EventRepository.
+
+    Stays numeric end to end (no per-event Python strings): the columns are
+    already int32/float64, so canonicalization is one lexsort + one unique.
+    The planner's budget gate keeps this O(memory_budget_events).
+    """
+    acts, cases, times = [], [], []
+    for a, c, t in log.iter_chunks():
+        acts.append(a)
+        cases.append(c)
+        times.append(t)
+    a = np.concatenate(acts) if acts else np.zeros((0,), np.int32)
+    c = np.concatenate(cases) if cases else np.zeros((0,), np.int32)
+    t = np.concatenate(times) if times else np.zeros((0,), np.float64)
+    n = a.shape[0]
+    # canonical order: trace-contiguous, time-sorted within trace, stable
+    order = np.lexsort((np.arange(n), t, c))
+    a, c, t = a[order], c[order], t[order]
+    uniq_cases, trace_col = np.unique(c, return_inverse=True)
+    return EventRepository(
+        event_activity=a.astype(np.int32),
+        event_trace=trace_col.astype(np.int32),
+        event_time=t,
+        trace_log=np.zeros(uniq_cases.shape[0], dtype=np.int32),
+        activity_names=memmap_activity_names(log),
+        trace_names=[f"case_{int(x)}" for x in uniq_cases],
+        log_names=["l1"],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Collected per-plan execution state
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Collected:
+    repo: Optional[EventRepository]
+    window: Optional[Window] = None
+    keep: Optional[Tuple[str, ...]] = None
+    view: Optional[ApplyView] = None
+
+
+def _validate_keep(keep, names) -> None:
+    unknown = set(keep) - set(names)
+    if unknown:
+        raise QueryPlanError(f"unknown activities in filter: {sorted(unknown)}")
+
+
+def _collect(repo: Optional[EventRepository], logical: LogicalPlan) -> _Collected:
+    """Apply materializing ops in order; fold pure predicates.
+
+    Pure predicates (Window / paper-semantics Activities) are WHERE clauses
+    evaluated at the sink; materializing ops (TopVariants, relink dicing)
+    transform the store they are chained on.
+
+    The folding here is not redundant with :func:`canonicalize`: the
+    optimizer fuses predicates only *within* a barrier-free segment (it
+    cannot reorder across barriers without proving commutation), while at
+    execution time predicates from every segment land on the same sink and
+    may be intersected — ``window(a,b) → top_variants(k) → window(c,d)``
+    reaches here as two Window ops.
+    """
+    st = _Collected(repo=repo)
+    for op in logical.ops:
+        if isinstance(op, (TopVariants, Activities)) and is_barrier(op):
+            if st.view is not None:
+                # naive left-to-right semantics would materialize the
+                # *projected* store; we don't relabel repositories, so
+                # silently ranking/filtering raw activities instead would
+                # break the bit-identical contract
+                raise QueryPlanError(
+                    "view() before a materializing op (top_variants / "
+                    "relink) is not supported: apply the view last"
+                )
+        if isinstance(op, TopVariants):
+            st.repo = variant_filtered_repository(st.repo, op.k)
+        elif isinstance(op, Activities) and op.relink:
+            _validate_keep(op.keep, st.repo.activity_names)
+            st.repo = dice_repository(st.repo, activities=list(op.keep))
+        elif isinstance(op, Window):
+            st.window = (
+                op if st.window is None
+                else Window(max(st.window.t0, op.t0), min(st.window.t1, op.t1))
+            )
+        elif isinstance(op, Activities):
+            if st.view is not None:
+                raise QueryPlanError(
+                    "activities() after view() is not supported: filters "
+                    "name raw activities; apply them before the view"
+                )
+            st.keep = (
+                op.keep if st.keep is None
+                else tuple(sorted(set(st.keep) & set(op.keep)))
+            )
+        elif isinstance(op, ApplyView):
+            st.view = op if st.view is None else compose_views(st.view, op)
+        else:
+            raise QueryPlanError(f"unknown op {op!r}")
+    return st
+
+
+def _zero_outside(psi: np.ndarray, keep_ids: np.ndarray) -> np.ndarray:
+    mask = np.zeros(psi.shape[0], dtype=bool)
+    mask[keep_ids] = True
+    out = psi.copy()
+    out[~mask, :] = 0
+    out[:, ~mask] = 0
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+class QueryEngine:
+    """Plans, caches, and executes logical query plans in-store."""
+
+    def __init__(
+        self,
+        *,
+        mesh=None,
+        tiny_pairs: int = TINY_PAIRS,
+        memory_budget_events: int = MEMORY_BUDGET_EVENTS,
+        fused_dicing: bool = True,
+        cache: Optional[QueryCache] = None,
+    ):
+        self.mesh = mesh
+        self.tiny_pairs = tiny_pairs
+        self.memory_budget_events = memory_budget_events
+        # the fused Pallas WHERE clause compares f32 timestamps; leave it on
+        # unless your timestamps do not round-trip through f32
+        self.fused_dicing = fused_dicing
+        self.cache = cache if cache is not None else QueryCache()
+        self.stats = EngineStats()
+        # physical plans depend only on (canonical plan, source shape), not
+        # on data bytes — keying on SourceInfo instead of the fingerprint
+        # avoids one stale entry per append; LRU-bounded like the cache
+        self._plans: "OrderedDict[Tuple[str, SourceInfo], PhysicalPlan]" = (
+            OrderedDict()
+        )
+        self._max_plans = 512
+        # most-recent materialized memmap repo, keyed by source fingerprint:
+        # distinct cache-missed plans over one unchanged log share one load
+        self._repo_memo: Optional[Tuple[str, EventRepository]] = None
+        self._lock = threading.Lock()
+
+    # -- public --------------------------------------------------------------
+    def run(self, query: Query, sink: Sink) -> QueryResult:
+        with self._lock:
+            self.stats.queries += 1
+        info = source_info(query.source)
+        logical, rewrites = canonicalize(
+            query.logical_plan(sink), info.activity_names
+        )
+        key = (fingerprint(query.source), logical.key())
+        cached = self.cache.get(key)
+        if cached is not None:
+            cached.from_cache = True
+            with self._lock:
+                self.stats.cache_hits += 1
+            return cached
+
+        plan_key = (logical.key(), info)
+        with self._lock:
+            physical = self._plans.get(plan_key)
+            if physical is not None:
+                self._plans.move_to_end(plan_key)
+        if physical is None:
+            physical = plan_physical(
+                logical, info,
+                mesh=self.mesh,
+                tiny_pairs=self.tiny_pairs,
+                memory_budget_events=self.memory_budget_events,
+                fused_dicing=self.fused_dicing,
+            )
+            with self._lock:
+                self._plans[plan_key] = physical
+                while len(self._plans) > self._max_plans:
+                    self._plans.popitem(last=False)
+
+        t0 = time.perf_counter()
+        value, names = self._execute(
+            query.source, logical, physical, source_fp=key[0]
+        )
+        wall = time.perf_counter() - t0
+        with self._lock:
+            self.stats.executions += 1
+        result = QueryResult(
+            value=value, names=names, logical=logical, physical=physical,
+            from_cache=False, wall_s=wall, rewrites=tuple(rewrites),
+        )
+        self.cache.put(key, result)
+        return result
+
+    def explain(self, query: Query, sink: Sink) -> str:
+        info = source_info(query.source)
+        logical, rewrites = canonicalize(
+            query.logical_plan(sink), info.activity_names
+        )
+        physical = plan_physical(
+            logical, info,
+            mesh=self.mesh,
+            tiny_pairs=self.tiny_pairs,
+            memory_budget_events=self.memory_budget_events,
+            fused_dicing=self.fused_dicing,
+        )
+        lines = [
+            f"logical : {logical.describe()}",
+            f"rewrites: {', '.join(rewrites) if rewrites else '(none)'}",
+            f"physical: {physical.describe()}",
+            f"plan key: {logical.key()}",
+        ]
+        return "\n".join(lines)
+
+    # -- execution -----------------------------------------------------------
+    def _execute(
+        self, source, logical: LogicalPlan, physical: PhysicalPlan,
+        source_fp: Optional[str] = None,
+    ):
+        if physical.backend == "streaming":
+            return self._execute_streaming(source, logical, physical)
+        repo = (
+            self._materialize(source, source_fp)
+            if logical.source == "memmap"
+            else source
+        )
+        st = _collect(repo, logical)
+        if st.keep is not None:
+            _validate_keep(st.keep, st.repo.activity_names)
+        if isinstance(logical.sink, DFGSink):
+            return self._dfg_on_repo(st, logical, physical)
+        if isinstance(logical.sink, HistogramSink):
+            return self._histogram_on_repo(st)
+        if isinstance(logical.sink, VariantsSink):
+            return self._variants_on_repo(st, logical.sink)
+        raise QueryPlanError(f"unknown sink {logical.sink!r}")
+
+    def _materialize(self, log: MemmapLog, fp: Optional[str]) -> EventRepository:
+        with self._lock:
+            memo = self._repo_memo
+        if memo is not None and fp is not None and memo[0] == fp:
+            return memo[1]
+        repo = repository_from_memmap(log)
+        if fp is not None:
+            with self._lock:
+                self._repo_memo = (fp, repo)
+        return repo
+
+    def _dfg_on_repo(
+        self, st: _Collected, logical: LogicalPlan, physical: PhysicalPlan
+    ):
+        repo = st.repo
+        names = list(repo.activity_names)
+        src, dst, valid = repo.df_pairs()
+        window_fused = physical.fused_dicing and st.window is not None
+
+        if st.window is not None and not window_fused:
+            valid = valid & pair_mask_for_window(repo, (st.window.t0, st.window.t1))
+        keep_ids = None
+        if st.keep is not None:
+            keep_ids = np.asarray(
+                [names.index(a) for a in st.keep], dtype=np.int64
+            )
+            if not physical.activities_as_output_mask:
+                m = np.isin(repo.event_activity, keep_ids)
+                if m.shape[0] >= 2:
+                    valid = valid & m[:-1] & m[1:]
+
+        if physical.view_pushdown:
+            g, labels = st.view.to_view().group_matrix(names)
+            gmap = np.argmax(g, axis=1).astype(np.int32)
+            src, dst = gmap[src], gmap[dst]
+            a_count = len(labels)
+        else:
+            a_count = repo.num_activities
+
+        psi = self._count(src, dst, valid, a_count, st, physical, repo)
+
+        if physical.view_pushdown:
+            vis = [i for i, l in enumerate(labels) if l != HIDDEN]
+            return psi[np.ix_(vis, vis)], [labels[i] for i in vis]
+        if keep_ids is not None and physical.activities_as_output_mask:
+            psi = _zero_outside(psi, keep_ids)
+        if st.view is not None:
+            view = st.view.to_view()
+            return view.apply_to_dfg(psi, names), view.visible_names(names)
+        return psi, names
+
+    def _count(
+        self, src, dst, valid, a_count, st: _Collected,
+        physical: PhysicalPlan, repo: EventRepository,
+    ) -> np.ndarray:
+        backend = physical.backend
+        if backend == "numpy":
+            return dfg_numpy(
+                np.asarray(src), np.asarray(dst), np.asarray(valid), a_count
+            )
+        if backend == "distributed":
+            return distributed_dfg(
+                self.mesh, np.asarray(src, np.int32), np.asarray(dst, np.int32),
+                np.asarray(valid, bool), a_count,
+            )
+        if backend == "pallas" and physical.fused_dicing and st.window is not None:
+            from repro.kernels.dfg_count import ops as _ops
+
+            ts = repo.event_time
+            out = _ops.dfg_count_diced(
+                np.asarray(src, np.int32), np.asarray(dst, np.int32),
+                np.asarray(valid, bool),
+                ts[:-1], ts[1:],
+                np.asarray([st.window.t0, st.window.t1]),
+                num_activities=a_count,
+            )
+            return np.asarray(out, dtype=np.int64)
+        return dfg(src, dst, valid, a_count, backend=backend)
+
+    def _histogram_on_repo(self, st: _Collected):
+        repo = st.repo
+        names = list(repo.activity_names)
+        mask = np.ones(repo.num_events, dtype=bool)
+        if st.window is not None:
+            ts = repo.event_time
+            mask &= (ts >= st.window.t0) & (ts < st.window.t1)
+        counts = np.bincount(
+            repo.event_activity[mask], minlength=repo.num_activities
+        ).astype(np.int64)
+        if st.keep is not None:
+            keep_ids = np.asarray([names.index(a) for a in st.keep], np.int64)
+            km = np.zeros(repo.num_activities, dtype=bool)
+            km[keep_ids] = True
+            counts = np.where(km, counts, 0)
+        if st.view is not None:
+            view = st.view.to_view()
+            g, labels = view.group_matrix(names)
+            counts = counts @ g
+            vis = [i for i, l in enumerate(labels) if l != HIDDEN]
+            return counts[vis], [labels[i] for i in vis]
+        return counts, names
+
+    def _variants_on_repo(self, st: _Collected, sink: VariantsSink):
+        if st.view is not None:
+            raise QueryPlanError("view() is not supported for variants()")
+        repo = st.repo
+        # for a variant table, pure predicates must change the *sequences*,
+        # so they are executed with re-linking semantics here
+        if st.window is not None or st.keep is not None:
+            repo = dice_repository(
+                repo,
+                time_window=(
+                    (st.window.t0, st.window.t1) if st.window else None
+                ),
+                activities=list(st.keep) if st.keep else None,
+            )
+        tv = trace_variants(repo)
+        if sink.k is not None:
+            tv = dataclasses.replace(
+                tv, counts=tv.counts[: sink.k],
+                sequences=tv.sequences[: sink.k],
+            )
+        return tv, None
+
+    # -- streaming (out-of-core) ---------------------------------------------
+    def _execute_streaming(
+        self, log: MemmapLog, logical: LogicalPlan, physical: PhysicalPlan
+    ):
+        names = memmap_activity_names(log)
+        st = _collect(None, logical)  # plan guarantees no barriers here
+        if st.keep is not None:
+            _validate_keep(st.keep, names)
+        # the planner owns the row-range pushdown decision; consume it here
+        # so describe()/explain() always reflect what actually runs
+        window = physical.row_range_window
+        if isinstance(logical.sink, DFGSink):
+            psi = streaming_dfg(log, time_window=window)
+            if st.keep is not None:
+                keep_ids = np.asarray(
+                    [names.index(a) for a in st.keep], np.int64
+                )
+                psi = _zero_outside(psi, keep_ids)
+            if st.view is not None:
+                view = st.view.to_view()
+                return view.apply_to_dfg(psi, names), view.visible_names(names)
+            return psi, names
+        if isinstance(logical.sink, HistogramSink):
+            rng = log.rows_for_window(*window) if window else None
+            counts = np.zeros(log.num_activities, dtype=np.int64)
+            for a, _, _ in log.iter_chunks(row_range=rng):
+                counts += np.bincount(a, minlength=log.num_activities)
+            if st.keep is not None:
+                keep_ids = np.asarray(
+                    [names.index(a) for a in st.keep], np.int64
+                )
+                km = np.zeros(log.num_activities, dtype=bool)
+                km[keep_ids] = True
+                counts = np.where(km, counts, 0)
+            if st.view is not None:
+                view = st.view.to_view()
+                g, labels = view.group_matrix(names)
+                counts = counts @ g
+                vis = [i for i, l in enumerate(labels) if l != HIDDEN]
+                return counts[vis], [labels[i] for i in vis]
+            return counts, names
+        raise QueryPlanError(
+            f"sink {type(logical.sink).__name__} has no streaming path"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Shared default engine
+# ---------------------------------------------------------------------------
+
+_DEFAULT: Optional[QueryEngine] = None
+
+
+def default_engine() -> QueryEngine:
+    """Process-wide engine (and cache) used by ``Q`` terminals unless a
+    query pins its own via :meth:`Query.using`."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = QueryEngine()
+    return _DEFAULT
+
+
+def set_default_engine(engine: Optional[QueryEngine]) -> None:
+    global _DEFAULT
+    _DEFAULT = engine

@@ -1,0 +1,266 @@
+"""Physical planning — pick the execution backend and the pushdowns.
+
+The cost model is deliberately small (the paper's point is that the *store*
+picks the strategy, not the analyst):
+
+========================  =====================================================
+situation                 physical operator
+========================  =====================================================
+memmap log > budget       ``streaming`` scan (O(A²+chunk) memory), window
+                          pushed to a **row range** via the chunk time index
+memmap log ≤ budget       materialize once, then the device path below
+tiny input (≤ tiny_pairs) ``numpy`` scatter-add — beats device dispatch
+                          overhead by orders of magnitude at this size
+mesh available            ``distributed`` shard_map + psum over every axis
+CPU default backend       ``scatter`` (jnp .at[].add)
+TPU/GPU                   ``pallas`` MXU kernel; a time window fuses into the
+                          kernel's WHERE clause (``dfg_count_diced``)
+========================  =====================================================
+
+Pushdown decisions recorded on the :class:`PhysicalPlan`:
+
+* ``row_range`` — the memmap chunk-time-index dice (paper Experiment 2);
+* ``fused_dicing`` — window evaluated inside the Pallas kernel (f32
+  timestamps; requires f32-exact times for bit-identity, which the engine's
+  ``fused_dicing`` flag gates);
+* ``view_pushdown`` — when the projection shrinks the activity set, relabel
+  pair columns to group ids *before* counting so the matmul/count runs at
+  G×G instead of A×A;
+* ``activities_as_output_mask`` — a paper-semantics activity filter commutes
+  past counting: Ψ restricted to keep×keep equals counting masked pairs, so
+  the filter becomes a free O(A²) mask on the result instead of an O(E)
+  pair predicate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+
+from repro.core.repository import EventRepository
+from repro.core.streaming import MemmapLog
+
+from .ast import (
+    Activities,
+    ApplyView,
+    DFGSink,
+    HistogramSink,
+    LogicalPlan,
+    QueryPlanError,
+    VariantsSink,
+    Window,
+    is_barrier,
+)
+
+__all__ = ["SourceInfo", "PhysicalPlan", "source_info", "plan_physical"]
+
+#: below this many pairs, numpy beats any device dispatch
+TINY_PAIRS = 2048
+#: above this many events a memmap log is mined out-of-core
+MEMORY_BUDGET_EVENTS = 1 << 22
+
+_DFG_BACKENDS = {
+    "auto", "numpy", "scatter", "onehot", "pallas", "streaming", "distributed",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SourceInfo:
+    kind: str  # "repository" | "memmap"
+    num_events: int
+    num_pairs: int
+    num_activities: int
+    activity_names: Optional[Tuple[str, ...]]
+
+
+def source_info(source) -> SourceInfo:
+    if isinstance(source, EventRepository):
+        return SourceInfo(
+            kind="repository",
+            num_events=source.num_events,
+            num_pairs=max(source.num_events - 1, 0),
+            num_activities=source.num_activities,
+            activity_names=tuple(source.activity_names),
+        )
+    if isinstance(source, MemmapLog):
+        return SourceInfo(
+            kind="memmap",
+            num_events=source.num_events,
+            num_pairs=max(source.num_events - 1, 0),
+            num_activities=source.num_activities,
+            activity_names=None,
+        )
+    raise QueryPlanError(f"unsupported source {type(source).__name__}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PhysicalPlan:
+    backend: str  # numpy | scatter | onehot | pallas | streaming | distributed
+    materialize: bool = False  # memmap source loaded into memory first
+    row_range_window: Optional[Tuple[float, float]] = None
+    fused_dicing: bool = False
+    view_pushdown: bool = False
+    activities_as_output_mask: bool = False
+    notes: Tuple[str, ...] = ()
+
+    def describe(self) -> str:
+        parts = [f"backend={self.backend}"]
+        if self.materialize:
+            parts.append("materialize=memmap→memory")
+        if self.row_range_window is not None:
+            parts.append("pushdown=row_range(chunk time index)")
+        if self.fused_dicing:
+            parts.append("pushdown=fused_pallas_dicing")
+        if self.view_pushdown:
+            parts.append("pushdown=view_below_count")
+        if self.activities_as_output_mask:
+            parts.append("rewrite=activity_filter→output_mask")
+        parts.extend(self.notes)
+        return ", ".join(parts)
+
+
+def _segment_features(plan: LogicalPlan):
+    """Ops of the final (post-barrier) segment + whether barriers exist."""
+    has_barrier = any(is_barrier(op) for op in plan.ops)
+    tail = []
+    for op in plan.ops:
+        if is_barrier(op):
+            tail = []
+        else:
+            tail.append(op)
+    window = next((o for o in tail if isinstance(o, Window)), None)
+    acts = next(
+        (o for o in tail if isinstance(o, Activities) and not o.relink), None
+    )
+    view = next((o for o in tail if isinstance(o, ApplyView)), None)
+    return has_barrier, window, acts, view
+
+
+def _device_backend(
+    num_pairs: int, *, mesh, tiny_pairs: int, requested: str
+) -> str:
+    if requested != "auto":
+        return requested
+    if mesh is not None and num_pairs > tiny_pairs:
+        return "distributed"
+    if num_pairs <= tiny_pairs:
+        return "numpy"
+    if jax.default_backend() == "cpu":
+        return "scatter"
+    return "pallas"
+
+
+def plan_physical(
+    plan: LogicalPlan,
+    info: SourceInfo,
+    *,
+    mesh=None,
+    tiny_pairs: int = TINY_PAIRS,
+    memory_budget_events: int = MEMORY_BUDGET_EVENTS,
+    fused_dicing: bool = True,
+) -> PhysicalPlan:
+    """Map a canonical logical plan to a physical one.  ``plan`` must be the
+    output of :func:`repro.query.optimize.canonicalize`."""
+    has_barrier, window, acts, view = _segment_features(plan)
+    notes = []
+
+    if isinstance(plan.sink, (HistogramSink, VariantsSink)):
+        needs_repo = isinstance(plan.sink, VariantsSink) or has_barrier
+        if info.kind == "memmap":
+            if not needs_repo:  # chunked bincount, window → row range
+                return PhysicalPlan(
+                    backend="streaming",
+                    row_range_window=(window.t0, window.t1) if window else None,
+                )
+            if info.num_events > memory_budget_events:
+                raise QueryPlanError(
+                    "variants / materializing ops on an out-of-core log "
+                    "exceed the memory budget; raise memory_budget_events "
+                    "or pre-dice the log"
+                )
+            return PhysicalPlan(backend="numpy", materialize=True)
+        return PhysicalPlan(backend="numpy")
+
+    # -- DFG sink ------------------------------------------------------------
+    requested = plan.sink.backend
+    if requested not in _DFG_BACKENDS:
+        raise QueryPlanError(f"unknown DFG backend {requested!r}")
+
+    if info.kind == "memmap":
+        if has_barrier:
+            if requested == "streaming":
+                raise QueryPlanError(
+                    "streaming cannot evaluate materializing ops "
+                    "(top_variants / relink)"
+                )
+            if info.num_events > memory_budget_events:
+                raise QueryPlanError(
+                    "materializing ops (top_variants / relink) on an "
+                    "out-of-core log exceed the memory budget"
+                )
+        if (
+            info.num_events > memory_budget_events
+            and requested not in ("auto", "streaming")
+        ):
+            raise QueryPlanError(
+                f"backend {requested!r} would materialize an out-of-core "
+                "log into memory; use streaming/auto or raise "
+                "memory_budget_events"
+            )
+        out_of_core = requested == "streaming" or (
+            requested == "auto" and info.num_events > memory_budget_events
+        )
+        out_of_core = out_of_core and not has_barrier
+        if out_of_core:
+            return PhysicalPlan(
+                backend="streaming",
+                row_range_window=(window.t0, window.t1) if window else None,
+                # streaming always post-masks the raw Ψ (before any view)
+                activities_as_output_mask=acts is not None,
+                notes=("streaming=O(A²+chunk) memory",),
+            )
+        backend = _device_backend(
+            info.num_pairs, mesh=mesh, tiny_pairs=tiny_pairs,
+            requested=requested,
+        )
+        materialize = True
+    else:
+        if requested == "streaming":
+            raise QueryPlanError(
+                "streaming backend requires a MemmapLog source"
+            )
+        backend = _device_backend(
+            info.num_pairs, mesh=mesh, tiny_pairs=tiny_pairs,
+            requested=requested,
+        )
+        materialize = False
+
+    if backend == "distributed" and mesh is None:
+        raise QueryPlanError("distributed backend requires a mesh")
+
+    view_pushdown = False
+    if view is not None and info.activity_names is not None:
+        labels = view.to_view().visible_labels(info.activity_names)
+        if len(labels) < info.num_activities:
+            view_pushdown = True
+            notes.append(f"count_space=G×G ({len(labels)}<{info.num_activities})")
+
+    fuse = (
+        fused_dicing
+        and backend == "pallas"
+        and window is not None
+        and not window.empty
+    )
+    return PhysicalPlan(
+        backend=backend,
+        materialize=materialize,
+        fused_dicing=fuse,
+        view_pushdown=view_pushdown,
+        # with a view pushdown the filter must stay a pair predicate (the
+        # result matrix is in group space, so raw-activity rows are gone);
+        # without it the mask applies to the raw Ψ before any projection
+        activities_as_output_mask=acts is not None and not view_pushdown,
+        notes=tuple(notes),
+    )

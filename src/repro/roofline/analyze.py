@@ -134,8 +134,10 @@ def analyze_compiled(compiled, cfg: ModelConfig, shape: ShapeConfig, mesh) -> Di
     recorded (``*_raw`` = uncorrected cost_analysis)."""
     from .hlo_model import HloModel
 
+    from repro.core.compat import cost_analysis
+
     chips = int(np.prod(list(mesh.shape.values())))
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis(compiled)
     flops_raw = float(cost.get("flops", 0.0))
     bytes_raw = float(cost.get("bytes accessed", 0.0))
 

@@ -1,3 +1,4 @@
 from .engine import GenerationResult, ServeEngine
+from .query_service import QueryService
 
-__all__ = ["GenerationResult", "ServeEngine"]
+__all__ = ["GenerationResult", "ServeEngine", "QueryService"]

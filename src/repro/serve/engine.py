@@ -52,7 +52,10 @@ class ServeEngine:
         self.q_chunk = q_chunk
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
-        self.collector = collector or EventCollector("server")
+        # explicit None check: an empty collector is falsy (len == 0)
+        self.collector = (
+            collector if collector is not None else EventCollector("server")
+        )
 
         self._prefill = jax.jit(
             lambda p, b, li: prefill(
@@ -81,6 +84,20 @@ class ServeEngine:
             wave = order[w0 : w0 + self.max_batch]
             self._run_wave(wave, prompts, results, max_new_tokens, stop_token)
         return [r for r in results if r is not None]
+
+    def mine_telemetry(self, time_window=None):
+        """Mine the engine's own runtime telemetry (wave/prefill/decode
+        spans) through the process-query engine.
+
+        Returns the :class:`repro.query.QueryResult` for the DFG of the
+        serving process — the fault/straggler forensics view.  Each wave is
+        one trace; a healthy engine's DFG is ``prefill → decode^k``."""
+        from repro.query import Q
+
+        q = Q.log(self.collector.to_repository())
+        if time_window is not None:
+            q = q.window(*time_window)
+        return q.dfg()
 
     def _run_wave(self, wave, prompts, results, max_new, stop_token):
         B = len(wave)

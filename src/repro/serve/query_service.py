@@ -1,0 +1,140 @@
+"""Multi-tenant process-query serving — the ROADMAP's "mining queries for
+millions of users" front door.
+
+A :class:`QueryService` owns a registry of named event stores (in-memory
+repositories and/or out-of-core memmap logs) and one shared
+:class:`~repro.query.execute.QueryEngine`, so every tenant's dashboard
+queries share the plan/result cache: the first analyst to ask for a diced
+DFG pays the scan, everyone after is O(1).
+
+The request surface is deliberately wire-friendly (dict in, dict out) so an
+HTTP/RPC layer can wrap it without touching engine internals::
+
+    svc = QueryService()
+    svc.register("bpi", repo)
+    out = svc.query({
+        "log": "bpi", "sink": "dfg",
+        "window": [t0, t1], "activities": ["a", "b"],
+    })
+    out["psi"], out["names"], out["from_cache"]
+
+Per-tenant access control reuses :class:`repro.core.views.AccessPolicy`:
+a policy registered with the log is enforced on every request (view
+projection applied in-plan, time dicing gated).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.views import AccessDenied, AccessPolicy
+from repro.query import Q, QueryEngine, QueryPlanError
+
+__all__ = ["QueryService"]
+
+
+class QueryService:
+    def __init__(self, engine: Optional[QueryEngine] = None):
+        self.engine = engine or QueryEngine()
+        self._logs: Dict[str, object] = {}
+        self._policies: Dict[str, Optional[AccessPolicy]] = {}
+        self._lock = threading.Lock()
+
+    # -- registry ------------------------------------------------------------
+    def register(
+        self, name: str, source, policy: Optional[AccessPolicy] = None
+    ) -> None:
+        """Attach a repository or memmap log under a tenant-visible name."""
+        with self._lock:
+            self._logs[name] = source
+            self._policies[name] = policy
+
+    def unregister(self, name: str) -> None:
+        with self._lock:
+            self._logs.pop(name, None)
+            self._policies.pop(name, None)
+
+    def logs(self):
+        with self._lock:
+            return sorted(self._logs)
+
+    # -- the serving endpoint -------------------------------------------------
+    def query(self, request: Dict) -> Dict:
+        """Execute one request dict; returns a JSON-shaped response dict."""
+        name = request.get("log")
+        with self._lock:
+            if name not in self._logs:
+                raise KeyError(f"unknown log {name!r}")
+            source = self._logs[name]
+            policy = self._policies[name]
+
+        has_view = policy is not None and policy.view is not None
+        floor = policy.min_group_count if policy is not None else 0
+
+        q = Q.log(source).using(self.engine)
+        if request.get("window") is not None:
+            if policy is not None and not policy.time_windows_allowed:
+                raise AccessDenied("time dicing not permitted by policy")
+            t0, t1 = request["window"]
+            q = q.window(float(t0), float(t1))
+        if request.get("activities") is not None:
+            if has_view:
+                # a raw-activity filter under a coarsening view would expose
+                # per-activity counts inside a group (and probe raw names)
+                raise AccessDenied(
+                    "activity filters name raw activities and are not "
+                    "permitted under a view policy"
+                )
+            q = q.activities(
+                request["activities"], relink=bool(request.get("relink", False))
+            )
+        if request.get("top_variants") is not None:
+            q = q.top_variants(int(request["top_variants"]))
+        if has_view:
+            q = q.view(policy.view)
+
+        sink = request.get("sink", "dfg")
+        if sink == "dfg":
+            res = q.dfg(backend=request.get("backend", "auto"))
+            psi = res.value
+            if floor:
+                psi = np.where(psi >= floor, psi, 0)
+            payload = {"psi": psi.tolist(), "names": res.names}
+        elif sink == "histogram":
+            res = q.histogram()
+            counts = res.value
+            if floor:
+                counts = np.where(counts >= floor, counts, 0)
+            payload = {"counts": counts.tolist(), "names": res.names}
+        elif sink == "variants":
+            if has_view:
+                # variant sequences spell out raw activity names
+                raise AccessDenied(
+                    "variants expose raw sequences and are not permitted "
+                    "under a view policy"
+                )
+            k = request.get("k")
+            res = q.variants(int(k) if k is not None else None)
+            tv = res.value
+            keep = (
+                tv.counts >= floor if floor
+                else np.ones(len(tv.counts), dtype=bool)
+            )
+            payload = {
+                "counts": tv.counts[keep].tolist(),
+                "sequences": [s for s, ok in zip(tv.sequences, keep) if ok],
+            }
+        else:
+            raise QueryPlanError(f"unknown sink {sink!r}")
+
+        payload.update({
+            "log": name,
+            "sink": sink,
+            "from_cache": res.from_cache,
+            "backend": res.physical.backend,
+            "wall_s": res.wall_s,
+        })
+        return payload

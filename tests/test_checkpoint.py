@@ -70,10 +70,9 @@ def test_elastic_restore_resharding(tmp_path):
     with target NamedSharding) is the same one a resized pod uses."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh(
-        (1,), ("data",), devices=jax.devices()[:1],
-        axis_types=(jax.sharding.AxisType.Auto,),
-    )
+    from repro.core.compat import make_mesh
+
+    mesh = make_mesh((1,), ("data",), devices=jax.devices()[:1])
     m = CheckpointManager(str(tmp_path), async_writes=False)
     t = {"w": jnp.arange(16.0).reshape(4, 4)}
     m.save(1, t)

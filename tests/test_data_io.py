@@ -4,6 +4,8 @@ import io
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import check_columnar, dfg_from_repository

@@ -22,11 +22,9 @@ from repro.data import ProcessSpec, generate_repository
 
 
 def _mesh_1d():
-    return jax.make_mesh(
-        (1,), ("data",),
-        devices=jax.devices()[:1],
-        axis_types=(jax.sharding.AxisType.Auto,),
-    )
+    from repro.core.compat import make_mesh
+
+    return make_mesh((1,), ("data",), devices=jax.devices()[:1])
 
 
 def _pairs(n_traces=400, a=13, seed=5):
@@ -71,9 +69,10 @@ def test_lower_distributed_dfg_has_reduction():
     lowered = lower_distributed_dfg(_mesh_1d(), 10_000, 64)
     txt = lowered.as_text()
     assert "shard_map" in txt or "psum" in txt or "all-reduce" in txt.lower() or True
+    from repro.core.compat import cost_analysis
+
     compiled = lowered.compile()
-    cost = compiled.cost_analysis()
-    assert cost.get("flops", 0) > 0
+    assert cost_analysis(compiled).get("flops", 0) > 0
 
 
 @pytest.mark.parametrize("n_pairs", [1, 63, 4096])

@@ -3,8 +3,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from repro.core.compat import make_mesh, shard_map
 from repro.train import ErrorFeedback, compressed_psum, dequantize, quantize
 
 
@@ -28,16 +32,14 @@ def test_quantize_property(seed, scale):
 
 
 def test_compressed_psum_single_device():
-    mesh = jax.make_mesh((1,), ("pod",), devices=jax.devices()[:1],
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("pod",), devices=jax.devices()[:1])
     g = jnp.asarray(np.random.default_rng(1).normal(size=(64,)), jnp.float32)
     out = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda x: compressed_psum(x, "pod"),
             mesh=mesh,
             in_specs=jax.sharding.PartitionSpec(None),
             out_specs=jax.sharding.PartitionSpec(None),
-            check_vma=False,
         )
     )(g)
     # N=1 → mean == dequantized value; bounded by quantization error only

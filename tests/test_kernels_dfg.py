@@ -4,6 +4,8 @@ tests, all in interpret mode on CPU (per the kernel-validation protocol)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.dfg_count import (

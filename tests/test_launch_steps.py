@@ -46,7 +46,9 @@ def test_train_step_lowers(arch, mesh):
     compiled = jax.jit(
         fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate
     ).lower(*args).compile()
-    assert compiled.cost_analysis().get("flops", 0) > 0
+    from repro.core.compat import cost_analysis
+
+    assert cost_analysis(compiled).get("flops", 0) > 0
 
 
 @pytest.mark.parametrize("arch", ["gemma2-9b", "mixtral-8x7b", "whisper-tiny"])

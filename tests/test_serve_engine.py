@@ -70,3 +70,16 @@ def test_telemetry_recorded(engine):
     repo = eng.collector.to_repository()
     acts = set(repo.activity_names)
     assert "prefill" in acts and "decode" in acts
+
+
+def test_mine_telemetry_through_query_engine(engine):
+    """The serving engine's self-forensics DFG goes through repro.query."""
+    cfg, params, eng = engine
+    eng.generate([[1, 2, 3], [4, 5]], max_new_tokens=3)
+    res = eng.mine_telemetry()
+    assert "prefill" in res.names and "decode" in res.names
+    # a healthy wave is prefill → decode → decode …: the prefill→decode
+    # edge must be present and decode must self-loop
+    p, d = res.names.index("prefill"), res.names.index("decode")
+    assert res.value[p, d] >= 1
+    assert res.value[d, d] >= 1

@@ -1,6 +1,9 @@
 """Trace-variant analysis (paper §5.2 spaghetti-model remedy)."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import EventRepository, check_columnar, dfg_from_repository
