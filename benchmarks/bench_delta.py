@@ -1,0 +1,125 @@
+"""Delta-plan benchmark: what does append-awareness buy a live dashboard?
+
+Appends 1% to a mined memmap log and re-issues the same queries three ways:
+
+* **recompute** — cold cache: the full O(E) streaming rescan every append
+  used to force;
+* **delta** — the engine proves the change append-only (prefix-preserving
+  fingerprint) and resumes the cached Ψ + open-case tails over just the
+  appended suffix;
+* **free rewrite** — a window entirely inside the old time range: the
+  append cannot touch it, the cached result is served without any scan.
+
+Emits CSV rows (and ``BENCH_delta.json``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+# runnable directly (`python benchmarks/bench_delta.py`) without PYTHONPATH
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+EVENTS = int(os.environ.get("BENCH_EVENTS", 2_000_000))
+APPEND_FRACTION = 0.01
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def run(write_json: bool = False) -> list:
+    """CSV rows; ``write_json=True`` (direct invocation only) also rewrites
+    the committed ``BENCH_delta.json`` record — the aggregator's reduced
+    ``--fast`` runs must not clobber it."""
+    from repro.core.streaming import streaming_dfg
+    from repro.data import ProcessSpec, generate_memmap_log
+    from repro.query import Q, QueryEngine
+
+    rows = []
+    tmp = tempfile.mkdtemp(prefix="graphpm_benchd_")
+    log = generate_memmap_log(
+        os.path.join(tmp, "log"), EVENTS,
+        ProcessSpec(num_activities=64, seed=23, horizon_days=120), seed=23,
+    )
+
+    eng = QueryEngine(memory_budget_events=0)  # streaming-first: resumable
+    _, cold_us = _timed(lambda: Q.log(log).using(eng).dfg())
+
+    # a windowed dashboard query over the middle half of the old horizon
+    ts = np.asarray(log.time)
+    w0 = float(np.quantile(ts, 0.25))
+    w1 = float(np.quantile(ts, 0.75))
+    _, win_cold_us = _timed(lambda: Q.log(log).using(eng).window(w0, w1).dfg())
+
+    # -- append 1% (time-ordered, reusing case ids → boundary pairs) ---------
+    n_app = max(int(EVENTS * APPEND_FRACTION), 1)
+    rng = np.random.default_rng(7)
+    act = rng.integers(0, log.num_activities, n_app).astype(np.int32)
+    case = rng.integers(0, log.num_traces, n_app).astype(np.int32)
+    times = float(log.time[-1]) + np.sort(rng.uniform(0.0, 3600.0, n_app))
+    grown, append_us = _timed(lambda: log.append(act, case, times))
+
+    # -- delta: suffix-only scan ---------------------------------------------
+    scan_before = eng.stats.rows_scanned
+    delta_res, delta_us = _timed(lambda: Q.log(grown).using(eng).dfg())
+    assert delta_res.physical.backend == "delta", delta_res.physical.describe()
+    rows_scanned_delta = eng.stats.rows_scanned - scan_before
+
+    # -- recompute: what a fingerprint-invalidated cache used to cost --------
+    cold_eng = QueryEngine(memory_budget_events=0)
+    full_res, recompute_us = _timed(lambda: Q.log(grown).using(cold_eng).dfg())
+    assert np.array_equal(delta_res.value, full_res.value)
+    assert np.array_equal(delta_res.value, streaming_dfg(grown))
+
+    speedup = recompute_us / max(delta_us, 1.0)
+    rows.append((
+        "delta_append_1pct", delta_us,
+        f"recompute_us={recompute_us:.0f};suffix_rows={n_app};"
+        f"speedup={speedup:.1f}x",
+    ))
+
+    # -- free rewrite: window predates the append ----------------------------
+    free_res, free_us = _timed(
+        lambda: Q.log(grown).using(eng).window(w0, w1).dfg()
+    )
+    assert free_res.from_cache and eng.stats.delta_free_hits >= 1
+    assert np.array_equal(
+        free_res.value, streaming_dfg(grown, time_window=(w0, w1))
+    )
+    rows.append((
+        "delta_free_rewrite", free_us,
+        f"cold_us={win_cold_us:.0f};win={win_cold_us / max(free_us, 1):.0f}x",
+    ))
+
+    if not write_json:
+        return rows
+    with open("BENCH_delta.json", "w") as f:
+        json.dump({
+            "events": grown.num_events,
+            "append_rows": n_app,
+            "cold_full_scan_us": cold_us,
+            "append_us": append_us,
+            "delta_us": delta_us,
+            "recompute_us": recompute_us,
+            "speedup_vs_recompute": speedup,
+            "windowed_cold_us": win_cold_us,
+            "free_rewrite_us": free_us,
+            "rows_scanned_delta": int(rows_scanned_delta),
+        }, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(write_json=True):
+        print(",".join(str(x) for x in r))

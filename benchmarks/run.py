@@ -11,6 +11,14 @@ import os
 import sys
 import time
 
+# `python benchmarks/run.py` (direct path) puts benchmarks/ itself on
+# sys.path instead of the repo root that `python -m benchmarks.run` gets
+# from the cwd; add the root (and src/, so PYTHONPATH=src is optional)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
 
 def main() -> None:
     if "--fast" in sys.argv:
@@ -18,6 +26,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     from benchmarks import (
+        bench_delta,
         bench_dfg_example,
         bench_dicing,
         bench_kernels,
@@ -32,6 +41,7 @@ def main() -> None:
         (bench_dicing, "fig5"),
         (bench_kernels, "kernels"),
         (bench_query_engine, "query"),
+        (bench_delta, "delta"),
         (roofline_table, "roofline"),
     ):
         try:

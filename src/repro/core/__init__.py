@@ -33,7 +33,13 @@ from .discovery import (
     to_dot,
 )
 from .baseline import InMemoryDFGBaseline, dfg_from_rows
-from .streaming import MemmapLog, StreamingDFGMiner, streaming_dfg
+from .streaming import (
+    MemmapLog,
+    MemmapLogWriter,
+    MinerState,
+    StreamingDFGMiner,
+    streaming_dfg,
+)
 from .distributed import distributed_dfg, lower_distributed_dfg, shard_pairs
 from .telemetry import EventCollector, StepTimer
 from .variants import TraceVariants, trace_variants, variant_filtered_repository
@@ -50,7 +56,8 @@ __all__ = [
     "DiscoveredModel", "dependency_matrix", "discover_dependency_graph",
     "filter_dfg", "footprint", "footprint_conformance", "to_dot",
     "InMemoryDFGBaseline", "dfg_from_rows",
-    "MemmapLog", "StreamingDFGMiner", "streaming_dfg",
+    "MemmapLog", "MemmapLogWriter", "MinerState", "StreamingDFGMiner",
+    "streaming_dfg",
     "distributed_dfg", "lower_distributed_dfg", "shard_pairs",
     "EventCollector", "StepTimer",
     "TraceVariants", "trace_variants", "variant_filtered_repository",

@@ -27,7 +27,13 @@ import numpy as np
 
 from .dfg import dfg_numpy
 
-__all__ = ["MemmapLog", "StreamingDFGMiner", "streaming_dfg"]
+__all__ = [
+    "MemmapLog",
+    "MemmapLogWriter",
+    "MinerState",
+    "StreamingDFGMiner",
+    "streaming_dfg",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -111,11 +117,34 @@ class MemmapLog:
         hi = int(np.searchsorted(self.time, t1, side="left"))
         return lo, hi
 
+    # -- growing ------------------------------------------------------------
+    def append(
+        self, activity: np.ndarray, case: np.ndarray, time: np.ndarray
+    ) -> "MemmapLog":
+        """Grow this log on disk by one time-ordered batch and return a
+        freshly opened handle.  This instance keeps viewing the old row
+        count — reopen (or use the returned log) to see the appended rows."""
+        w = MemmapLogWriter.open_append(self.path)
+        w.append(activity, case, time)
+        return w.close()
+
 
 class MemmapLogWriter:
+    """Writes the disk tier.  Two modes:
+
+    * **create** (constructor) — preallocates the three column files for a
+      known ``num_events`` and fills them front to back;
+    * **append** (:meth:`open_append`) — grows an *existing* log's column
+      files and rewrites ``meta.json`` on close.  Appended rows must keep
+      the stream time-ordered (nondecreasing, starting at or after the last
+      stored timestamp): the chunk time index and the engine's append-only
+      delta plans both rely on that invariant.
+    """
+
     def __init__(self, path, num_events, num_activities, num_traces, chunk_rows):
         os.makedirs(path, exist_ok=True)
         self.path = path
+        self.mode = "create"
         self.meta = dict(
             num_events=num_events,
             num_activities=num_activities,
@@ -136,8 +165,69 @@ class MemmapLogWriter:
         )
         self.cursor = 0
 
+    @classmethod
+    def open_append(cls, path: str) -> "MemmapLogWriter":
+        """Open an existing log for append-only growth.
+
+        New activity / case ids may exceed the stored vocabularies —
+        ``num_activities`` / ``num_traces`` grow accordingly on close.
+        """
+        w = object.__new__(cls)
+        w.path = path
+        with open(os.path.join(path, "meta.json")) as f:
+            w.meta = json.load(f)
+        w.mode = "append"
+        w.cursor = w.meta["num_events"]
+        # an aborted earlier append (writer discarded before close, e.g. on
+        # a time-order error) leaves orphan bytes past the committed row
+        # count; truncate them or they would silently misalign this append
+        for name, itemsize in (("activity.i32", 4), ("case.i32", 4),
+                               ("time.f64", 8)):
+            fpath = os.path.join(path, name)
+            committed = w.cursor * itemsize
+            if os.path.getsize(fpath) > committed:
+                os.truncate(fpath, committed)
+        w._files = {
+            "activity": open(os.path.join(path, "activity.i32"), "ab"),
+            "case": open(os.path.join(path, "case.i32"), "ab"),
+            "time": open(os.path.join(path, "time.f64"), "ab"),
+        }
+        w._max_activity = w.meta["num_activities"] - 1
+        w._max_case = w.meta["num_traces"] - 1
+        n = w.meta["num_events"]
+        if n:
+            tail = np.memmap(
+                os.path.join(path, "time.f64"), dtype=np.float64, mode="r",
+                shape=(n,),
+            )
+            w._last_time = float(tail[-1])
+            del tail
+        else:
+            w._last_time = -np.inf
+        return w
+
     def append(self, activity: np.ndarray, case: np.ndarray, time: np.ndarray):
+        activity = np.ascontiguousarray(activity, dtype=np.int32)
+        case = np.ascontiguousarray(case, dtype=np.int32)
+        time = np.ascontiguousarray(time, dtype=np.float64)
         n = activity.shape[0]
+        if n == 0:
+            return
+        if self.mode == "append":
+            if float(time[0]) < self._last_time or (np.diff(time) < 0).any():
+                raise ValueError(
+                    "appended rows must keep the stream time-ordered: "
+                    f"batch starts at {float(time[0])} but the log ends at "
+                    f"{self._last_time}"
+                )
+            self._files["activity"].write(activity.tobytes())
+            self._files["case"].write(case.tobytes())
+            self._files["time"].write(time.tobytes())
+            self._last_time = float(time[-1])
+            self._max_activity = max(self._max_activity, int(activity.max()))
+            self._max_case = max(self._max_case, int(case.max()))
+            self.cursor += n
+            return
         s = self.cursor
         self.activity[s : s + n] = activity
         self.case[s : s + n] = case
@@ -145,6 +235,20 @@ class MemmapLogWriter:
         self.cursor += n
 
     def close(self) -> MemmapLog:
+        if self.mode == "append":
+            for f in self._files.values():
+                f.flush()
+                f.close()
+            self.meta["num_events"] = self.cursor
+            self.meta["num_activities"] = max(
+                self.meta["num_activities"], self._max_activity + 1
+            )
+            self.meta["num_traces"] = max(
+                self.meta["num_traces"], self._max_case + 1
+            )
+            with open(os.path.join(self.path, "meta.json"), "w") as f:
+                json.dump(self.meta, f)
+            return MemmapLog.open(self.path)
         assert self.cursor == self.meta["num_events"], (
             f"wrote {self.cursor} of {self.meta['num_events']} rows"
         )
@@ -162,6 +266,25 @@ class MemmapLogWriter:
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass
+class MinerState:
+    """Resumable snapshot of a :class:`StreamingDFGMiner` — everything the
+    incremental-maintenance path needs to continue a scan later: the Ψ
+    counts, the last activity per open case (so pairs straddling the resume
+    boundary are linked), and the consumed-row count."""
+
+    psi: np.ndarray
+    last_by_case: Dict[int, int]
+    events_seen: int
+
+    @property
+    def num_activities(self) -> int:
+        return int(self.psi.shape[0])
+
+    def copy(self) -> "MinerState":
+        return MinerState(self.psi.copy(), dict(self.last_by_case), self.events_seen)
+
+
 class StreamingDFGMiner:
     """Incremental DFG over a time-ordered event stream with interleaved
     traces.  State: the (A, A) count matrix + one (activity, time) per *open*
@@ -176,6 +299,28 @@ class StreamingDFGMiner:
         self.psi = np.zeros((num_activities, num_activities), dtype=np.int64)
         self.last_by_case: Dict[int, int] = {}
         self.events_seen = 0
+
+    def snapshot(self) -> MinerState:
+        """Copy out the resumable state (safe to cache across appends)."""
+        return MinerState(self.psi.copy(), dict(self.last_by_case), self.events_seen)
+
+    @classmethod
+    def restore(
+        cls, state: MinerState, num_activities: Optional[int] = None
+    ) -> "StreamingDFGMiner":
+        """Resume from a snapshot.  A grown activity vocabulary pads Ψ with
+        zero rows/columns; shrinking is not an append and is rejected."""
+        a = state.num_activities if num_activities is None else int(num_activities)
+        if a < state.num_activities:
+            raise ValueError(
+                f"cannot shrink the vocabulary on resume "
+                f"({state.num_activities} -> {a})"
+            )
+        miner = cls(a)
+        miner.psi[: state.num_activities, : state.num_activities] = state.psi
+        miner.last_by_case = dict(state.last_by_case)
+        miner.events_seen = int(state.events_seen)
+        return miner
 
     def update(
         self, activity: np.ndarray, case: np.ndarray, time: np.ndarray

@@ -17,6 +17,7 @@ with an LRU plan/result cache (:mod:`repro.query.cache`).
 """
 
 from .ast import (
+    EMPTY_WINDOW,
     Activities,
     ApplyView,
     DFGSink,
@@ -29,7 +30,16 @@ from .ast import (
     VariantsSink,
     Window,
 )
-from .cache import QueryCache, fingerprint
+from .cache import (
+    MemmapFingerprint,
+    QueryCache,
+    ResumableState,
+    fingerprint,
+    fingerprint_memmap,
+    fingerprint_repository,
+    parse_memmap_fingerprint,
+    prefix_digest,
+)
 from .execute import (
     EngineStats,
     QueryEngine,
@@ -42,9 +52,11 @@ from .planner import PhysicalPlan, SourceInfo, plan_physical, source_info
 
 __all__ = [
     "Q", "Query", "QueryPlanError",
-    "Window", "Activities", "TopVariants", "ApplyView",
+    "Window", "EMPTY_WINDOW", "Activities", "TopVariants", "ApplyView",
     "DFGSink", "HistogramSink", "VariantsSink", "LogicalPlan",
-    "QueryCache", "fingerprint",
+    "QueryCache", "fingerprint", "fingerprint_memmap",
+    "fingerprint_repository", "prefix_digest", "parse_memmap_fingerprint",
+    "MemmapFingerprint", "ResumableState",
     "QueryEngine", "QueryResult", "EngineStats",
     "default_engine", "set_default_engine",
     "canonicalize", "plan_physical", "PhysicalPlan", "SourceInfo",

@@ -40,6 +40,7 @@ from repro.core.views import HIDDEN, ActivityView
 
 __all__ = [
     "Window",
+    "EMPTY_WINDOW",
     "Activities",
     "TopVariants",
     "ApplyView",
@@ -75,6 +76,21 @@ class Window:
     @property
     def empty(self) -> bool:
         return self.t0 >= self.t1
+
+    def normalized(self) -> "Window":
+        """Every empty window collapses to the one canonical
+        :data:`EMPTY_WINDOW`, so equivalent-but-differently-phrased empty
+        queries share a plan key (and backends can short-circuit on it)."""
+        return EMPTY_WINDOW if self.empty else self
+
+    def intersect(self, other: "Window") -> "Window":
+        """Exact pair-mask intersection (masks AND together), normalized."""
+        return Window(max(self.t0, other.t0), min(self.t1, other.t1)).normalized()
+
+
+#: the canonical empty time dice — selects no event, so DFG/histogram sinks
+#: short-circuit to zeros without scanning
+EMPTY_WINDOW = Window(0.0, 0.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,6 +206,11 @@ class LogicalPlan:
         """Stable content hash — the cache key half owned by the plan."""
         blob = json.dumps(self._payload(), sort_keys=True, default=repr)
         return hashlib.sha256(blob.encode()).hexdigest()[:32]
+
+    def has_barrier(self) -> bool:
+        """True when any op materializes an intermediate repository — such
+        plans cannot be answered incrementally from cached suffix state."""
+        return any(is_barrier(op) for op in self.ops)
 
     def describe(self) -> str:
         ops = " → ".join(

@@ -6,10 +6,23 @@ once the store can recognize "same data, same query".  Both halves of the
 key are content hashes:
 
 * the **fingerprint** digests the source's actual bytes (columns + names
-  for an :class:`EventRepository`; meta + column files for a
-  :class:`MemmapLog`), so *any* append or rewrite invalidates;
+  for an :class:`EventRepository`; prefix digest + shape for a
+  :class:`MemmapLog`), so any append or rewrite invalidates;
 * the **plan key** hashes the canonical logical plan, so two differently
   chained but equivalent queries share an entry.
+
+The memmap fingerprint is **prefix-preserving**: it is the pair
+``(prefix_digest(rows 0..n), n)`` rendered as a string, and
+``prefix_digest`` is computable for any ``n`` on any log that still
+contains those rows.  That lets the engine *prove* (up to the sampling the
+fingerprint already accepts) that a changed log is an append-only extension
+of a cached one — the basis of the delta query plans.
+
+Entries may carry a :class:`ResumableState` (the streaming miner's Ψ +
+open-case tails, or a histogram's raw counts) so a proven append scans only
+the new suffix.  A per-(source path, plan) hint remembers the newest entry
+to resume from; the hint is only a lookup accelerator — correctness always
+comes from the prefix-digest proof.
 
 Entries are LRU-evicted and returned as copies — a caller mutating a result
 matrix can never corrupt the cache.
@@ -21,7 +34,6 @@ import copy
 import dataclasses
 import hashlib
 import json
-import os
 import threading
 from collections import OrderedDict
 from typing import Optional, Tuple
@@ -29,12 +41,16 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.core.repository import EventRepository
-from repro.core.streaming import MemmapLog
+from repro.core.streaming import MemmapLog, MinerState
 
 __all__ = [
     "fingerprint",
     "fingerprint_repository",
     "fingerprint_memmap",
+    "prefix_digest",
+    "MemmapFingerprint",
+    "parse_memmap_fingerprint",
+    "ResumableState",
     "QueryCache",
     "CacheStats",
 ]
@@ -68,33 +84,85 @@ def _digest_column(h, col, sample_rows: int = _SAMPLE_ROWS) -> None:
     h.update(np.ascontiguousarray(arr[::stride]).tobytes())
 
 
+def _digest_names(h, names, sample: int = 1024) -> None:
+    """Hash a name list the way columns are hashed: in full when small,
+    head + tail + strided sample when large.  Two repositories differing
+    only in (sampled) names must not collide."""
+    h.update(str(len(names)).encode())
+    if len(names) <= 3 * sample:
+        picked = names
+    else:
+        stride = max(len(names) // sample, 1)
+        picked = (*names[:sample], *names[-sample:], *names[::stride])
+    for name in picked:
+        h.update(name.encode())
+        h.update(b"\x00")
+
+
 def fingerprint_repository(repo: EventRepository) -> str:
     h = hashlib.sha256()
     for col in (repo.event_activity, repo.event_trace, repo.event_time,
                 repo.trace_log):
         _digest_column(h, col)
-    h.update(json.dumps(
-        [repo.activity_names, len(repo.trace_names), repo.log_names]
-    ).encode())
+    h.update(json.dumps([repo.activity_names, repo.log_names]).encode())
+    _digest_names(h, repo.trace_names)
     return "repo:" + h.hexdigest()[:32]
 
 
-def fingerprint_memmap(log: MemmapLog, sample_rows: int = 4096) -> str:
-    """O(sample) digest: meta + column file sizes + head/tail row samples.
-    Appending rows changes ``num_events``/file sizes; editing in place is
-    caught for the sampled ranges (full-file hashing would defeat the
-    out-of-core design)."""
+def prefix_digest(
+    log: MemmapLog, n: Optional[int] = None, sample_rows: int = 4096
+) -> str:
+    """O(sample) digest of the first ``n`` rows of the log.
+
+    The sample positions depend only on ``n`` (head, tail-of-prefix, and a
+    stride over ``[0, n)``), so the digest is recomputable on any log that
+    still contains those rows:  ``prefix_digest(grown_log, old_n) ==
+    old_digest`` *proves* — to the same sampling confidence the fingerprint
+    already accepts — that the change was append-only."""
+    n = log.num_events if n is None else int(n)
+    if not 0 <= n <= log.num_events:
+        raise ValueError(f"prefix of {n} rows on a {log.num_events}-row log")
     h = hashlib.sha256()
-    h.update(json.dumps([
-        log.num_events, log.num_activities, log.num_traces, log.chunk_rows,
-    ]).encode())
-    for name in ("activity.i32", "case.i32", "time.f64"):
-        h.update(str(os.path.getsize(os.path.join(log.path, name))).encode())
-    k = min(sample_rows, log.num_events)
+    h.update(str(n).encode())
+    k = min(sample_rows, n)
+    stride = max(n // sample_rows, 1)
     for col in (log.activity, log.case, log.time):
         h.update(np.asarray(col[:k]).tobytes())
-        h.update(np.asarray(col[log.num_events - k:]).tobytes())
-    return "memmap:" + h.hexdigest()[:32]
+        h.update(np.asarray(col[n - k : n]).tobytes())
+        if stride > 1:
+            h.update(np.ascontiguousarray(col[:n:stride]).tobytes())
+    return h.hexdigest()[:32]
+
+
+@dataclasses.dataclass(frozen=True)
+class MemmapFingerprint:
+    """Structured form of a memmap fingerprint string."""
+
+    prefix: str
+    num_events: int
+    num_activities: int
+
+
+def fingerprint_memmap(log: MemmapLog, sample_rows: int = 4096) -> str:
+    """Prefix-preserving fingerprint: ``memmap:<prefix_digest>:<rows>:<A>``.
+    Appending rows changes the row count (and usually the digest); editing
+    in place is caught for the sampled ranges (full-file hashing would
+    defeat the out-of-core design)."""
+    return "memmap:{}:{}:{}".format(
+        prefix_digest(log, sample_rows=sample_rows),
+        log.num_events,
+        log.num_activities,
+    )
+
+
+def parse_memmap_fingerprint(fp: str) -> Optional[MemmapFingerprint]:
+    if not fp.startswith("memmap:"):
+        return None
+    try:
+        _, prefix, n, a = fp.split(":")
+        return MemmapFingerprint(prefix, int(n), int(a))
+    except ValueError:
+        return None
 
 
 def fingerprint(source) -> str:
@@ -103,6 +171,32 @@ def fingerprint(source) -> str:
     if isinstance(source, MemmapLog):
         return fingerprint_memmap(source)
     raise TypeError(f"cannot fingerprint {type(source).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Resumable execution state
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ResumableState:
+    """State a streaming scan leaves behind when it consumed the log through
+    its last row: resuming it over an appended suffix (including the pairs
+    that straddle the boundary, via the miner's per-case tails) reproduces a
+    full rescan bit for bit."""
+
+    rows_end: int  # rows [lo, rows_end) are accounted for
+    num_activities: int
+    miner: Optional[MinerState] = None  # DFG sinks
+    counts: Optional[np.ndarray] = None  # histogram sinks (raw, pre-mask/view)
+
+    def copy(self) -> "ResumableState":
+        return ResumableState(
+            self.rows_end,
+            self.num_activities,
+            self.miner.copy() if self.miner is not None else None,
+            self.counts.copy() if self.counts is not None else None,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -116,6 +210,12 @@ class CacheStats:
     misses: int = 0
     evictions: int = 0
     invalidations: int = 0
+
+
+@dataclasses.dataclass
+class _Entry:
+    result: object
+    resume: Optional[ResumableState] = None
 
 
 def _copy_result(result):
@@ -132,12 +232,16 @@ def _copy_result(result):
 
 
 class QueryCache:
-    """LRU over (fingerprint, plan_key) → QueryResult.  Thread-safe: the
-    serving layer shares one cache across concurrent tenants."""
+    """LRU over (fingerprint, plan_key) → QueryResult [+ ResumableState].
+    Thread-safe: the serving layer shares one cache across concurrent
+    tenants."""
 
     def __init__(self, max_entries: int = 256):
         self.max_entries = max_entries
-        self._entries: "OrderedDict[Tuple[str, str], object]" = OrderedDict()
+        self._entries: "OrderedDict[Tuple[str, str], _Entry]" = OrderedDict()
+        # (source hint, plan_key) -> fingerprint of the newest entry for it;
+        # lets the engine find a resume candidate after the source changed
+        self._hints: dict = {}
         self.stats = CacheStats()
         self._lock = threading.Lock()
 
@@ -153,26 +257,75 @@ class QueryCache:
                 return None
             self._entries.move_to_end(key)
             self.stats.hits += 1
-            return _copy_result(entry)
+            return _copy_result(entry.result)
 
-    def put(self, key: Tuple[str, str], result) -> None:
-        entry = _copy_result(result)
+    def put(
+        self,
+        key: Tuple[str, str],
+        result,
+        resume: Optional[ResumableState] = None,
+        source_hint: Optional[str] = None,
+    ) -> None:
+        entry = _Entry(
+            _copy_result(result),
+            resume.copy() if resume is not None else None,
+        )
         with self._lock:
             self._entries[key] = entry
             self._entries.move_to_end(key)
+            if source_hint is not None:
+                self._hints[(source_hint, key[1])] = key[0]
             while len(self._entries) > self.max_entries:
-                self._entries.popitem(last=False)
+                dead_key, _ = self._entries.popitem(last=False)
                 self.stats.evictions += 1
+                self._drop_hints_for(dead_key)
 
+    # -- delta support -------------------------------------------------------
+    def delta_candidate(self, source_hint: Optional[str], plan_key: str):
+        """Newest (fingerprint, result copy, resume copy) put for this
+        (source, plan) — a *candidate* only: the engine must prove prefix
+        preservation before trusting it."""
+        if source_hint is None:
+            return None
+        with self._lock:
+            fp = self._hints.get((source_hint, plan_key))
+            if fp is None:
+                return None
+            entry = self._entries.get((fp, plan_key))
+            if entry is None:  # evicted since
+                self._hints.pop((source_hint, plan_key), None)
+                return None
+            return (
+                fp,
+                _copy_result(entry.result),
+                entry.resume.copy() if entry.resume is not None else None,
+            )
+
+    def drop_hint(self, source_hint: Optional[str], plan_key: str) -> None:
+        with self._lock:
+            self._hints.pop((source_hint, plan_key), None)
+
+    def _drop_hints_for(self, key: Tuple[str, str]) -> None:
+        fp, plan_key = key
+        dead = [
+            hk for hk, hfp in self._hints.items()
+            if hfp == fp and hk[1] == plan_key
+        ]
+        for hk in dead:
+            del self._hints[hk]
+
+    # -- maintenance ---------------------------------------------------------
     def invalidate_source(self, fp: str) -> int:
         """Drop every entry for one source fingerprint (explicit refresh)."""
         with self._lock:
             dead = [k for k in self._entries if k[0] == fp]
             for k in dead:
                 del self._entries[k]
+                self._drop_hints_for(k)
             self.stats.invalidations += len(dead)
             return len(dead)
 
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
+            self._hints.clear()

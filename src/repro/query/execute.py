@@ -11,7 +11,12 @@ execution primitives:
   the kernel's WHERE clause,
 * ``streaming_dfg`` over a :class:`MemmapLog` with the time window pushed
   to a row range via the chunk time index,
-* ``distributed_dfg`` over a device mesh.
+* ``distributed_dfg`` over a device mesh,
+* the **delta** path: when a memmap source is *proven* (prefix-preserving
+  fingerprint) to be an append-only extension of a cached scan, the cached
+  :class:`StreamingDFGMiner` state resumes over just the appended suffix —
+  or, when the plan's window lies inside the old range, the cached result
+  is served with no scan at all (free rewrite).
 
 Every path produces counts bit-identical to the corresponding direct
 single-backend call — the equivalence tests pin this against the paper's
@@ -21,6 +26,7 @@ Algorithm 1 oracle.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import time
 from collections import OrderedDict
@@ -32,7 +38,7 @@ from repro.core.dfg import dfg, dfg_numpy
 from repro.core.dicing import dice_repository, pair_mask_for_window
 from repro.core.distributed import distributed_dfg
 from repro.core.repository import EventRepository
-from repro.core.streaming import MemmapLog, streaming_dfg
+from repro.core.streaming import MemmapLog, StreamingDFGMiner
 from repro.core.variants import trace_variants, variant_filtered_repository
 from repro.core.views import HIDDEN
 
@@ -50,7 +56,13 @@ from .ast import (
     Window,
     is_barrier,
 )
-from .cache import QueryCache, fingerprint
+from .cache import (
+    QueryCache,
+    ResumableState,
+    fingerprint,
+    parse_memmap_fingerprint,
+    prefix_digest,
+)
 from .optimize import canonicalize, compose_views
 from .planner import (
     MEMORY_BUDGET_EVENTS,
@@ -93,8 +105,11 @@ class QueryResult:
 @dataclasses.dataclass
 class EngineStats:
     queries: int = 0
-    executions: int = 0  # backend runs (cache misses)
+    executions: int = 0  # backend runs (cache misses, incl. delta scans)
     cache_hits: int = 0
+    delta_hits: int = 0  # append-only: resumed cached state over the suffix
+    delta_free_hits: int = 0  # append-only + window inside old range: no scan
+    rows_scanned: int = 0  # memmap rows fed to streaming/delta scans
 
 
 def memmap_activity_names(log: MemmapLog) -> List[str]:
@@ -185,10 +200,7 @@ def _collect(repo: Optional[EventRepository], logical: LogicalPlan) -> _Collecte
             _validate_keep(op.keep, st.repo.activity_names)
             st.repo = dice_repository(st.repo, activities=list(op.keep))
         elif isinstance(op, Window):
-            st.window = (
-                op if st.window is None
-                else Window(max(st.window.t0, op.t0), min(st.window.t1, op.t1))
-            )
+            st.window = op if st.window is None else st.window.intersect(op)
         elif isinstance(op, Activities):
             if st.view is not None:
                 raise QueryPlanError(
@@ -231,6 +243,7 @@ class QueryEngine:
         memory_budget_events: int = MEMORY_BUDGET_EVENTS,
         fused_dicing: bool = True,
         cache: Optional[QueryCache] = None,
+        repo_memo_size: int = 4,
     ):
         self.mesh = mesh
         self.tiny_pairs = tiny_pairs
@@ -247,13 +260,15 @@ class QueryEngine:
             OrderedDict()
         )
         self._max_plans = 512
-        # most-recent materialized memmap repo, keyed by source fingerprint:
-        # distinct cache-missed plans over one unchanged log share one load
-        self._repo_memo: Optional[Tuple[str, EventRepository]] = None
+        # materialized memmap repos keyed by source fingerprint: tenants
+        # alternating over several in-budget logs each keep their load
+        self.repo_memo_size = repo_memo_size
+        self._repo_memo: "OrderedDict[str, EventRepository]" = OrderedDict()
         self._lock = threading.Lock()
 
     # -- public --------------------------------------------------------------
     def run(self, query: Query, sink: Sink) -> QueryResult:
+        t_start = time.perf_counter()
         with self._lock:
             self.stats.queries += 1
         info = source_info(query.source)
@@ -264,9 +279,19 @@ class QueryEngine:
         cached = self.cache.get(key)
         if cached is not None:
             cached.from_cache = True
+            # report this hit's own latency (fingerprint + canonicalize +
+            # lookup), not the wall time of the original execution
+            cached.wall_s = time.perf_counter() - t_start
             with self._lock:
                 self.stats.cache_hits += 1
             return cached
+
+        if logical.source == "memmap":
+            delta = self._try_delta(
+                query.source, logical, key, tuple(rewrites), t_start
+            )
+            if delta is not None:
+                return delta
 
         plan_key = (logical.key(), info)
         with self._lock:
@@ -287,7 +312,7 @@ class QueryEngine:
                     self._plans.popitem(last=False)
 
         t0 = time.perf_counter()
-        value, names = self._execute(
+        value, names, resume = self._execute(
             query.source, logical, physical, source_fp=key[0]
         )
         wall = time.perf_counter() - t0
@@ -297,7 +322,10 @@ class QueryEngine:
             value=value, names=names, logical=logical, physical=physical,
             from_cache=False, wall_s=wall, rewrites=tuple(rewrites),
         )
-        self.cache.put(key, result)
+        self.cache.put(
+            key, result, resume=resume,
+            source_hint=self._source_hint(query.source),
+        )
         return result
 
     def explain(self, query: Query, sink: Sink) -> str:
@@ -320,11 +348,163 @@ class QueryEngine:
         ]
         return "\n".join(lines)
 
+    # -- delta (append-aware) ------------------------------------------------
+    @staticmethod
+    def _source_hint(source) -> Optional[str]:
+        """Stable identity for delta-candidate lookup.  Only a hint: a path
+        reused for unrelated data fails the prefix-digest proof and falls
+        back to a full execution."""
+        if isinstance(source, MemmapLog):
+            return os.path.realpath(source.path)
+        return None
+
+    def _try_delta(
+        self,
+        log: MemmapLog,
+        logical: LogicalPlan,
+        key: Tuple[str, str],
+        rewrites: Tuple[str, ...],
+        t_start: float,
+    ) -> Optional[QueryResult]:
+        """Append-aware path for a cache miss on a memmap source.
+
+        If the cache holds this plan's result for a *prefix* of ``log`` —
+        proven by recomputing the prefix digest on the current bytes, never
+        assumed from the path hint — then either:
+
+        * the plan's row range lies entirely inside the proven prefix
+          (window over old data): the cached result is the recompute, serve
+          it without any scan; or
+        * resume the cached streaming state (Ψ + per-case tails) over just
+          the appended suffix — the carried ``last_by_case`` links the pairs
+          that straddle the append boundary, so the result is bit-identical
+          to a full rescan.
+        """
+        fp_new, plan_key = key
+        if logical.has_barrier() or not isinstance(
+            logical.sink, (DFGSink, HistogramSink)
+        ):
+            return None
+        hint = self._source_hint(log)
+        cand = self.cache.delta_candidate(hint, plan_key)
+        if cand is None:
+            return None
+        old_fp, old_result, resume = cand
+        old = parse_memmap_fingerprint(old_fp)
+        if old is None or not 0 < old.num_events < log.num_events:
+            return None
+        if old.num_activities > log.num_activities:
+            return None  # vocabulary shrank: not an append-only change
+        if prefix_digest(log, old.num_events) != old.prefix:
+            # rewritten / truncated-and-regrown: stop consulting this hint
+            self.cache.drop_hint(hint, plan_key)
+            return None
+
+        st = _collect(None, logical)  # barrier-free: no repo needed
+        names = memmap_activity_names(log)
+        if st.keep is not None:
+            _validate_keep(st.keep, names)
+        if st.window is not None and st.window.empty:
+            return None  # the zero-result short-circuit is cheaper
+        lo, hi = (
+            log.rows_for_window(st.window.t0, st.window.t1)
+            if st.window is not None
+            else (0, log.num_events)
+        )
+
+        if hi <= old.num_events and old.num_activities == log.num_activities:
+            # free rewrite: every row the plan can touch lies in the proven
+            # prefix, so the cached result *is* the recompute, bit for bit
+            old_result.from_cache = True
+            old_result.wall_s = time.perf_counter() - t_start
+            with self._lock:
+                self.stats.delta_free_hits += 1
+            # republish under the new fingerprint: the next run is a plain hit
+            self.cache.put(key, old_result, resume=resume, source_hint=hint)
+            return old_result
+
+        if resume is None or resume.rows_end > old.num_events:
+            return None
+        start = max(resume.rows_end, lo)
+        t0 = time.perf_counter()
+        value, out_names, new_resume = self._execute_delta(
+            log, logical, st, resume, start, hi
+        )
+        wall = time.perf_counter() - t0
+        physical = PhysicalPlan(
+            backend="delta",
+            row_range_window=(
+                (st.window.t0, st.window.t1) if st.window is not None else None
+            ),
+            activities_as_output_mask=st.keep is not None,
+            delta_rows=(start, hi),
+            notes=(f"resume@{start}", f"suffix_rows={hi - start}"),
+        )
+        with self._lock:
+            self.stats.executions += 1
+            self.stats.delta_hits += 1
+        result = QueryResult(
+            value=value, names=out_names, logical=logical, physical=physical,
+            from_cache=False, wall_s=wall, rewrites=rewrites,
+        )
+        self.cache.put(key, result, resume=new_resume, source_hint=hint)
+        return result
+
+    def _execute_delta(
+        self,
+        log: MemmapLog,
+        logical: LogicalPlan,
+        st: _Collected,
+        resume: ResumableState,
+        start: int,
+        hi: int,
+    ):
+        names = memmap_activity_names(log)
+        with self._lock:
+            self.stats.rows_scanned += max(hi - start, 0)
+        if isinstance(logical.sink, DFGSink):
+            miner = StreamingDFGMiner.restore(
+                resume.miner, num_activities=log.num_activities
+            )
+            for a, c, t in log.iter_chunks(row_range=(start, hi)):
+                miner.update(a, c, t)
+            new_resume = None
+            if hi == log.num_events:
+                new_resume = ResumableState(
+                    rows_end=hi, num_activities=log.num_activities,
+                    miner=miner.snapshot(),
+                )
+            value, out_names = self._finish_streaming_dfg(
+                miner.finalize(), names, st
+            )
+            return value, out_names, new_resume
+        counts = np.zeros(log.num_activities, dtype=np.int64)
+        counts[: resume.num_activities] = resume.counts
+        for a, _, _ in log.iter_chunks(row_range=(start, hi)):
+            counts += np.bincount(a, minlength=log.num_activities)
+        new_resume = None
+        if hi == log.num_events:
+            new_resume = ResumableState(
+                rows_end=hi, num_activities=log.num_activities,
+                counts=counts.copy(),
+            )
+        value, out_names = self._finish_streaming_hist(counts, names, st)
+        return value, out_names, new_resume
+
     # -- execution -----------------------------------------------------------
     def _execute(
         self, source, logical: LogicalPlan, physical: PhysicalPlan,
         source_fp: Optional[str] = None,
     ):
+        if not logical.has_barrier() and isinstance(
+            logical.sink, (DFGSink, HistogramSink)
+        ):
+            pre = _collect(None, logical)
+            if pre.window is not None and pre.window.empty:
+                # an empty window can select no pair/event: zeros of the
+                # right shape, without materializing or scanning anything
+                value, names = self._empty_result(source, logical, pre)
+                return value, names, None
         if physical.backend == "streaming":
             return self._execute_streaming(source, logical, physical)
         repo = (
@@ -336,22 +516,45 @@ class QueryEngine:
         if st.keep is not None:
             _validate_keep(st.keep, st.repo.activity_names)
         if isinstance(logical.sink, DFGSink):
-            return self._dfg_on_repo(st, logical, physical)
-        if isinstance(logical.sink, HistogramSink):
-            return self._histogram_on_repo(st)
-        if isinstance(logical.sink, VariantsSink):
-            return self._variants_on_repo(st, logical.sink)
-        raise QueryPlanError(f"unknown sink {logical.sink!r}")
+            value, names = self._dfg_on_repo(st, logical, physical)
+        elif isinstance(logical.sink, HistogramSink):
+            value, names = self._histogram_on_repo(st)
+        elif isinstance(logical.sink, VariantsSink):
+            value, names = self._variants_on_repo(st, logical.sink)
+        else:
+            raise QueryPlanError(f"unknown sink {logical.sink!r}")
+        return value, names, None
+
+    def _empty_result(self, source, logical: LogicalPlan, st: _Collected):
+        names = (
+            memmap_activity_names(source)
+            if logical.source == "memmap"
+            else list(source.activity_names)
+        )
+        if st.keep is not None:
+            _validate_keep(st.keep, names)
+        a = len(names)
+        if isinstance(logical.sink, DFGSink):
+            return self._finish_streaming_dfg(
+                np.zeros((a, a), dtype=np.int64), names, st
+            )
+        return self._finish_streaming_hist(
+            np.zeros(a, dtype=np.int64), names, st
+        )
 
     def _materialize(self, log: MemmapLog, fp: Optional[str]) -> EventRepository:
-        with self._lock:
-            memo = self._repo_memo
-        if memo is not None and fp is not None and memo[0] == fp:
-            return memo[1]
+        if fp is not None:
+            with self._lock:
+                repo = self._repo_memo.get(fp)
+                if repo is not None:
+                    self._repo_memo.move_to_end(fp)
+                    return repo
         repo = repository_from_memmap(log)
         if fp is not None:
             with self._lock:
-                self._repo_memo = (fp, repo)
+                self._repo_memo[fp] = repo
+                while len(self._repo_memo) > self.repo_memo_size:
+                    self._repo_memo.popitem(last=False)
         return repo
 
     def _dfg_on_repo(
@@ -468,6 +671,32 @@ class QueryEngine:
         return tv, None
 
     # -- streaming (out-of-core) ---------------------------------------------
+    def _finish_streaming_dfg(self, psi: np.ndarray, names: List[str], st: _Collected):
+        """Post-mask + project a raw Ψ (shared by streaming, delta, and the
+        empty-window short-circuit — the raw matrix is what resumable state
+        carries, so post-processing must be reapplicable)."""
+        if st.keep is not None:
+            keep_ids = np.asarray([names.index(a) for a in st.keep], np.int64)
+            psi = _zero_outside(psi, keep_ids)
+        if st.view is not None:
+            view = st.view.to_view()
+            return view.apply_to_dfg(psi, names), view.visible_names(names)
+        return psi, names
+
+    def _finish_streaming_hist(self, counts: np.ndarray, names: List[str], st: _Collected):
+        if st.keep is not None:
+            keep_ids = np.asarray([names.index(a) for a in st.keep], np.int64)
+            km = np.zeros(len(names), dtype=bool)
+            km[keep_ids] = True
+            counts = np.where(km, counts, 0)
+        if st.view is not None:
+            view = st.view.to_view()
+            g, labels = view.group_matrix(names)
+            counts = counts @ g
+            vis = [i for i, l in enumerate(labels) if l != HIDDEN]
+            return counts[vis], [labels[i] for i in vis]
+        return counts, names
+
     def _execute_streaming(
         self, log: MemmapLog, logical: LogicalPlan, physical: PhysicalPlan
     ):
@@ -478,36 +707,38 @@ class QueryEngine:
         # the planner owns the row-range pushdown decision; consume it here
         # so describe()/explain() always reflect what actually runs
         window = physical.row_range_window
+        rng = log.rows_for_window(*window) if window else (0, log.num_events)
+        with self._lock:
+            self.stats.rows_scanned += max(rng[1] - rng[0], 0)
         if isinstance(logical.sink, DFGSink):
-            psi = streaming_dfg(log, time_window=window)
-            if st.keep is not None:
-                keep_ids = np.asarray(
-                    [names.index(a) for a in st.keep], np.int64
+            miner = StreamingDFGMiner(log.num_activities)
+            for a, c, t in log.iter_chunks(row_range=rng):
+                miner.update(a, c, t)
+            # a scan that consumed the log through its last row is resumable
+            # across future appends (the miner's per-case tails link pairs
+            # straddling the append boundary)
+            resume = None
+            if rng[1] == log.num_events:
+                resume = ResumableState(
+                    rows_end=rng[1], num_activities=log.num_activities,
+                    miner=miner.snapshot(),
                 )
-                psi = _zero_outside(psi, keep_ids)
-            if st.view is not None:
-                view = st.view.to_view()
-                return view.apply_to_dfg(psi, names), view.visible_names(names)
-            return psi, names
+            value, out_names = self._finish_streaming_dfg(
+                miner.finalize(), names, st
+            )
+            return value, out_names, resume
         if isinstance(logical.sink, HistogramSink):
-            rng = log.rows_for_window(*window) if window else None
             counts = np.zeros(log.num_activities, dtype=np.int64)
             for a, _, _ in log.iter_chunks(row_range=rng):
                 counts += np.bincount(a, minlength=log.num_activities)
-            if st.keep is not None:
-                keep_ids = np.asarray(
-                    [names.index(a) for a in st.keep], np.int64
+            resume = None
+            if rng[1] == log.num_events:
+                resume = ResumableState(
+                    rows_end=rng[1], num_activities=log.num_activities,
+                    counts=counts.copy(),
                 )
-                km = np.zeros(log.num_activities, dtype=bool)
-                km[keep_ids] = True
-                counts = np.where(km, counts, 0)
-            if st.view is not None:
-                view = st.view.to_view()
-                g, labels = view.group_matrix(names)
-                counts = counts @ g
-                vis = [i for i, l in enumerate(labels) if l != HIDDEN]
-                return counts[vis], [labels[i] for i in vis]
-            return counts, names
+            value, out_names = self._finish_streaming_hist(counts, names, st)
+            return value, out_names, resume
         raise QueryPlanError(
             f"sink {type(logical.sink).__name__} has no streaming path"
         )

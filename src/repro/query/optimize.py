@@ -10,7 +10,9 @@ predicates must not cross them):
 
 * **window fusion** — ``Window(a,b) ∧ Window(c,d) → Window(max(a,c),
   min(b,d))`` (pair-endpoint masks AND together, so the intersection is
-  exact);
+  exact); every empty window — fused or phrased directly — normalizes to
+  the one canonical :data:`~repro.query.ast.EMPTY_WINDOW`, so equivalent
+  empty queries share a cache key and backends short-circuit to zeros;
 * **activity-predicate intersection** — consecutive paper-semantics
   ``Activities`` filters intersect their keep-sets;
 * **view composition** — ``ApplyView ∘ ApplyView`` collapses to one
@@ -35,6 +37,7 @@ import math
 from typing import List, Optional, Sequence, Tuple
 
 from .ast import (
+    EMPTY_WINDOW,
     Activities,
     ApplyView,
     LogicalPlan,
@@ -80,7 +83,7 @@ def _canonical_segment(
             if window is None:
                 window = op
             else:
-                window = Window(max(window.t0, op.t0), min(window.t1, op.t1))
+                window = window.intersect(op)
                 notes.append("fuse_windows")
         elif isinstance(op, Activities):
             if view is not None:
@@ -111,7 +114,9 @@ def _canonical_segment(
         if window.t0 == -math.inf and window.t1 == math.inf:
             notes.append("drop_infinite_window")
         else:
-            out.append(window)
+            if window.empty and window != EMPTY_WINDOW:
+                notes.append("normalize_empty_window")
+            out.append(window.normalized())
     if acts is not None:
         # drop only an exact keep-everything filter; a superset contains
         # unknown names and must reach the executor's validation

@@ -30,6 +30,12 @@ Pushdown decisions recorded on the :class:`PhysicalPlan`:
   past counting: Ψ restricted to keep×keep equals counting masked pairs, so
   the filter becomes a free O(A²) mask on the result instead of an O(E)
   pair predicate.
+
+One physical operator is chosen by the *engine*, not here: ``delta``.  When
+a memmap source is proven to be an append-only extension of a cached scan
+(prefix-preserving fingerprint), the engine resumes the cached streaming
+state over just the appended suffix — ``delta_rows`` records the suffix row
+range it scanned.
 """
 
 from __future__ import annotations
@@ -97,12 +103,16 @@ def source_info(source) -> SourceInfo:
 
 @dataclasses.dataclass(frozen=True)
 class PhysicalPlan:
-    backend: str  # numpy | scatter | onehot | pallas | streaming | distributed
+    # numpy | scatter | onehot | pallas | streaming | distributed | delta
+    # ("delta" is engine-chosen only: it resumes cached streaming state over
+    # a proven append-only suffix and is never requestable by the analyst)
+    backend: str
     materialize: bool = False  # memmap source loaded into memory first
     row_range_window: Optional[Tuple[float, float]] = None
     fused_dicing: bool = False
     view_pushdown: bool = False
     activities_as_output_mask: bool = False
+    delta_rows: Optional[Tuple[int, int]] = None  # suffix row range scanned
     notes: Tuple[str, ...] = ()
 
     def describe(self) -> str:
@@ -117,6 +127,8 @@ class PhysicalPlan:
             parts.append("pushdown=view_below_count")
         if self.activities_as_output_mask:
             parts.append("rewrite=activity_filter→output_mask")
+        if self.delta_rows is not None:
+            parts.append(f"delta=scan_rows[{self.delta_rows[0]}:{self.delta_rows[1]})")
         parts.extend(self.notes)
         return ", ".join(parts)
 
@@ -165,6 +177,9 @@ def plan_physical(
     output of :func:`repro.query.optimize.canonicalize`."""
     has_barrier, window, acts, view = _segment_features(plan)
     notes = []
+    if window is not None and window.empty:
+        # the engine short-circuits to zeros before touching the backend
+        notes.append("empty_window=zeros")
 
     if isinstance(plan.sink, (HistogramSink, VariantsSink)):
         needs_repo = isinstance(plan.sink, VariantsSink) or has_barrier

@@ -30,6 +30,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.core.streaming import MemmapLog, MemmapLogWriter
 from repro.core.views import AccessDenied, AccessPolicy
 from repro.query import Q, QueryEngine, QueryPlanError
 
@@ -42,6 +43,9 @@ class QueryService:
         self._logs: Dict[str, object] = {}
         self._policies: Dict[str, Optional[AccessPolicy]] = {}
         self._lock = threading.Lock()
+        # one lock per registered name: appends write three column files +
+        # meta.json and must never interleave on the same log
+        self._append_locks: Dict[str, threading.Lock] = {}
 
     # -- registry ------------------------------------------------------------
     def register(
@@ -56,10 +60,55 @@ class QueryService:
         with self._lock:
             self._logs.pop(name, None)
             self._policies.pop(name, None)
+            self._append_locks.pop(name, None)
 
     def logs(self):
         with self._lock:
             return sorted(self._logs)
+
+    # -- the live-append endpoint ---------------------------------------------
+    def append(self, request: Dict) -> Dict:
+        """Append a time-ordered batch of events to a registered memmap log.
+
+        Request: ``{"log": name, "activity": [...], "case": [...],
+        "time": [...]}`` (aligned arrays).  The grown log replaces the
+        registered handle, and because the engine's fingerprints are
+        prefix-preserving, tenants' cached dashboard queries stay warm: the
+        next query per plan runs a ``delta`` scan over just this suffix (or
+        is served unchanged when its window predates the append) instead of
+        a full rescan.
+        """
+        name = request.get("log")
+        with self._lock:
+            if name not in self._logs:
+                raise KeyError(f"unknown log {name!r}")
+            source = self._logs[name]
+            append_lock = self._append_locks.setdefault(name, threading.Lock())
+        if not isinstance(source, MemmapLog):
+            raise QueryPlanError(
+                f"log {name!r} is an in-memory repository; only memmap logs "
+                "support live appends"
+            )
+        activity = np.asarray(request["activity"], dtype=np.int32)
+        case = np.asarray(request["case"], dtype=np.int32)
+        time = np.asarray(request["time"], dtype=np.float64)
+        if not (activity.shape == case.shape == time.shape):
+            raise ValueError("activity/case/time must be aligned 1-D arrays")
+        with append_lock:  # serialize writers: column files must not interleave
+            with self._lock:
+                source = self._logs.get(name, source)  # newest handle
+            writer = MemmapLogWriter.open_append(source.path)
+            writer.append(activity, case, time)
+            grown = writer.close()
+            with self._lock:
+                if name in self._logs:  # unless unregistered mid-append
+                    self._logs[name] = grown
+        return {
+            "log": name,
+            "appended": int(activity.shape[0]),
+            "num_events": grown.num_events,
+            "num_activities": grown.num_activities,
+        }
 
     # -- the serving endpoint -------------------------------------------------
     def query(self, request: Dict) -> Dict:

@@ -1,0 +1,534 @@
+"""Append-aware delta query plans: prefix-preserving fingerprints, the
+``delta`` physical path (resume cached streaming state over just the
+appended suffix), the free rewrite (window inside the old range ⇒ cached
+result stays valid), and the satellite cache-correctness fixes."""
+
+import os
+import shutil
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import MemmapLog, streaming_dfg
+from repro.core.dfg import dfg_numpy
+from repro.data import ProcessSpec, generate_memmap_log, generate_repository
+from repro.query import (
+    EMPTY_WINDOW,
+    DFGSink,
+    Q,
+    QueryEngine,
+    QueryPlanError,
+    canonicalize,
+    fingerprint,
+    fingerprint_repository,
+    parse_memmap_fingerprint,
+    prefix_digest,
+)
+from repro.query.ast import Window
+from repro.query.execute import repository_from_memmap
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hyp_st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # tier-1 must not depend on hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _write_log(path, act, case, times, num_activities):
+    act = np.asarray(act, np.int32)
+    case = np.asarray(case, np.int32)
+    times = np.asarray(times, np.float64)
+    w = MemmapLog.create(
+        str(path), act.shape[0], num_activities,
+        int(case.max()) + 1 if case.size else 1, chunk_rows=64,
+    )
+    w.append(act, case, times)
+    return w.close()
+
+
+def _oracle_psi(act, case, times, num_activities):
+    """Algorithm 1 on the flat stream: stable (case, time) sort, count
+    consecutive same-case pairs."""
+    act = np.asarray(act)
+    case = np.asarray(case)
+    times = np.asarray(times)
+    n = act.shape[0]
+    order = np.lexsort((np.arange(n), times, case))
+    a, c = act[order], case[order]
+    psi = np.zeros((num_activities, num_activities), np.int64)
+    for i in range(1, n):
+        if c[i] == c[i - 1]:
+            psi[a[i - 1], a[i]] += 1
+    return psi
+
+
+def _interleaved_stream(rng, n_events, n_cases, n_acts, t0=0.0):
+    act = rng.integers(0, n_acts, n_events).astype(np.int32)
+    case = rng.integers(0, n_cases, n_events).astype(np.int32)
+    times = t0 + np.sort(rng.uniform(0.0, 1000.0, n_events))
+    return act, case, times
+
+
+@pytest.fixture(scope="module")
+def base_log(tmp_path_factory):
+    path = tmp_path_factory.mktemp("delta") / "base"
+    return generate_memmap_log(
+        str(path), 20_000, ProcessSpec(num_activities=9, seed=41), seed=41,
+        batch_traces=300,
+    )
+
+
+@pytest.fixture()
+def log_copy(base_log, tmp_path):
+    """Fresh on-disk copy — append tests mutate the files."""
+    path = str(tmp_path / "log")
+    shutil.copytree(base_log.path, path)
+    return MemmapLog.open(path)
+
+
+def _append_tail(log, n, seed=0, reuse_cases=True, new_activity=False):
+    """Time-ordered suffix reusing existing case ids (so pairs straddle the
+    append boundary)."""
+    rng = np.random.default_rng(seed)
+    a_hi = log.num_activities + (1 if new_activity else 0)
+    act = rng.integers(0, a_hi, n).astype(np.int32)
+    if new_activity:
+        act[0] = log.num_activities  # guarantee the vocabulary grows
+    pool = log.num_traces if reuse_cases else log.num_traces + n
+    case = rng.integers(0, pool, n).astype(np.int32)
+    times = float(log.time[-1]) + np.sort(rng.uniform(0.0, 500.0, n))
+    return log.append(act, case, times)
+
+
+# ---------------------------------------------------------------------------
+# prefix-preserving fingerprints
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_is_prefix_preserving(log_copy):
+    fp_old = fingerprint(log_copy)
+    old = parse_memmap_fingerprint(fp_old)
+    assert old.num_events == log_copy.num_events
+    assert old.prefix == prefix_digest(log_copy)
+
+    grown = _append_tail(log_copy, 123, seed=1)
+    fp_new = fingerprint(grown)
+    assert fp_new != fp_old
+    # the proof: the old prefix digest is recomputable on the grown log
+    assert prefix_digest(grown, old.num_events) == old.prefix
+
+
+def test_prefix_digest_detects_rewrite(log_copy):
+    old = parse_memmap_fingerprint(fingerprint(log_copy))
+    with open(os.path.join(log_copy.path, "activity.i32"), "r+b") as f:
+        f.seek(0)  # head rows are always in the sample
+        raw = np.frombuffer(f.read(4), np.int32)
+        f.seek(0)
+        f.write(((raw + 1) % log_copy.num_activities).astype(np.int32).tobytes())
+    edited = MemmapLog.open(log_copy.path)
+    assert prefix_digest(edited, old.num_events) != old.prefix
+
+
+def test_fingerprint_repository_hashes_trace_names():
+    repo = generate_repository(50, ProcessSpec(num_activities=5, seed=3))
+    renamed = type(repo)(
+        event_activity=repo.event_activity,
+        event_trace=repo.event_trace,
+        event_time=repo.event_time,
+        trace_log=repo.trace_log,
+        activity_names=repo.activity_names,
+        trace_names=[f"other_{n}" for n in repo.trace_names],
+        log_names=repo.log_names,
+    )
+    assert fingerprint_repository(repo) != fingerprint_repository(renamed)
+
+
+# ---------------------------------------------------------------------------
+# the delta physical path
+# ---------------------------------------------------------------------------
+
+
+def test_delta_scans_only_the_suffix_bit_identical(log_copy):
+    eng = QueryEngine(memory_budget_events=0)  # streaming-first
+    first = Q.log(log_copy).using(eng).dfg()
+    assert first.physical.backend == "streaming"
+    base_scanned = eng.stats.rows_scanned
+    assert base_scanned == log_copy.num_events
+
+    grown = _append_tail(log_copy, 250, seed=2)
+    res = Q.log(grown).using(eng).dfg()
+
+    assert res.physical.backend == "delta"
+    assert res.physical.delta_rows == (log_copy.num_events, grown.num_events)
+    # the cache-stats proof that only the suffix was scanned
+    assert eng.stats.rows_scanned - base_scanned == 250
+    assert eng.stats.delta_hits == 1 and not res.from_cache
+    np.testing.assert_array_equal(res.value, streaming_dfg(grown))
+    # ... and against the Algorithm 1 oracle on the materialized stream
+    repo = repository_from_memmap(grown)
+    src, dst, valid = repo.df_pairs()
+    np.testing.assert_array_equal(
+        res.value, dfg_numpy(src, dst, valid, repo.num_activities)
+    )
+    # the delta result was re-cached: the next run is a plain hit
+    again = Q.log(grown).using(eng).dfg()
+    assert again.from_cache and eng.stats.delta_hits == 1
+
+
+def test_delta_links_pairs_straddling_the_boundary(tmp_path):
+    """Interleaved cases whose last prefix event pairs with their first
+    suffix event — the carried last_by_case state is what counts them."""
+    # case 0: 0 .. 2 | 1   case 1: 1 .. 0 | 2   (| = append boundary)
+    log = _write_log(
+        tmp_path / "log",
+        act=[0, 1, 2, 0], case=[0, 1, 0, 1], times=[0.0, 1.0, 2.0, 3.0],
+        num_activities=3,
+    )
+    eng = QueryEngine(memory_budget_events=0)
+    Q.log(log).using(eng).dfg()
+    grown = log.append(
+        np.array([1, 2], np.int32), np.array([0, 1], np.int32),
+        np.array([4.0, 5.0]),
+    )
+    res = Q.log(grown).using(eng).dfg()
+    assert res.physical.backend == "delta"
+    want = np.zeros((3, 3), np.int64)
+    want[0, 2] = 1  # case 0 prefix
+    want[1, 0] = 1  # case 1 prefix
+    want[2, 1] = 1  # case 0 boundary pair
+    want[0, 2] += 1  # case 1 boundary pair
+    np.testing.assert_array_equal(res.value, want)
+
+
+def test_delta_histogram(log_copy):
+    eng = QueryEngine(memory_budget_events=0)
+    Q.log(log_copy).using(eng).histogram()
+    grown = _append_tail(log_copy, 100, seed=3)
+    base_scanned = eng.stats.rows_scanned
+    res = Q.log(grown).using(eng).histogram()
+    assert res.physical.backend == "delta"
+    assert eng.stats.rows_scanned - base_scanned == 100
+    want = np.zeros(grown.num_activities, np.int64)
+    for a, _, _ in grown.iter_chunks():
+        want += np.bincount(a, minlength=grown.num_activities)
+    np.testing.assert_array_equal(res.value, want)
+
+
+def test_delta_windowed_open_to_the_right(log_copy):
+    """A window whose right edge lies beyond the old data resumes the
+    cached state and scans only the in-window part of the suffix."""
+    eng = QueryEngine(memory_budget_events=0)
+    t0 = float(np.asarray(log_copy.time)[5000])
+    t1 = float(log_copy.time[-1]) + 1e9
+    Q.log(log_copy).using(eng).window(t0, t1).dfg()
+    grown = _append_tail(log_copy, 200, seed=4)
+    base_scanned = eng.stats.rows_scanned
+    res = Q.log(grown).using(eng).window(t0, t1).dfg()
+    assert res.physical.backend == "delta"
+    assert eng.stats.rows_scanned - base_scanned == 200
+    np.testing.assert_array_equal(
+        res.value, streaming_dfg(grown, time_window=(t0, t1))
+    )
+
+
+def test_free_rewrite_window_inside_old_range(log_copy):
+    """Append-only change + query window entirely inside the old time range
+    ⇒ the cached result is served without any scan."""
+    eng = QueryEngine(memory_budget_events=0)
+    ts = np.asarray(log_copy.time)
+    t0, t1 = float(ts[2000]), float(ts[15000])
+    first = Q.log(log_copy).using(eng).window(t0, t1).dfg()
+    grown = _append_tail(log_copy, 150, seed=5)
+    base_scanned = eng.stats.rows_scanned
+    res = Q.log(grown).using(eng).window(t0, t1).dfg()
+    assert res.from_cache
+    assert eng.stats.delta_free_hits == 1
+    assert eng.stats.rows_scanned == base_scanned  # zero rows touched
+    np.testing.assert_array_equal(res.value, first.value)
+    np.testing.assert_array_equal(
+        res.value, streaming_dfg(grown, time_window=(t0, t1))
+    )
+    # republished under the new fingerprint: the next run is a plain hit
+    hits = eng.stats.cache_hits
+    assert Q.log(grown).using(eng).window(t0, t1).dfg().from_cache
+    assert eng.stats.cache_hits == hits + 1
+
+
+def test_delta_with_grown_activity_vocabulary(log_copy):
+    eng = QueryEngine(memory_budget_events=0)
+    Q.log(log_copy).using(eng).dfg()
+    grown = _append_tail(log_copy, 80, seed=6, new_activity=True)
+    assert grown.num_activities == log_copy.num_activities + 1
+    res = Q.log(grown).using(eng).dfg()
+    assert res.physical.backend == "delta"
+    assert res.value.shape == (grown.num_activities,) * 2
+    np.testing.assert_array_equal(res.value, streaming_dfg(grown))
+
+
+def test_rewritten_prefix_falls_back_to_full_recompute(log_copy):
+    eng = QueryEngine(memory_budget_events=0)
+    Q.log(log_copy).using(eng).dfg()
+    # edit a sampled head row, then grow: not append-only
+    with open(os.path.join(log_copy.path, "activity.i32"), "r+b") as f:
+        raw = int(np.frombuffer(f.read(4), np.int32)[0])
+        f.seek(0)
+        f.write(
+            np.asarray([(raw + 1) % log_copy.num_activities], np.int32).tobytes()
+        )
+    edited = _append_tail(MemmapLog.open(log_copy.path), 50, seed=7)
+    res = Q.log(edited).using(eng).dfg()
+    assert res.physical.backend == "streaming"  # full rescan, no stale reuse
+    assert eng.stats.delta_hits == 0 and eng.stats.delta_free_hits == 0
+    np.testing.assert_array_equal(res.value, streaming_dfg(edited))
+
+
+def test_repeated_appends_chain_deltas(log_copy):
+    eng = QueryEngine(memory_budget_events=0)
+    Q.log(log_copy).using(eng).dfg()
+    log = log_copy
+    for i in range(3):
+        log = _append_tail(log, 60, seed=10 + i)
+        res = Q.log(log).using(eng).dfg()
+        assert res.physical.backend == "delta"
+        assert res.physical.delta_rows == (log.num_events - 60, log.num_events)
+    assert eng.stats.delta_hits == 3
+    np.testing.assert_array_equal(res.value, streaming_dfg(log))
+
+
+# ---------------------------------------------------------------------------
+# append → run ≡ full recompute (property)
+# ---------------------------------------------------------------------------
+
+
+def _check_append_equals_recompute(tmp_path, seed, n_base, n_app, n_cases, n_acts):
+    rng = np.random.default_rng(seed)
+    act, case, times = _interleaved_stream(rng, n_base, n_cases, n_acts)
+    log = _write_log(tmp_path / f"log{seed}", act, case, times, n_acts)
+    eng = QueryEngine(memory_budget_events=0)
+    Q.log(log).using(eng).dfg()
+
+    a2, c2, t2 = _interleaved_stream(
+        rng, n_app, n_cases, n_acts, t0=float(times[-1])
+    )
+    grown = log.append(a2, c2, t2)
+    res = Q.log(grown).using(eng).dfg()
+    assert res.physical.backend == "delta"
+
+    all_act = np.concatenate([act, a2])
+    all_case = np.concatenate([case, c2])
+    all_t = np.concatenate([times, t2])
+    np.testing.assert_array_equal(
+        res.value, _oracle_psi(all_act, all_case, all_t, n_acts)
+    )
+    np.testing.assert_array_equal(res.value, streaming_dfg(grown))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_append_then_run_equals_recompute_seeded(tmp_path, seed):
+    """Seeded property sweep (runs without hypothesis): random interleaved
+    streams + random-size appends are bit-identical to the oracle."""
+    rng = np.random.default_rng(1000 + seed)
+    _check_append_equals_recompute(
+        tmp_path, seed,
+        n_base=int(rng.integers(2, 400)),
+        n_app=int(rng.integers(1, 200)),
+        n_cases=int(rng.integers(1, 12)),
+        n_acts=int(rng.integers(2, 9)),
+    )
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=hyp_st.integers(0, 2**16),
+        n_base=hyp_st.integers(2, 150),
+        n_app=hyp_st.integers(1, 80),
+        n_cases=hyp_st.integers(1, 8),
+        n_acts=hyp_st.integers(2, 6),
+    )
+    def test_append_then_run_equals_recompute_hypothesis(
+        tmp_path_factory, seed, n_base, n_app, n_cases, n_acts
+    ):
+        tmp = tmp_path_factory.mktemp("hyp")
+        _check_append_equals_recompute(
+            tmp, seed, n_base=n_base, n_app=n_app,
+            n_cases=n_cases, n_acts=n_acts,
+        )
+
+
+# ---------------------------------------------------------------------------
+# satellite fixes
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_reports_its_own_latency(monkeypatch):
+    """A hit's wall_s must be the lookup latency, not the first execution's
+    scan time replayed back to the tenant."""
+    repo = generate_repository(100, ProcessSpec(num_activities=6, seed=8))
+    eng = QueryEngine()
+    real = eng._execute
+
+    def slow(*args, **kwargs):
+        time.sleep(0.05)
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(eng, "_execute", slow)
+    first = Q.log(repo).using(eng).dfg()
+    assert not first.from_cache and first.wall_s >= 0.05
+    second = Q.log(repo).using(eng).dfg()
+    assert second.from_cache
+    assert 0.0 < second.wall_s < first.wall_s
+
+
+def test_repo_memo_is_an_lru_over_multiple_logs(tmp_path, monkeypatch):
+    """Two tenants alternating over two in-budget memmap logs must not
+    re-materialize on every call (the old memo was a single slot)."""
+    import repro.query.execute as ex
+
+    logs = [
+        generate_memmap_log(
+            str(tmp_path / f"l{i}"), 2_000,
+            ProcessSpec(num_activities=7, seed=50 + i), seed=50 + i,
+            batch_traces=100,
+        )
+        for i in range(2)
+    ]
+    calls = []
+    real = ex.repository_from_memmap
+
+    def counting(log):
+        calls.append(log.path)
+        return real(log)
+
+    monkeypatch.setattr(ex, "repository_from_memmap", counting)
+    eng = QueryEngine()  # in-budget → materialized device path
+    for t in (1e5, 2e5, 3e5):
+        for log in logs:
+            res = Q.log(log).using(eng).window(0.0, float(t)).dfg()
+            assert res.physical.materialize
+    assert len(calls) == 2  # one load per log, ever
+
+
+def test_empty_windows_share_one_canonical_plan(log_copy):
+    q1 = Q.log(log_copy).window(5.0, 3.0)
+    q2 = Q.log(log_copy).window(100.0, 90.0)
+    q3 = Q.log(log_copy).window(0.0, 10.0).window(20.0, 30.0)  # empty fusion
+    p1, n1 = canonicalize(q1.logical_plan(DFGSink()))
+    p2, _ = canonicalize(q2.logical_plan(DFGSink()))
+    p3, _ = canonicalize(q3.logical_plan(DFGSink()))
+    assert "normalize_empty_window" in n1
+    assert p1.key() == p2.key() == p3.key()
+    assert [op for op in p1.ops if isinstance(op, Window)] == [EMPTY_WINDOW]
+
+    eng = QueryEngine(memory_budget_events=0)
+    r1 = q1.using(eng).dfg()
+    assert not r1.value.any()
+    assert eng.stats.rows_scanned == 0  # short-circuit: no scan at all
+    assert q2.using(eng).dfg().from_cache  # differently phrased, same entry
+    r3 = q3.using(eng).histogram()
+    assert not r3.value.any() and eng.stats.rows_scanned == 0
+
+
+def test_empty_window_zeros_on_repository():
+    repo = generate_repository(200, ProcessSpec(num_activities=6, seed=9))
+    eng = QueryEngine()
+    res = Q.log(repo).using(eng).window(9.0, 1.0).dfg()
+    assert not res.value.any()
+    assert res.value.shape == (repo.num_activities,) * 2
+    # invalid activity names still error on the short-circuit path
+    with pytest.raises(QueryPlanError):
+        Q.log(repo).using(eng).window(9.0, 1.0).activities(["nope"]).dfg()
+
+
+# ---------------------------------------------------------------------------
+# serving: the live append endpoint keeps dashboards warm
+# ---------------------------------------------------------------------------
+
+
+def test_service_append_endpoint(log_copy):
+    from repro.serve import QueryService
+
+    eng = QueryEngine(memory_budget_events=0)
+    svc = QueryService(engine=eng)
+    svc.register("live", log_copy)
+
+    out1 = svc.query({"log": "live", "sink": "dfg"})
+    assert not out1["from_cache"]
+
+    rng = np.random.default_rng(11)
+    t_last = float(log_copy.time[-1])
+    ack = svc.append({
+        "log": "live",
+        "activity": rng.integers(0, log_copy.num_activities, 40).tolist(),
+        "case": rng.integers(0, log_copy.num_traces, 40).tolist(),
+        "time": np.sort(t_last + rng.uniform(0, 10, 40)).tolist(),
+    })
+    assert ack["appended"] == 40
+    assert ack["num_events"] == log_copy.num_events + 40
+
+    base_scanned = eng.stats.rows_scanned
+    out2 = svc.query({"log": "live", "sink": "dfg"})
+    assert eng.stats.delta_hits == 1  # warm: suffix-only scan
+    assert eng.stats.rows_scanned - base_scanned == 40
+    grown = MemmapLog.open(log_copy.path)
+    np.testing.assert_array_equal(
+        np.asarray(out2["psi"]), streaming_dfg(grown)
+    )
+    # wall_s forwarded to tenants is the measured per-request time
+    out3 = svc.query({"log": "live", "sink": "dfg"})
+    assert out3["from_cache"] and 0.0 < out3["wall_s"] < out1["wall_s"]
+
+
+def test_service_append_rejects_repository():
+    from repro.serve import QueryService
+
+    repo = generate_repository(50, ProcessSpec(num_activities=4, seed=12))
+    svc = QueryService()
+    svc.register("mem", repo)
+    with pytest.raises(QueryPlanError):
+        svc.append({"log": "mem", "activity": [0], "case": [0], "time": [0.0]})
+
+
+def test_service_concurrent_appends_are_serialized(log_copy):
+    """Parallel appends to one registered log must not interleave column
+    writes or lose batches to a last-meta-writer-wins race."""
+    import threading
+
+    from repro.serve import QueryService
+
+    eng = QueryEngine(memory_budget_events=0)
+    svc = QueryService(engine=eng)
+    svc.register("live", log_copy)
+    t_const = float(log_copy.time[-1]) + 100.0  # equal times: any order valid
+    errors = []
+
+    def worker(i):
+        try:
+            svc.append({
+                "log": "live",
+                "activity": [i % log_copy.num_activities] * 50,
+                "case": [i % log_copy.num_traces] * 50,
+                "time": [t_const] * 50,
+            })
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    final = MemmapLog.open(log_copy.path)
+    assert final.num_events == log_copy.num_events + 8 * 50  # nothing lost
+    hist = svc.query({"log": "live", "sink": "histogram"})
+    assert sum(hist["counts"]) == final.num_events  # columns stayed aligned

@@ -112,3 +112,154 @@ def test_repository_and_streaming_agree():
         repo.event_activity[order], repo.event_trace[order], repo.event_time[order]
     )
     np.testing.assert_array_equal(miner.finalize(), psi_repo)
+
+
+# ---------------------------------------------------------------------------
+# append-mode writer + resumable miner state (delta-plan substrate)
+# ---------------------------------------------------------------------------
+
+
+def test_open_append_grows_log(tmp_path):
+    from repro.core import MemmapLog, MemmapLogWriter
+
+    w = MemmapLog.create(str(tmp_path / "log"), 4, 3, 2, chunk_rows=2)
+    w.append(
+        np.array([0, 1, 2, 1], np.int32),
+        np.array([0, 0, 1, 1], np.int32),
+        np.array([0.0, 1.0, 2.0, 3.0]),
+    )
+    log = w.close()
+
+    aw = MemmapLogWriter.open_append(str(tmp_path / "log"))
+    # new activity id 3 and case id 2 grow the vocabularies
+    aw.append(
+        np.array([3, 0], np.int32),
+        np.array([2, 0], np.int32),
+        np.array([3.5, 4.0]),
+    )
+    grown = aw.close()
+
+    assert grown.num_events == 6
+    assert grown.num_activities == 4
+    assert grown.num_traces == 3
+    np.testing.assert_array_equal(
+        np.asarray(grown.activity), [0, 1, 2, 1, 3, 0]
+    )
+    np.testing.assert_array_equal(np.asarray(grown.time[:4]), np.asarray(log.time))
+    # the old handle still views the old row count
+    assert log.num_events == 4
+
+
+def test_append_rejects_time_disorder(tmp_path):
+    from repro.core import MemmapLog, MemmapLogWriter
+
+    w = MemmapLog.create(str(tmp_path / "log"), 2, 2, 1, chunk_rows=2)
+    w.append(
+        np.array([0, 1], np.int32), np.array([0, 0], np.int32),
+        np.array([0.0, 5.0]),
+    )
+    w.close()
+    aw = MemmapLogWriter.open_append(str(tmp_path / "log"))
+    with pytest.raises(ValueError, match="time-ordered"):
+        aw.append(
+            np.array([1], np.int32), np.array([0], np.int32),
+            np.array([4.0]),  # before the stored last time
+        )
+    with pytest.raises(ValueError, match="time-ordered"):
+        aw.append(
+            np.array([1, 1], np.int32), np.array([0, 0], np.int32),
+            np.array([7.0, 6.0]),  # internally unsorted
+        )
+
+
+def test_memmap_append_convenience(small_log, tmp_path):
+    import shutil
+
+    from repro.core import MemmapLog
+
+    path = str(tmp_path / "copy")
+    shutil.copytree(small_log.path, path)
+    log = MemmapLog.open(path)
+    t_last = float(log.time[-1])
+    grown = log.append(
+        np.array([0, 1], np.int32),
+        np.array([0, 0], np.int32),
+        np.array([t_last + 1.0, t_last + 2.0]),
+    )
+    assert grown.num_events == log.num_events + 2
+    np.testing.assert_array_equal(
+        np.asarray(grown.activity[: log.num_events]), np.asarray(log.activity)
+    )
+
+
+def test_miner_snapshot_restore_is_exact(small_log):
+    """Splitting a scan at any point and resuming from a snapshot must be
+    bit-identical to one continuous pass (Ψ, open-case tails, counters)."""
+    full = streaming_dfg(small_log)
+    for split in (0, 1, 7_919, small_log.num_events):
+        miner = StreamingDFGMiner(small_log.num_activities)
+        for a, c, t in small_log.iter_chunks(row_range=(0, split)):
+            miner.update(a, c, t)
+        resumed = StreamingDFGMiner.restore(miner.snapshot())
+        # scribbling on the original after the snapshot must not leak
+        miner.psi[:] = -1
+        miner.last_by_case.clear()
+        for a, c, t in small_log.iter_chunks(
+            row_range=(split, small_log.num_events)
+        ):
+            resumed.update(a, c, t)
+        np.testing.assert_array_equal(resumed.finalize(), full)
+        assert resumed.events_seen == small_log.num_events
+
+
+def test_miner_restore_pads_grown_vocabulary():
+    from repro.core import StreamingDFGMiner
+
+    miner = StreamingDFGMiner(2)
+    miner.update(
+        np.array([0, 1], np.int32), np.array([0, 0], np.int32),
+        np.array([0.0, 1.0]),
+    )
+    big = StreamingDFGMiner.restore(miner.snapshot(), num_activities=4)
+    big.update(
+        np.array([3], np.int32), np.array([0], np.int32), np.array([2.0])
+    )
+    want = np.zeros((4, 4), np.int64)
+    want[0, 1] = 1
+    want[1, 3] = 1  # boundary pair via the carried per-case tail
+    np.testing.assert_array_equal(big.finalize(), want)
+    with pytest.raises(ValueError):
+        StreamingDFGMiner.restore(miner.snapshot(), num_activities=1)
+
+
+def test_aborted_append_leaves_no_orphans(tmp_path):
+    """A writer discarded before close() commits nothing: the next
+    open_append truncates its orphan bytes instead of misaligning."""
+    import os
+
+    from repro.core import MemmapLog, MemmapLogWriter
+
+    w = MemmapLog.create(str(tmp_path / "log"), 2, 2, 1, chunk_rows=2)
+    w.append(
+        np.array([0, 1], np.int32), np.array([0, 0], np.int32),
+        np.array([0.0, 5.0]),
+    )
+    log = w.close()
+
+    aw = MemmapLogWriter.open_append(log.path)
+    aw.append(  # written to disk, but never committed (no close)
+        np.array([1], np.int32), np.array([0], np.int32), np.array([6.0])
+    )
+    with pytest.raises(ValueError):
+        aw.append(  # aborts the writer mid-sequence
+            np.array([0], np.int32), np.array([0], np.int32), np.array([1.0])
+        )
+    del aw
+    assert os.path.getsize(os.path.join(log.path, "activity.i32")) > 2 * 4
+
+    grown = log.append(
+        np.array([0], np.int32), np.array([0], np.int32), np.array([9.0])
+    )
+    assert grown.num_events == 3  # the uncommitted row did not leak in
+    np.testing.assert_array_equal(np.asarray(grown.activity), [0, 1, 0])
+    np.testing.assert_array_equal(np.asarray(grown.time), [0.0, 5.0, 9.0])
