@@ -1,0 +1,168 @@
+"""Multi-source query benchmark: what does the union algebra buy?
+
+Two measurements on a pair of memmap logs (half the ``BENCH_EVENTS`` budget
+each), emitted as CSV rows (and ``BENCH_multilog.json``):
+
+* **union vs pre-concatenated** — ``Q.logs(a, b).dfg()`` (per-branch scans,
+  merged on the aligned vocabulary) against the same events mined as one
+  pre-concatenated single-source repository.  The union pays alignment but
+  keeps the branches separately cached — which is what makes the next
+  measurement possible at all;
+* **append to one branch** — after a 1% append to log ``a``, the union
+  re-runs as one branch-``a`` delta scan (suffix only) plus a branch-``b``
+  cache hit, vs the full recompute a pre-concatenated store would need;
+* **compare vs hand-rolled** — ``Q.logs(a, b).compare()`` against issuing
+  two independent single-log queries and differencing by hand (the numpy
+  workflow the ISSUE's motivation wants to retire).
+
+Correctness is asserted inline against the concatenation oracle.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+# runnable directly (`python benchmarks/bench_multilog.py`) without PYTHONPATH
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+EVENTS = int(os.environ.get("BENCH_EVENTS", 2_000_000))
+APPEND_FRACTION = 0.01
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def run(write_json: bool = False) -> list:
+    """CSV rows; ``write_json=True`` (direct invocation only) also rewrites
+    the committed ``BENCH_multilog.json`` record."""
+    from repro.core import concat_repositories
+    from repro.data import ProcessSpec, generate_memmap_log
+    from repro.query import Q, QueryEngine
+    from repro.query.execute import repository_from_memmap
+
+    rows = []
+    tmp = tempfile.mkdtemp(prefix="graphpm_benchm_")
+    half = max(EVENTS // 2, 1)
+    logs = [
+        generate_memmap_log(
+            os.path.join(tmp, f"log{i}"), half,
+            ProcessSpec(num_activities=48 + 16 * i, seed=31 + i,
+                        horizon_days=120),
+            seed=31 + i,
+        )
+        for i in range(2)
+    ]
+    log_a, log_b = logs
+
+    eng = QueryEngine(memory_budget_events=0)  # streaming-first: resumable
+    union_res, union_us = _timed(
+        lambda: Q.logs((log_a, "a"), (log_b, "b")).using(eng).dfg()
+    )
+    assert union_res.physical.backend == "union"
+
+    # the pre-concatenated alternative: one single-source store holding the
+    # same events (materialized once, outside the timed region)
+    concat = concat_repositories([
+        ("a", repository_from_memmap(log_a, "a")),
+        ("b", repository_from_memmap(log_b, "b")),
+    ])
+    cold = QueryEngine()
+    concat_res, concat_us = _timed(lambda: Q.log(concat).using(cold).dfg())
+    assert np.array_equal(union_res.value, concat_res.value)
+    rows.append((
+        "multilog_union_cold", union_us,
+        f"preconcat_us={concat_us:.0f};"
+        f"ratio={union_us / max(concat_us, 1):.2f}x",
+    ))
+
+    # -- append 1% to branch a: union re-runs as suffix-delta + cache hit ----
+    n_app = max(int(EVENTS * APPEND_FRACTION), 1)
+    rng = np.random.default_rng(5)
+    act = rng.integers(0, log_a.num_activities, n_app).astype(np.int32)
+    case = rng.integers(0, log_a.num_traces, n_app).astype(np.int32)
+    times = float(log_a.time[-1]) + np.sort(rng.uniform(0.0, 3600.0, n_app))
+    grown_a = log_a.append(act, case, times)
+
+    scan_before = eng.stats.rows_scanned
+    delta_res, delta_us = _timed(
+        lambda: Q.logs((grown_a, "a"), (log_b, "b")).using(eng).dfg()
+    )
+    rows_scanned = eng.stats.rows_scanned - scan_before
+    assert eng.stats.delta_hits >= 1 and rows_scanned == n_app
+
+    cold2 = QueryEngine(memory_budget_events=0)
+    full_res, recompute_us = _timed(
+        lambda: Q.logs((grown_a, "a"), (log_b, "b")).using(cold2).dfg()
+    )
+    assert np.array_equal(delta_res.value, full_res.value)
+    speedup = recompute_us / max(delta_us, 1.0)
+    rows.append((
+        "multilog_append_one_branch", delta_us,
+        f"recompute_us={recompute_us:.0f};suffix_rows={n_app};"
+        f"speedup={speedup:.1f}x",
+    ))
+
+    # -- compare vs two hand-rolled independent queries ----------------------
+    cmp_eng = QueryEngine(memory_budget_events=0)
+    cmp_res, compare_us = _timed(
+        lambda: Q.logs((grown_a, "a"), (log_b, "b")).using(cmp_eng).compare()
+    )
+
+    def hand_rolled():
+        e = QueryEngine(memory_budget_events=0)
+        pa = Q.log(grown_a).using(e).dfg().value
+        pb = Q.log(log_b).using(e).dfg().value
+        names = sorted(
+            set(grown_a.activity_labels()) | set(log_b.activity_labels())
+        )
+        idx = {n: i for i, n in enumerate(names)}
+        out = []
+        for psi, src in ((pa, grown_a), (pb, log_b)):
+            ids = np.asarray([idx[n] for n in src.activity_labels()])
+            m = np.zeros((len(names), len(names)), np.int64)
+            m[np.ix_(ids, ids)] = psi
+            out.append(m)
+        return out[0], out[1], out[1] - out[0]
+
+    (ha, hb, hdiff), hand_us = _timed(hand_rolled)
+    assert np.array_equal(cmp_res.value.psis[0], ha)
+    assert np.array_equal(cmp_res.value.psis[1], hb)
+    assert np.array_equal(cmp_res.value.diffs[1], hdiff)
+    rows.append((
+        "multilog_compare", compare_us,
+        f"hand_rolled_us={hand_us:.0f};"
+        f"ratio={compare_us / max(hand_us, 1):.2f}x",
+    ))
+
+    if not write_json:
+        return rows
+    with open("BENCH_multilog.json", "w") as f:
+        json.dump({
+            "events_total": log_a.num_events + log_b.num_events + n_app,
+            "append_rows": n_app,
+            "union_cold_us": union_us,
+            "preconcat_us": concat_us,
+            "union_delta_us": delta_us,
+            "union_recompute_us": recompute_us,
+            "delta_speedup": speedup,
+            "rows_scanned_delta": int(rows_scanned),
+            "compare_us": compare_us,
+            "hand_rolled_us": hand_us,
+        }, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(write_json=True):
+        print(",".join(str(x) for x in r))

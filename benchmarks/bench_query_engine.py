@@ -11,6 +11,11 @@ Three measurements, emitted as CSV rows (and ``BENCH_query.json``):
   full-log scan.  Time should scale with the dice, not the log.
 * **cache** — the same diced query re-issued: plan/result-cache hit
   latency vs cold execution.
+* **calibration** — the measured numpy↔device crossover (``tiny_pairs``)
+  and a machine-sized memory budget, written as the ``calibration`` section
+  that :func:`repro.query.planner.load_calibration` feeds back into the
+  cost model (ROADMAP "smarter cost model": measured thresholds when
+  available, the static constants as fallback).
 """
 
 from __future__ import annotations
@@ -114,6 +119,43 @@ def run() -> list:
         f"cold_us={cold_us:.0f};speedup={cold_us / max(hit_us, 1):.0f}x",
     ))
     results["cache"] = {"cold_us": cold_us, "hit_us": hit_us}
+
+    # -- 4. cost-model calibration (consumed by planner.load_calibration) ----
+    from repro.core.dfg import dfg as dfg_device
+    from repro.core.dfg import dfg_numpy
+
+    rng = np.random.default_rng(3)
+    a_count = 32
+    crossover = None
+    for n in (512, 1024, 2048, 4096, 8192):
+        src = rng.integers(0, a_count, n).astype(np.int32)
+        dst = rng.integers(0, a_count, n).astype(np.int32)
+        valid = np.ones(n, dtype=bool)
+        np_us = _best(lambda: dfg_numpy(src, dst, valid, a_count), n=3)
+        dev_us = _best(
+            lambda: dfg_device(src, dst, valid, a_count, backend="scatter"),
+            n=3,
+        )
+        if dev_us <= np_us:
+            crossover = n
+            break
+    if crossover is None:
+        crossover = 8192  # device never won in the measured range
+    # budget: a quarter of physical RAM at ~24 B/event (three columns +
+    # canonicalization slack), inside the planner's sanity rails
+    try:
+        phys = os.sysconf("SC_PAGE_SIZE") * os.sysconf("SC_PHYS_PAGES")
+        budget = max(min(phys // 4 // 24, 1 << 26), 1 << 20)
+    except (ValueError, OSError, AttributeError):
+        budget = 1 << 22
+    results["calibration"] = {
+        "tiny_pairs": int(crossover),
+        "memory_budget_events": int(budget),
+    }
+    rows.append((
+        "query_calibration", float(crossover),
+        f"tiny_pairs={crossover};memory_budget_events={budget}",
+    ))
 
     with open("BENCH_query.json", "w") as f:
         json.dump(results, f, indent=1)

@@ -31,6 +31,7 @@ def main() -> None:
         bench_dicing,
         bench_kernels,
         bench_memory_scaling,
+        bench_multilog,
         bench_query_engine,
         roofline_table,
     )
@@ -42,6 +43,7 @@ def main() -> None:
         (bench_kernels, "kernels"),
         (bench_query_engine, "query"),
         (bench_delta, "delta"),
+        (bench_multilog, "multilog"),
         (roofline_table, "roofline"),
     ):
         try:

@@ -6,7 +6,12 @@ views, distributed (shard_map) and streaming (out-of-core) execution,
 DFG-based discovery, and runtime telemetry mining.
 """
 
-from .repository import EventRepository, GraphRepo, paper_example_repo
+from .repository import (
+    EventRepository,
+    GraphRepo,
+    concat_repositories,
+    paper_example_repo,
+)
 from .soundness import SoundnessReport, check_columnar, check_graph, is_sound
 from .dfg import (
     dfg,
@@ -46,7 +51,8 @@ from .variants import TraceVariants, trace_variants, variant_filtered_repository
 from .conformance import ReplayResult, replay_fitness
 
 __all__ = [
-    "EventRepository", "GraphRepo", "paper_example_repo",
+    "EventRepository", "GraphRepo", "concat_repositories",
+    "paper_example_repo",
     "SoundnessReport", "check_columnar", "check_graph", "is_sound",
     "dfg", "dfg_algorithm1", "dfg_from_repository", "dfg_numpy",
     "dfg_onehot", "dfg_scatter",

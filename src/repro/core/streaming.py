@@ -32,8 +32,18 @@ __all__ = [
     "MemmapLogWriter",
     "MinerState",
     "StreamingDFGMiner",
+    "memmap_log_name",
     "streaming_dfg",
 ]
+
+
+def memmap_log_name(log: "MemmapLog") -> str:
+    """The log name a memmap source contributes to provenance columns and
+    auto-derived union branch names: the final path component (the name the
+    log was created under).  One shared rule — the query layers must agree
+    on it or branch names and materialized ``log_names`` drift apart."""
+    base = os.path.basename(os.path.normpath(log.path))
+    return base or "memmap"
 
 
 # ---------------------------------------------------------------------------
@@ -108,6 +118,12 @@ class MemmapLog:
                 np.asarray(self.case[start:end]),
                 np.asarray(self.time[start:end]),
             )
+
+    def activity_labels(self) -> list:
+        """Synthetic names for the integer activity ids — the same labels the
+        mining CLI and the query engine use, so memmap branches align with
+        in-memory repositories on a shared activity axis."""
+        return [f"act_{i:03d}" for i in range(self.num_activities)]
 
     def rows_for_window(self, t0: float, t1: float) -> Tuple[int, int]:
         """Binary search the time column (stream is time-ordered) — this is

@@ -20,15 +20,20 @@ from .ast import (
     EMPTY_WINDOW,
     Activities,
     ApplyView,
+    CompareSink,
     DFGSink,
+    FromLogs,
     HistogramSink,
     LogicalPlan,
+    LogRef,
     Q,
     Query,
     QueryPlanError,
     TopVariants,
+    UnionSource,
     VariantsSink,
     Window,
+    union_activity_names,
 )
 from .cache import (
     MemmapFingerprint,
@@ -37,28 +42,40 @@ from .cache import (
     fingerprint,
     fingerprint_memmap,
     fingerprint_repository,
+    fingerprint_union,
     parse_memmap_fingerprint,
     prefix_digest,
+    split_union_fingerprint,
 )
 from .execute import (
+    CompareResult,
     EngineStats,
     QueryEngine,
     QueryResult,
     default_engine,
     set_default_engine,
 )
-from .optimize import canonicalize
-from .planner import PhysicalPlan, SourceInfo, plan_physical, source_info
+from .optimize import canonicalize, distribute_over_union
+from .planner import (
+    PhysicalPlan,
+    SourceInfo,
+    load_calibration,
+    plan_physical,
+    source_info,
+)
 
 __all__ = [
     "Q", "Query", "QueryPlanError",
     "Window", "EMPTY_WINDOW", "Activities", "TopVariants", "ApplyView",
-    "DFGSink", "HistogramSink", "VariantsSink", "LogicalPlan",
+    "DFGSink", "HistogramSink", "VariantsSink", "CompareSink", "LogicalPlan",
+    "LogRef", "FromLogs", "UnionSource", "union_activity_names",
     "QueryCache", "fingerprint", "fingerprint_memmap",
-    "fingerprint_repository", "prefix_digest", "parse_memmap_fingerprint",
+    "fingerprint_repository", "fingerprint_union", "split_union_fingerprint",
+    "prefix_digest", "parse_memmap_fingerprint",
     "MemmapFingerprint", "ResumableState",
-    "QueryEngine", "QueryResult", "EngineStats",
+    "QueryEngine", "QueryResult", "CompareResult", "EngineStats",
     "default_engine", "set_default_engine",
-    "canonicalize", "plan_physical", "PhysicalPlan", "SourceInfo",
-    "source_info",
+    "canonicalize", "distribute_over_union",
+    "plan_physical", "PhysicalPlan", "SourceInfo", "source_info",
+    "load_calibration",
 ]

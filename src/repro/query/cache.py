@@ -37,6 +37,7 @@ import json
 import threading
 from collections import OrderedDict
 from typing import Optional, Tuple
+from urllib.parse import quote, unquote
 
 import numpy as np
 
@@ -47,6 +48,8 @@ __all__ = [
     "fingerprint",
     "fingerprint_repository",
     "fingerprint_memmap",
+    "fingerprint_union",
+    "split_union_fingerprint",
     "prefix_digest",
     "MemmapFingerprint",
     "parse_memmap_fingerprint",
@@ -165,11 +168,51 @@ def parse_memmap_fingerprint(fp: str) -> Optional[MemmapFingerprint]:
         return None
 
 
+def fingerprint_union(union) -> str:
+    """Composite fingerprint ``union(name=fp_a|name=fp_b|...)``.
+
+    Each component is the branch's own fingerprint — memmap branches keep
+    their **prefix-preserving** ``memmap:<digest>:<rows>:<A>`` form, so the
+    append-only proof (and with it the delta path) still works *per branch*
+    while any branch change invalidates every union-level entry.  Branch
+    names are part of the key: the same bytes relabeled is a different
+    result (compare axes, provenance).  Names are percent-escaped so a
+    caller-supplied name containing ``=`` / ``|`` cannot forge another
+    union's key."""
+    return "union(" + "|".join(
+        f"{quote(b.name, safe='')}={fingerprint(b)}" for b in union.branches
+    ) + ")"
+
+
+def split_union_fingerprint(fp: str):
+    """``union(a=fp1|b=fp2)`` → ``[("a", fp1), ("b", fp2)]`` (None if not a
+    union fingerprint)."""
+    if not (fp.startswith("union(") and fp.endswith(")")):
+        return None
+    out = []
+    for part in fp[len("union("):-1].split("|"):
+        name, _, bfp = part.partition("=")
+        out.append((unquote(name), bfp))
+    return out
+
+
 def fingerprint(source) -> str:
+    # local import: ast.py depends on core only, so this cannot cycle
+    from .ast import FromLogs, LogRef, UnionSource
+
     if isinstance(source, EventRepository):
         return fingerprint_repository(source)
     if isinstance(source, MemmapLog):
         return fingerprint_memmap(source)
+    if isinstance(source, UnionSource):
+        return fingerprint_union(source)
+    if isinstance(source, LogRef):
+        return fingerprint(source.source)
+    if isinstance(source, FromLogs):
+        # derived from the parent's content + the selection — no need to
+        # materialize the O(E) sub-repository just to key the cache
+        h = hashlib.sha256("\x00".join(source.names).encode()).hexdigest()[:8]
+        return f"fromlogs:{h}:{fingerprint_repository(source.repo)}"
     raise TypeError(f"cannot fingerprint {type(source).__name__}")
 
 

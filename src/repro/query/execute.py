@@ -34,17 +34,20 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.conformance import replay_fitness
 from repro.core.dfg import dfg, dfg_numpy
 from repro.core.dicing import dice_repository, pair_mask_for_window
+from repro.core.discovery import discover_dependency_graph
 from repro.core.distributed import distributed_dfg
-from repro.core.repository import EventRepository
-from repro.core.streaming import MemmapLog, StreamingDFGMiner
+from repro.core.repository import EventRepository, concat_repositories
+from repro.core.streaming import MemmapLog, StreamingDFGMiner, memmap_log_name
 from repro.core.variants import trace_variants, variant_filtered_repository
 from repro.core.views import HIDDEN
 
 from .ast import (
     Activities,
     ApplyView,
+    CompareSink,
     DFGSink,
     HistogramSink,
     LogicalPlan,
@@ -52,9 +55,11 @@ from .ast import (
     QueryPlanError,
     Sink,
     TopVariants,
+    UnionSource,
     VariantsSink,
     Window,
     is_barrier,
+    union_activity_names,
 )
 from .cache import (
     QueryCache,
@@ -63,23 +68,24 @@ from .cache import (
     parse_memmap_fingerprint,
     prefix_digest,
 )
-from .optimize import canonicalize, compose_views
+from .optimize import canonicalize, compose_views, distribute_over_union
 from .planner import (
-    MEMORY_BUDGET_EVENTS,
-    TINY_PAIRS,
     PhysicalPlan,
     SourceInfo,
+    load_calibration,
     plan_physical,
     source_info,
 )
 
 __all__ = [
     "QueryResult",
+    "CompareResult",
     "EngineStats",
     "QueryEngine",
     "default_engine",
     "set_default_engine",
     "memmap_activity_names",
+    "memmap_log_name",
     "repository_from_memmap",
 ]
 
@@ -110,20 +116,63 @@ class EngineStats:
     delta_hits: int = 0  # append-only: resumed cached state over the suffix
     delta_free_hits: int = 0  # append-only + window inside old range: no scan
     rows_scanned: int = 0  # memmap rows fed to streaming/delta scans
+    union_queries: int = 0  # multi-source (Q.logs) queries, incl. compare
+
+
+@dataclasses.dataclass
+class CompareResult:
+    """What :meth:`Query.compare` returns (as ``QueryResult.value``).
+
+    All matrices share one aligned (visible) activity axis ``names``.
+    ``diffs[i] = psis[i] - psis[0]`` — the Ψ-drift of log ``i`` against the
+    first (reference) log; ``fitness[i]`` is the replay fitness of log
+    ``i``'s traces on the dependency graph discovered from the reference
+    log (None when a branch is too large to materialize in budget).
+    Windows/filters/views shape the Ψ matrices; fitness is a whole-log
+    conformance signal.
+    """
+
+    log_names: Tuple[str, ...]
+    names: List[str]
+    psis: Tuple[np.ndarray, ...]
+    diffs: Tuple[np.ndarray, ...]
+    fitness: Tuple[Optional[float], ...]
+
+    @property
+    def diff(self) -> np.ndarray:
+        """The two-log drift matrix (``psis[1] - psis[0]``)."""
+        if len(self.psis) != 2:
+            raise ValueError(
+                f"diff is defined for exactly two logs (got "
+                f"{len(self.psis)}); index diffs[] instead"
+            )
+        return self.diffs[1]
+
+    def drift(self, i: int = 0, j: int = 1) -> np.ndarray:
+        return self.psis[j] - self.psis[i]
 
 
 def memmap_activity_names(log: MemmapLog) -> List[str]:
     """MemmapLog stores integer activity ids; the engine labels them the
     same way the mining CLI does."""
-    return [f"act_{i:03d}" for i in range(log.num_activities)]
+    return log.activity_labels()
 
 
-def repository_from_memmap(log: MemmapLog) -> EventRepository:
+
+
+def repository_from_memmap(
+    log: MemmapLog, log_name: Optional[str] = None
+) -> EventRepository:
     """Materialize an in-budget memmap log as a canonical EventRepository.
 
     Stays numeric end to end (no per-event Python strings): the columns are
     already int32/float64, so canonicalization is one lexsort + one unique.
     The planner's budget gate keeps this O(memory_budget_events).
+
+    ``log_name`` (default: derived from the memmap path) becomes the
+    repository's single ``log_names`` entry, so cross-log provenance
+    survives materialization — unions/compares over several materialized
+    memmaps keep telling their branches apart.
     """
     acts, cases, times = [], [], []
     for a, c, t in log.iter_chunks():
@@ -145,7 +194,7 @@ def repository_from_memmap(log: MemmapLog) -> EventRepository:
         trace_log=np.zeros(uniq_cases.shape[0], dtype=np.int32),
         activity_names=memmap_activity_names(log),
         trace_names=[f"case_{int(x)}" for x in uniq_cases],
-        log_names=["l1"],
+        log_names=[log_name or memmap_log_name(log)],
     )
 
 
@@ -239,15 +288,25 @@ class QueryEngine:
         self,
         *,
         mesh=None,
-        tiny_pairs: int = TINY_PAIRS,
-        memory_budget_events: int = MEMORY_BUDGET_EVENTS,
+        tiny_pairs: Optional[int] = None,
+        memory_budget_events: Optional[int] = None,
         fused_dicing: bool = True,
         cache: Optional[QueryCache] = None,
         repo_memo_size: int = 4,
+        calibration_path: Optional[str] = None,
     ):
         self.mesh = mesh
-        self.tiny_pairs = tiny_pairs
-        self.memory_budget_events = memory_budget_events
+        # thresholds left unset fall back to the measured calibration
+        # (BENCH_query.json) when one exists, else the static constants
+        cal = load_calibration(calibration_path)
+        self.tiny_pairs = (
+            cal["tiny_pairs"] if tiny_pairs is None else tiny_pairs
+        )
+        self.memory_budget_events = (
+            cal["memory_budget_events"]
+            if memory_budget_events is None
+            else memory_budget_events
+        )
         # the fused Pallas WHERE clause compares f32 timestamps; leave it on
         # unless your timestamps do not round-trip through f32
         self.fused_dicing = fused_dicing
@@ -264,11 +323,17 @@ class QueryEngine:
         # alternating over several in-budget logs each keep their load
         self.repo_memo_size = repo_memo_size
         self._repo_memo: "OrderedDict[str, EventRepository]" = OrderedDict()
+        # compare() fitness per composite union fingerprint (whole-log
+        # signal: one entry serves every window/filter/view over the union)
+        self._fitness_memo: "OrderedDict[str, Tuple]" = OrderedDict()
+        self._max_fitness_memo = 16
         self._lock = threading.Lock()
 
     # -- public --------------------------------------------------------------
     def run(self, query: Query, sink: Sink) -> QueryResult:
         t_start = time.perf_counter()
+        if isinstance(query.source, UnionSource):
+            return self._run_union(query, sink, t_start)
         with self._lock:
             self.stats.queries += 1
         info = source_info(query.source)
@@ -293,23 +358,7 @@ class QueryEngine:
             if delta is not None:
                 return delta
 
-        plan_key = (logical.key(), info)
-        with self._lock:
-            physical = self._plans.get(plan_key)
-            if physical is not None:
-                self._plans.move_to_end(plan_key)
-        if physical is None:
-            physical = plan_physical(
-                logical, info,
-                mesh=self.mesh,
-                tiny_pairs=self.tiny_pairs,
-                memory_budget_events=self.memory_budget_events,
-                fused_dicing=self.fused_dicing,
-            )
-            with self._lock:
-                self._plans[plan_key] = physical
-                while len(self._plans) > self._max_plans:
-                    self._plans.popitem(last=False)
+        physical = self._plan_cached(logical, info)
 
         t0 = time.perf_counter()
         value, names, resume = self._execute(
@@ -327,6 +376,28 @@ class QueryEngine:
             source_hint=self._source_hint(query.source),
         )
         return result
+
+    def _plan_cached(self, logical: LogicalPlan, info: SourceInfo) -> PhysicalPlan:
+        """LRU-memoized physical planning (plans depend only on the canonical
+        plan + source shape, never on data bytes)."""
+        plan_key = (logical.key(), info)
+        with self._lock:
+            physical = self._plans.get(plan_key)
+            if physical is not None:
+                self._plans.move_to_end(plan_key)
+                return physical
+        physical = plan_physical(
+            logical, info,
+            mesh=self.mesh,
+            tiny_pairs=self.tiny_pairs,
+            memory_budget_events=self.memory_budget_events,
+            fused_dicing=self.fused_dicing,
+        )
+        with self._lock:
+            self._plans[plan_key] = physical
+            while len(self._plans) > self._max_plans:
+                self._plans.popitem(last=False)
+        return physical
 
     def explain(self, query: Query, sink: Sink) -> str:
         info = source_info(query.source)
@@ -347,6 +418,252 @@ class QueryEngine:
             f"plan key: {logical.key()}",
         ]
         return "\n".join(lines)
+
+    # -- union / compare (multi-source) --------------------------------------
+    @staticmethod
+    def _branch_names_of(source) -> List[str]:
+        if isinstance(source, EventRepository):
+            return list(source.activity_names)
+        return memmap_activity_names(source)
+
+
+    @staticmethod
+    def _align_ids(branch_names: List[str], union_names: List[str]) -> np.ndarray:
+        uidx = {n: i for i, n in enumerate(union_names)}
+        return np.asarray([uidx[n] for n in branch_names], dtype=np.int64)
+
+    def _run_union(self, query: Query, sink: Sink, t_start: float) -> QueryResult:
+        """Execute a :class:`UnionSource` plan.
+
+        Distributive sinks (DFG / histogram / compare) run one sub-query per
+        branch through :meth:`run` itself — so every branch gets its own
+        cache entry, its own cost-model choice, and its own append-aware
+        delta path (an append to one log rescans only that log's suffix;
+        the other branches are plain cache hits).  Branch results are then
+        aligned onto the union activity vocabulary and merged; activity
+        masks and views run once at the merge
+        (:func:`~repro.query.optimize.distribute_over_union`).
+
+        Non-distributive plans (variants sink, materializing ops) run on the
+        canonical concatenated repository instead (budget-gated by the
+        planner) — bit-identical by construction.
+        """
+        union: UnionSource = query.source
+        with self._lock:
+            self.stats.queries += 1
+            self.stats.union_queries += 1
+        # derived from unresolved branch metadata: a cache hit must not pay
+        # an O(E) FromLogs materialization
+        union_names = union_activity_names(union)
+        logical, rewrites = canonicalize(
+            query.logical_plan(sink), union_names
+        )
+        fp = fingerprint(union)
+        key = (fp, logical.key())
+        cached = self.cache.get(key)
+        if cached is not None:
+            cached.from_cache = True
+            cached.wall_s = time.perf_counter() - t_start
+            with self._lock:
+                self.stats.cache_hits += 1
+            return cached
+
+        # miss: now resolve the branches (FromLogs memoizes its L×T dice)
+        info = source_info(union)
+        physical = self._plan_cached(logical, info)
+        t0 = time.perf_counter()
+
+        if physical.backend == "concat":
+            value, names = self._execute_concat(union, info, logical, fp)
+        else:
+            st = _collect(None, logical)  # planner guaranteed barrier-free
+            if st.keep is not None:
+                _validate_keep(st.keep, union_names)
+            empty = st.window is not None and st.window.empty
+            if isinstance(logical.sink, CompareSink):
+                value, names = self._execute_compare(
+                    union, logical, st, union_names, empty=empty,
+                    union_fp=fp,
+                )
+            else:
+                value, names = self._execute_union_merge(
+                    union, logical, st, union_names, empty=empty
+                )
+
+        wall = time.perf_counter() - t0
+        with self._lock:
+            self.stats.executions += 1
+        result = QueryResult(
+            value=value, names=names, logical=logical, physical=physical,
+            from_cache=False, wall_s=wall, rewrites=tuple(rewrites),
+        )
+        self.cache.put(key, result)
+        return result
+
+    def _branch_raw(self, union: UnionSource, logical: LogicalPlan):
+        """Per-branch *raw* sink values (window pushed down, no mask/view),
+        each via a full :meth:`run` so caching + delta apply per branch."""
+        branch_ops, _merge = distribute_over_union(logical)
+        if isinstance(logical.sink, HistogramSink):
+            branch_sink: Sink = HistogramSink()
+        else:  # DFG and compare both count per-branch Ψ
+            branch_sink = DFGSink(backend=logical.sink.backend)
+        out = []
+        for branch in union.branches:
+            src = branch.resolve()
+            sub = self.run(Query(src, branch_ops, self), branch_sink)
+            out.append((branch, src, sub.value))
+        return out
+
+    def _execute_union_merge(
+        self,
+        union: UnionSource,
+        logical: LogicalPlan,
+        st: _Collected,
+        union_names: List[str],
+        *,
+        empty: bool,
+    ):
+        u = len(union_names)
+        if isinstance(logical.sink, DFGSink):
+            psi = np.zeros((u, u), dtype=np.int64)
+            if not empty:
+                for _branch, src, value in self._branch_raw(union, logical):
+                    ids = self._align_ids(
+                        self._branch_names_of(src), union_names
+                    )
+                    psi[np.ix_(ids, ids)] += value
+            return self._finish_streaming_dfg(psi, union_names, st)
+        counts = np.zeros(u, dtype=np.int64)
+        if not empty:
+            for _branch, src, value in self._branch_raw(union, logical):
+                ids = self._align_ids(self._branch_names_of(src), union_names)
+                counts[ids] += value
+        return self._finish_streaming_hist(counts, union_names, st)
+
+    def _execute_compare(
+        self,
+        union: UnionSource,
+        logical: LogicalPlan,
+        st: _Collected,
+        union_names: List[str],
+        *,
+        empty: bool,
+        union_fp: str,
+    ):
+        u = len(union_names)
+        aligned = []
+        if empty:
+            aligned = [np.zeros((u, u), np.int64) for _ in union.branches]
+        else:
+            for _branch, src, value in self._branch_raw(union, logical):
+                psi = np.zeros((u, u), dtype=np.int64)
+                ids = self._align_ids(self._branch_names_of(src), union_names)
+                psi[np.ix_(ids, ids)] += value
+                aligned.append(psi)
+
+        vis_names: Optional[List[str]] = None
+        psis = []
+        for psi in aligned:
+            v, names = self._finish_streaming_dfg(psi, union_names, st)
+            psis.append(v)
+            vis_names = names  # identical per branch: same union axis + view
+        value = CompareResult(
+            log_names=union.branch_names,
+            names=list(vis_names),
+            psis=tuple(psis),
+            diffs=tuple(p - psis[0] for p in psis),
+            # whole-log signal, independent of window/filter/view — served
+            # from the per-fingerprint memo when the data hasn't changed
+            fitness=self._compare_fitness(union, union_fp),
+        )
+        return value, list(vis_names)
+
+    def _compare_fitness(
+        self, union: UnionSource, union_fp: str
+    ) -> Tuple[Optional[float], ...]:
+        """Replay-fitness drift: every branch replayed against the dependency
+        graph discovered from the first (reference) branch.  Needs whole
+        branch repositories; branches beyond the memory budget report None
+        (the Ψ matrices still compare exactly).
+
+        The value depends only on the union's data (never on the plan's
+        window/filter/view), so it is memoized per composite fingerprint —
+        a dashboard sliding its window re-uses the same tuple."""
+        with self._lock:
+            hit = self._fitness_memo.get(union_fp)
+            if hit is not None:
+                self._fitness_memo.move_to_end(union_fp)
+                return hit
+        fitness = self._compute_compare_fitness(union)
+        with self._lock:
+            self._fitness_memo[union_fp] = fitness
+            while len(self._fitness_memo) > self._max_fitness_memo:
+                self._fitness_memo.popitem(last=False)
+        return fitness
+
+    def _compute_compare_fitness(
+        self, union: UnionSource
+    ) -> Tuple[Optional[float], ...]:
+        repos: List[Optional[EventRepository]] = []
+        for branch in union.branches:
+            src = branch.resolve()
+            if isinstance(src, EventRepository):
+                repos.append(src)
+            elif src.num_events <= self.memory_budget_events:
+                repos.append(
+                    self._materialize(src, fingerprint(src), branch.name)
+                )
+            else:
+                repos.append(None)
+        ref = repos[0]
+        if ref is None:
+            return tuple(None for _ in repos)
+        src_a, dst_a, valid = ref.df_pairs()
+        psi_ref = dfg_numpy(src_a, dst_a, valid, ref.num_activities)
+        starts, ends = ref.trace_boundaries()
+        model = discover_dependency_graph(
+            psi_ref, ref.activity_names, starts, ends
+        )
+        return tuple(
+            float(replay_fitness(r, model).fitness) if r is not None else None
+            for r in repos
+        )
+
+    def _execute_concat(
+        self,
+        union: UnionSource,
+        info: SourceInfo,
+        logical: LogicalPlan,
+        fp: str,
+    ):
+        """Non-distributive union plans run on the materialized canonical
+        concatenation (memoized per composite fingerprint ``fp``)."""
+        with self._lock:
+            repo_u = self._repo_memo.get(fp)
+            if repo_u is not None:
+                self._repo_memo.move_to_end(fp)
+        if repo_u is None:
+            named = []
+            for branch in union.branches:
+                src = branch.resolve()
+                if isinstance(src, MemmapLog):
+                    src = self._materialize(
+                        src, fingerprint(src), branch.name
+                    )
+                named.append((branch.name, src))
+            repo_u = concat_repositories(
+                named, activity_vocab=list(info.activity_names)
+            )
+            with self._lock:
+                self._repo_memo[fp] = repo_u
+                while len(self._repo_memo) > self.repo_memo_size:
+                    self._repo_memo.popitem(last=False)
+        # single-source execution on the concatenation, planned on its shape
+        inner = LogicalPlan("repository", logical.ops, logical.sink)
+        physical = self._plan_cached(inner, source_info(repo_u))
+        value, names, _resume = self._execute(repo_u, inner, physical)
+        return value, names
 
     # -- delta (append-aware) ------------------------------------------------
     @staticmethod
@@ -542,14 +859,23 @@ class QueryEngine:
             np.zeros(a, dtype=np.int64), names, st
         )
 
-    def _materialize(self, log: MemmapLog, fp: Optional[str]) -> EventRepository:
+    def _materialize(
+        self,
+        log: MemmapLog,
+        fp: Optional[str],
+        log_name: Optional[str] = None,
+    ) -> EventRepository:
         if fp is not None:
             with self._lock:
                 repo = self._repo_memo.get(fp)
                 if repo is not None:
                     self._repo_memo.move_to_end(fp)
+                    if log_name is not None and repo.log_names != [log_name]:
+                        # same bytes, different branch name: share the
+                        # columns, fix the provenance
+                        repo = dataclasses.replace(repo, log_names=[log_name])
                     return repo
-        repo = repository_from_memmap(log)
+        repo = repository_from_memmap(log, log_name)
         if fp is not None:
             with self._lock:
                 self._repo_memo[fp] = repo

@@ -48,7 +48,39 @@ from .ast import (
 )
 from repro.core.views import HIDDEN
 
-__all__ = ["canonicalize", "compose_views"]
+__all__ = ["canonicalize", "compose_views", "distribute_over_union"]
+
+
+def distribute_over_union(plan: LogicalPlan) -> Tuple[Tuple[Op, ...], Tuple[Op, ...]]:
+    """Split a canonical **barrier-free** plan into ``(branch_ops,
+    merge_ops)`` for a union source.
+
+    The rewrite is count-preserving because every op in scope is either
+
+    * a :class:`Window` — a pair-endpoint predicate.  Pairs never span
+      branches (traces belong to exactly one log), so filtering each branch
+      and summing equals filtering the concatenation: the window is
+      **pushed into every branch** (where it keeps the branch's own
+      row-range / fused-kernel pushdowns);
+    * an :class:`Activities` pair predicate or an :class:`ApplyView`
+      projection — both are *linear* in Ψ (an output mask, resp.
+      ``Gᵀ Ψ G``), so they commute with the union sum and run **once at the
+      merge**, on the aligned union vocabulary.  Running them per branch
+      would instead have to re-derive branch-local keep-ids/group orders
+      and re-align group axes — same counts, more work, and a worse cache
+      key (branch entries stay reusable as plain single-log scans).
+
+    Materializing ops (:func:`is_barrier`) do not distribute — top-k
+    variants of a union is not the union of per-branch top-k — and are
+    routed to the materialized-concatenation path by the planner.
+    """
+    if plan.has_barrier():
+        raise QueryPlanError(
+            "materializing ops do not distribute over a union"
+        )
+    branch = tuple(op for op in plan.ops if isinstance(op, Window))
+    merge = tuple(op for op in plan.ops if not isinstance(op, Window))
+    return branch, merge
 
 
 def compose_views(first: ApplyView, second: ApplyView) -> ApplyView:

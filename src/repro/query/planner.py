@@ -41,7 +41,9 @@ range it scanned.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import json
+import os
+from typing import Dict, Optional, Tuple
 
 import jax
 
@@ -51,21 +53,89 @@ from repro.core.streaming import MemmapLog
 from .ast import (
     Activities,
     ApplyView,
+    CompareSink,
     DFGSink,
     HistogramSink,
     LogicalPlan,
     QueryPlanError,
+    UnionSource,
     VariantsSink,
     Window,
     is_barrier,
+    source_kind,
+    union_activity_names,
 )
 
-__all__ = ["SourceInfo", "PhysicalPlan", "source_info", "plan_physical"]
+__all__ = [
+    "SourceInfo",
+    "PhysicalPlan",
+    "source_info",
+    "plan_physical",
+    "load_calibration",
+]
 
 #: below this many pairs, numpy beats any device dispatch
 TINY_PAIRS = 2048
 #: above this many events a memmap log is mined out-of-core
 MEMORY_BUDGET_EVENTS = 1 << 22
+
+
+# ---------------------------------------------------------------------------
+# Measured calibration (ROADMAP "smarter cost model")
+# ---------------------------------------------------------------------------
+
+#: sanity rails: a stray or corrupt bench record must not be able to flip
+#: plans far outside the regime the bench actually measured
+_CALIBRATION_CLAMPS = {
+    "tiny_pairs": (256, 4096),
+    "memory_budget_events": (1 << 20, 1 << 26),
+}
+_REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", "..")
+)
+
+
+def load_calibration(path: Optional[str] = None) -> Dict[str, int]:
+    """Cost-model thresholds, measured when available.
+
+    ``benchmarks/bench_query_engine.py`` writes a ``calibration`` section
+    (backend-crossover ``tiny_pairs``, machine-sized
+    ``memory_budget_events``) into ``BENCH_query.json``.  When such a record
+    exists — searched as: explicit ``path``, ``$GRAPHPM_BENCH_QUERY``,
+    ``./BENCH_query.json``, ``<repo root>/BENCH_query.json`` — its values
+    replace the static constants, clamped to sanity rails.  The constants
+    are always the fallback, so a machine that never benchmarked plans
+    exactly as before.
+    """
+    out = {
+        "tiny_pairs": TINY_PAIRS,
+        "memory_budget_events": MEMORY_BUDGET_EVENTS,
+    }
+    # an explicitly named record (argument or env var) is authoritative: if
+    # it is missing or corrupt we fall back to the *static constants*, never
+    # to whatever BENCH_query.json happens to sit in the cwd / repo root
+    explicit = path or os.environ.get("GRAPHPM_BENCH_QUERY")
+    candidates = [explicit] if explicit else [
+        "BENCH_query.json",
+        os.path.join(_REPO_ROOT, "BENCH_query.json"),
+    ]
+    for cand in candidates:
+        if not cand or not os.path.isfile(cand):
+            continue
+        try:
+            with open(cand) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            continue  # unreadable / corrupt: static fallback
+        cal = data.get("calibration")
+        if not isinstance(cal, dict):
+            continue
+        for key, (lo, hi) in _CALIBRATION_CLAMPS.items():
+            v = cal.get(key)
+            if isinstance(v, (int, float)) and not isinstance(v, bool) and v > 0:
+                out[key] = int(min(max(int(v), lo), hi))
+        return out
+    return out
 
 _DFG_BACKENDS = {
     "auto", "numpy", "scatter", "onehot", "pallas", "streaming", "distributed",
@@ -74,11 +144,15 @@ _DFG_BACKENDS = {
 
 @dataclasses.dataclass(frozen=True)
 class SourceInfo:
-    kind: str  # "repository" | "memmap"
+    kind: str  # "repository" | "memmap" | "union(...)"
     num_events: int
     num_pairs: int
     num_activities: int
     activity_names: Optional[Tuple[str, ...]]
+    # union sources only: per-branch shapes (costed individually — one
+    # union may mix an out-of-core memmap branch with in-memory ones)
+    branches: Optional[Tuple["SourceInfo", ...]] = None
+    branch_names: Optional[Tuple[str, ...]] = None
 
 
 def source_info(source) -> SourceInfo:
@@ -98,14 +172,30 @@ def source_info(source) -> SourceInfo:
             num_activities=source.num_activities,
             activity_names=None,
         )
+    if isinstance(source, UnionSource):
+        infos = tuple(source_info(b.resolve()) for b in source.branches)
+        names = tuple(union_activity_names(source))
+        return SourceInfo(
+            kind=source_kind(source),
+            num_events=sum(i.num_events for i in infos),
+            num_pairs=sum(i.num_pairs for i in infos),
+            num_activities=len(names),
+            activity_names=names,
+            branches=infos,
+            branch_names=source.branch_names,
+        )
     raise QueryPlanError(f"unsupported source {type(source).__name__}")
 
 
 @dataclasses.dataclass(frozen=True)
 class PhysicalPlan:
     # numpy | scatter | onehot | pallas | streaming | distributed | delta
+    #   | union | compare | concat
     # ("delta" is engine-chosen only: it resumes cached streaming state over
-    # a proven append-only suffix and is never requestable by the analyst)
+    # a proven append-only suffix and is never requestable by the analyst;
+    # "union"/"compare" merge per-branch sub-plans — the notes record each
+    # branch's own backend — and "concat" materializes the concatenated
+    # repository for ops that do not distribute)
     backend: str
     materialize: bool = False  # memmap source loaded into memory first
     row_range_window: Optional[Tuple[float, float]] = None
@@ -164,6 +254,80 @@ def _device_backend(
     return "pallas"
 
 
+def _plan_union(
+    plan: LogicalPlan,
+    info: SourceInfo,
+    *,
+    mesh,
+    tiny_pairs: int,
+    memory_budget_events: int,
+    fused_dicing: bool,
+) -> PhysicalPlan:
+    """Union costing: every branch is costed on its own shape (one union may
+    mix an out-of-core memmap with tiny in-memory repositories), and the
+    chosen per-branch backends are recorded in the notes."""
+    has_barrier, window, acts, _view = _segment_features(plan)
+    notes = []
+    if window is not None and window.empty:
+        notes.append("empty_window=zeros")
+
+    if isinstance(plan.sink, CompareSink):
+        if len(info.branches) < 2:
+            raise QueryPlanError(
+                "compare() needs at least two logs; got "
+                f"{len(info.branches)}"
+            )
+        if has_barrier:
+            raise QueryPlanError(
+                "materializing ops (top_variants / relink) are not "
+                "supported under compare(): they do not distribute over "
+                "the union"
+            )
+        backend = "compare"
+    elif has_barrier or isinstance(plan.sink, VariantsSink):
+        # non-distributive: materialize the canonical concatenation
+        if info.num_events > memory_budget_events:
+            raise QueryPlanError(
+                "variants / materializing ops on a union concatenate the "
+                "branches in memory; the union exceeds the memory budget"
+            )
+        return PhysicalPlan(
+            backend="concat",
+            materialize=True,
+            notes=("union=materialize_concatenation",) + tuple(notes),
+        )
+    else:
+        backend = "union"
+
+    # per-branch sub-plans: the window distributes into each branch, the
+    # rest (activity mask / view) runs once at the merge
+    branch_ops = (window,) if window is not None else ()
+    branch_sink = (
+        HistogramSink()
+        if isinstance(plan.sink, HistogramSink)
+        else DFGSink(backend=plan.sink.backend)
+    )
+    for name, binfo in zip(info.branch_names, info.branches):
+        bplan = LogicalPlan(binfo.kind, branch_ops, branch_sink)
+        bphys = plan_physical(
+            bplan, binfo,
+            mesh=mesh, tiny_pairs=tiny_pairs,
+            memory_budget_events=memory_budget_events,
+            fused_dicing=fused_dicing,
+        )
+        notes.append(f"branch[{name}]={bphys.backend}")
+    return PhysicalPlan(
+        backend=backend,
+        row_range_window=(
+            (window.t0, window.t1)
+            if window is not None and not window.empty
+            else None
+        ),
+        activities_as_output_mask=acts is not None,
+        notes=tuple(notes),
+    )
+
+
 def plan_physical(
     plan: LogicalPlan,
     info: SourceInfo,
@@ -175,6 +339,21 @@ def plan_physical(
 ) -> PhysicalPlan:
     """Map a canonical logical plan to a physical one.  ``plan`` must be the
     output of :func:`repro.query.optimize.canonicalize`."""
+    if isinstance(plan.sink, (DFGSink, CompareSink)):
+        if plan.sink.backend not in _DFG_BACKENDS:
+            raise QueryPlanError(f"unknown DFG backend {plan.sink.backend!r}")
+    if info.branches is not None:
+        return _plan_union(
+            plan, info,
+            mesh=mesh, tiny_pairs=tiny_pairs,
+            memory_budget_events=memory_budget_events,
+            fused_dicing=fused_dicing,
+        )
+    if isinstance(plan.sink, CompareSink):
+        raise QueryPlanError(
+            "compare() requires a multi-log source — build one with "
+            "Q.logs(a, b, ...)"
+        )
     has_barrier, window, acts, view = _segment_features(plan)
     notes = []
     if window is not None and window.empty:
@@ -199,9 +378,7 @@ def plan_physical(
         return PhysicalPlan(backend="numpy")
 
     # -- DFG sink ------------------------------------------------------------
-    requested = plan.sink.backend
-    if requested not in _DFG_BACKENDS:
-        raise QueryPlanError(f"unknown DFG backend {requested!r}")
+    requested = plan.sink.backend  # validated against _DFG_BACKENDS above
 
     if info.kind == "memmap":
         if has_barrier:

@@ -18,23 +18,87 @@ HTTP/RPC layer can wrap it without touching engine internals::
     })
     out["psi"], out["names"], out["from_cache"]
 
+Multi-log requests name several registered logs at once and compile to the
+engine's union source algebra::
+
+    svc.query({"logs": ["prod", "canary"], "sink": "compare",
+               "window": [t0, t1]})
+    # → per-log Ψ on the aligned vocabulary, drift matrices, replay fitness
+
 Per-tenant access control reuses :class:`repro.core.views.AccessPolicy`:
 a policy registered with the log is enforced on every request (view
-projection applied in-plan, time dicing gated).
+projection applied in-plan, time dicing gated).  Across a union the
+*combination* of the named logs' policies applies — the k-anonymity floor
+is the maximum of the per-log floors, time dicing must be allowed by every
+log, and logs under different (or partially missing) views cannot be
+combined at all: a compare must not leak a log the tenant cannot see at
+full resolution through the diff against a log they can.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import threading
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.streaming import MemmapLog, MemmapLogWriter
-from repro.core.views import AccessDenied, AccessPolicy
-from repro.query import Q, QueryEngine, QueryPlanError
+from repro.core.views import AccessDenied, AccessPolicy, ActivityView
+from repro.query import ApplyView, Q, Query, QueryEngine, QueryPlanError
 
 __all__ = ["QueryService"]
+
+
+@dataclasses.dataclass
+class _Grant:
+    """The effective policy for one request (single log or union)."""
+
+    floor: int = 0
+    view: Optional[ActivityView] = None
+    time_windows_allowed: bool = True
+
+    @property
+    def has_view(self) -> bool:
+        return self.view is not None
+
+
+def _combine_policies(
+    names: List[str], policies: List[Optional[AccessPolicy]]
+) -> _Grant:
+    """Cross-union policy combination (strictest-wins).
+
+    Views are special: applying one view to a union only makes sense when
+    every member is governed by the *same* view — otherwise the union (or a
+    compare diff) would expose a log at a resolution its own policy forbids.
+    """
+    floor = max(
+        (p.min_group_count for p in policies if p is not None), default=0
+    )
+    allowed = all(
+        p.time_windows_allowed for p in policies if p is not None
+    )
+    views = [(n, p.view) for n, p in zip(names, policies)
+             if p is not None and p.view is not None]
+    if not views:
+        return _Grant(floor=floor, view=None, time_windows_allowed=allowed)
+    if len(views) != len(names):
+        bare = [n for n, p in zip(names, policies)
+                if p is None or p.view is None]
+        raise AccessDenied(
+            f"logs {sorted(n for n, _ in views)} are view-protected but "
+            f"{bare} are not; a union would expose them side by side"
+        )
+    canon = ApplyView.from_view(views[0][1])
+    for n, v in views[1:]:
+        if ApplyView.from_view(v) != canon:
+            raise AccessDenied(
+                f"logs {names} are governed by different views and cannot "
+                "be combined in one union/compare"
+            )
+    return _Grant(
+        floor=floor, view=views[0][1], time_windows_allowed=allowed
+    )
 
 
 class QueryService:
@@ -76,7 +140,8 @@ class QueryService:
         prefix-preserving, tenants' cached dashboard queries stay warm: the
         next query per plan runs a ``delta`` scan over just this suffix (or
         is served unchanged when its window predates the append) instead of
-        a full rescan.
+        a full rescan.  Union dashboards over several logs stay warm the
+        same way — only the appended branch is rescanned.
         """
         name = request.get("log")
         with self._lock:
@@ -111,26 +176,30 @@ class QueryService:
         }
 
     # -- the serving endpoint -------------------------------------------------
-    def query(self, request: Dict) -> Dict:
-        """Execute one request dict; returns a JSON-shaped response dict."""
-        name = request.get("log")
+    def _resolve(self, names: List[str]) -> Tuple[List[object], _Grant]:
         with self._lock:
-            if name not in self._logs:
-                raise KeyError(f"unknown log {name!r}")
-            source = self._logs[name]
-            policy = self._policies[name]
+            for n in names:
+                if n not in self._logs:
+                    raise KeyError(f"unknown log {n!r}")
+            sources = [self._logs[n] for n in names]
+            policies = [self._policies[n] for n in names]
+        return sources, _combine_policies(names, policies)
 
-        has_view = policy is not None and policy.view is not None
-        floor = policy.min_group_count if policy is not None else 0
-
-        q = Q.log(source).using(self.engine)
+    def _build_query(
+        self, request: Dict, sources: List[object], names: List[str],
+        grant: _Grant,
+    ) -> Query:
+        if len(names) == 1:
+            q = Q.log(sources[0]).using(self.engine)
+        else:
+            q = Q.logs(*zip(sources, names)).using(self.engine)
         if request.get("window") is not None:
-            if policy is not None and not policy.time_windows_allowed:
+            if not grant.time_windows_allowed:
                 raise AccessDenied("time dicing not permitted by policy")
             t0, t1 = request["window"]
             q = q.window(float(t0), float(t1))
         if request.get("activities") is not None:
-            if has_view:
+            if grant.has_view:
                 # a raw-activity filter under a coarsening view would expose
                 # per-activity counts inside a group (and probe raw names)
                 raise AccessDenied(
@@ -142,8 +211,29 @@ class QueryService:
             )
         if request.get("top_variants") is not None:
             q = q.top_variants(int(request["top_variants"]))
-        if has_view:
-            q = q.view(policy.view)
+        if grant.has_view:
+            q = q.view(grant.view)
+        return q
+
+    def query(self, request: Dict) -> Dict:
+        """Execute one request dict; returns a JSON-shaped response dict.
+
+        ``{"log": name}`` targets a single registered log; ``{"logs":
+        [name, ...]}`` targets their union (sinks ``dfg`` / ``histogram`` /
+        ``variants`` merge; sink ``compare`` keeps the logs apart and
+        reports drift)."""
+        multi = request.get("logs")
+        if multi is not None:
+            names = [str(n) for n in multi]
+            if not names:
+                raise QueryPlanError('"logs" must name at least one log')
+        else:
+            names = [request.get("log")]
+            if names[0] is None:
+                raise KeyError("request names no log")
+        sources, grant = self._resolve(names)
+        q = self._build_query(request, sources, names, grant)
+        floor = grant.floor
 
         sink = request.get("sink", "dfg")
         if sink == "dfg":
@@ -159,7 +249,7 @@ class QueryService:
                 counts = np.where(counts >= floor, counts, 0)
             payload = {"counts": counts.tolist(), "names": res.names}
         elif sink == "variants":
-            if has_view:
+            if grant.has_view:
                 # variant sequences spell out raw activity names
                 raise AccessDenied(
                     "variants expose raw sequences and are not permitted "
@@ -176,11 +266,32 @@ class QueryService:
                 "counts": tv.counts[keep].tolist(),
                 "sequences": [s for s, ok in zip(tv.sequences, keep) if ok],
             }
+        elif sink == "compare":
+            res = q.compare(backend=request.get("backend", "auto"))
+            cr = res.value
+            # the k-anonymity floor applies to every exposed matrix; drift
+            # is recomputed from the floored Ψs so sub-floor counts cannot
+            # be reconstructed from a (raw) difference
+            psis = [
+                np.where(p >= floor, p, 0) if floor else p for p in cr.psis
+            ]
+            payload = {
+                "names": cr.names,
+                "psi": {n: p.tolist() for n, p in zip(cr.log_names, psis)},
+                "diff": {
+                    n: (p - psis[0]).tolist()
+                    for n, p in zip(cr.log_names, psis)
+                },
+                "fitness": {
+                    n: f for n, f in zip(cr.log_names, cr.fitness)
+                },
+            }
         else:
             raise QueryPlanError(f"unknown sink {sink!r}")
 
         payload.update({
-            "log": name,
+            "log": names[0] if multi is None else None,
+            "logs": names if multi is not None else None,
             "sink": sink,
             "from_cache": res.from_cache,
             "backend": res.physical.backend,

@@ -405,9 +405,9 @@ def test_repo_memo_is_an_lru_over_multiple_logs(tmp_path, monkeypatch):
     calls = []
     real = ex.repository_from_memmap
 
-    def counting(log):
+    def counting(log, log_name=None):
         calls.append(log.path)
-        return real(log)
+        return real(log, log_name)
 
     monkeypatch.setattr(ex, "repository_from_memmap", counting)
     eng = QueryEngine()  # in-budget → materialized device path

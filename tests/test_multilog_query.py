@@ -1,0 +1,727 @@
+"""Multi-source query algebra: ``Q.logs`` union + cross-log compare.
+
+Acceptance criterion: union DFG/histogram/variants and CompareSink results
+are bit-identical to the Algorithm 1 oracle on the concatenated (resp.
+per-log) repositories, across physical backends, **including after per-log
+appends** — the delta path scans only the appended branch's suffix
+(asserted via ``EngineStats.rows_scanned``).
+
+The oracle here is engine-independent: concatenation goes through the flat
+string event table of ``EventRepository.from_event_table`` and counting
+through ``df_pairs`` + ``dfg_numpy`` (plus ``dfg_algorithm1`` on the literal
+graph for the small case).
+"""
+
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ActivityView,
+    EventRepository,
+    MemmapLog,
+    concat_repositories,
+    dfg_algorithm1,
+    dfg_numpy,
+    discover_dependency_graph,
+    paper_example_repo,
+    replay_fitness,
+    streaming_dfg,
+    trace_variants,
+)
+from repro.core.dicing import pair_mask_for_window
+from repro.data import ProcessSpec, generate_memmap_log, generate_repository
+from repro.query import (
+    Q,
+    FromLogs,
+    LogRef,
+    QueryEngine,
+    QueryPlanError,
+    UnionSource,
+    canonicalize,
+    fingerprint,
+    load_calibration,
+    split_union_fingerprint,
+)
+from repro.query.ast import DFGSink, CompareSink
+from repro.query.execute import memmap_log_name, repository_from_memmap
+
+
+# ---------------------------------------------------------------------------
+# oracles
+# ---------------------------------------------------------------------------
+
+
+def _concat_oracle(named_repos):
+    """Engine-independent concatenation: the flat string event table through
+    from_event_table, with log provenance."""
+    cases, acts, times, logs = [], [], [], []
+    for name, r in named_repos:
+        for i in range(r.num_events):
+            cases.append(f"{name}/{r.trace_names[int(r.event_trace[i])]}")
+            acts.append(r.activity_names[int(r.event_activity[i])])
+            times.append(float(r.event_time[i]))
+            logs.append(name)
+    return EventRepository.from_event_table(cases, acts, times, log_ids=logs)
+
+
+def _reference_dfg(repo, window=None, keep=None, view=None):
+    src, dst, valid = repo.df_pairs()
+    if window is not None:
+        valid = valid & pair_mask_for_window(repo, window)
+    if keep is not None:
+        ids = np.asarray([repo.activity_names.index(a) for a in keep])
+        m = np.isin(repo.event_activity, ids)
+        valid = valid & m[:-1] & m[1:]
+    psi = dfg_numpy(src, dst, valid, repo.num_activities)
+    if view is not None:
+        psi = view.apply_to_dfg(psi, repo.activity_names)
+    return psi
+
+
+def _embed(psi, names, union_names):
+    """Embed a branch-vocabulary Ψ into the union vocabulary."""
+    out = np.zeros((len(union_names),) * 2, dtype=np.int64)
+    ids = np.asarray([union_names.index(n) for n in names])
+    out[np.ix_(ids, ids)] = psi
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def repo_a():
+    return generate_repository(120, ProcessSpec(num_activities=7, seed=101))
+
+
+@pytest.fixture(scope="module")
+def repo_b():
+    # overlapping-but-different vocabulary (act_000..009 vs 000..006)
+    return generate_repository(90, ProcessSpec(num_activities=10, seed=202))
+
+
+@pytest.fixture(scope="module")
+def multilog_repo():
+    """One repository holding two deployments via the L×T relation."""
+    rng = np.random.default_rng(7)
+    cases, acts, times, logs = [], [], [], []
+    for li, log in enumerate(["canary", "prod"]):
+        for c in range(40):
+            n = int(rng.integers(2, 7))
+            for k in range(n):
+                cases.append(f"{log}_c{c}")
+                acts.append(f"act_{int(rng.integers(0, 6)):03d}")
+                times.append(float(li * 1000 + c * 10 + k))
+                logs.append(log)
+    return EventRepository.from_event_table(cases, acts, times, log_ids=logs)
+
+
+@pytest.fixture()
+def two_mmlogs(tmp_path):
+    logs = []
+    for i in range(2):
+        logs.append(generate_memmap_log(
+            str(tmp_path / f"mm{i}"), 4_000,
+            ProcessSpec(num_activities=8 + 3 * i, seed=60 + i), seed=60 + i,
+            batch_traces=120,
+        ))
+    return logs
+
+
+# ---------------------------------------------------------------------------
+# union sinks vs the Algorithm 1 oracle on the concatenation
+# ---------------------------------------------------------------------------
+
+
+def test_union_dfg_matches_algorithm1_all_backends():
+    a = paper_example_repo()
+    b = EventRepository.from_traces(
+        [["a2", "a5", "a3"], ["a1", "a5"]],
+        activity_vocab=["a1", "a2", "a3", "a5"],
+    )
+    oracle = _concat_oracle([("prod", a), ("canary", b)])
+    want, _ = dfg_algorithm1(oracle.to_graph())
+    for backend in ("auto", "numpy", "scatter", "onehot", "pallas"):
+        eng = QueryEngine()
+        res = Q.logs((a, "prod"), (b, "canary")).using(eng).dfg(backend=backend)
+        assert res.physical.backend == "union"
+        assert res.names == oracle.activity_names  # sorted union vocabulary
+        np.testing.assert_array_equal(res.value, want)
+
+
+def test_union_window_filter_view_equals_oracle(repo_a, repo_b):
+    oracle = _concat_oracle([("a", repo_a), ("b", repo_b)])
+    ts = oracle.event_time
+    t0, t1 = float(np.quantile(ts, 0.2)), float(np.quantile(ts, 0.85))
+    keep = oracle.activity_names[2:9]  # includes names absent from repo_a
+    view = ActivityView({n: f"g{i % 3}" for i, n in
+                         enumerate(oracle.activity_names[:8])})
+    eng = QueryEngine()
+    q = Q.logs((repo_a, "a"), (repo_b, "b")).using(eng)
+    np.testing.assert_array_equal(
+        q.window(t0, t1).dfg().value, _reference_dfg(oracle, window=(t0, t1))
+    )
+    np.testing.assert_array_equal(
+        q.activities(keep).dfg().value, _reference_dfg(oracle, keep=keep)
+    )
+    res = q.window(t0, t1).activities(keep).view(view).dfg()
+    np.testing.assert_array_equal(
+        res.value,
+        _reference_dfg(oracle, window=(t0, t1), keep=keep, view=view),
+    )
+    assert res.names == view.visible_names(oracle.activity_names)
+
+
+def test_union_histogram_equals_oracle(repo_a, repo_b):
+    oracle = _concat_oracle([("a", repo_a), ("b", repo_b)])
+    res = Q.logs((repo_a, "a"), (repo_b, "b")).using(QueryEngine()).histogram()
+    want = np.bincount(
+        oracle.event_activity, minlength=oracle.num_activities
+    )
+    np.testing.assert_array_equal(res.value, want)
+    assert res.names == oracle.activity_names
+
+
+def test_union_variants_and_concat_repositories(repo_a, repo_b):
+    """concat_repositories must equal the flat-table oracle column for
+    column; the union variants sink runs on exactly that concatenation."""
+    oracle = _concat_oracle([("a", repo_a), ("b", repo_b)])
+    cc = concat_repositories([("a", repo_a), ("b", repo_b)])
+    np.testing.assert_array_equal(cc.event_activity, oracle.event_activity)
+    np.testing.assert_array_equal(cc.event_trace, oracle.event_trace)
+    np.testing.assert_array_equal(cc.event_time, oracle.event_time)
+    np.testing.assert_array_equal(cc.trace_log, oracle.trace_log)
+    assert cc.trace_names == oracle.trace_names
+    assert cc.log_names == oracle.log_names
+    assert cc.activity_names == oracle.activity_names
+
+    res = Q.logs((repo_a, "a"), (repo_b, "b")).using(QueryEngine()).variants(5)
+    assert res.physical.backend == "concat"
+    tv = trace_variants(oracle)
+    np.testing.assert_array_equal(res.value.counts, tv.counts[:5])
+    assert res.value.sequences == tv.sequences[:5]
+
+
+def test_union_top_variants_materializes_concat(repo_a, repo_b):
+    from repro.core import variant_filtered_repository
+
+    oracle = _concat_oracle([("a", repo_a), ("b", repo_b)])
+    res = Q.logs((repo_a, "a"), (repo_b, "b")).using(
+        QueryEngine()
+    ).top_variants(3).dfg()
+    assert res.physical.backend == "concat"
+    want = _reference_dfg(variant_filtered_repository(oracle, 3))
+    np.testing.assert_array_equal(res.value, want)
+
+
+def test_union_duplicated_source_counts_twice(repo_a):
+    """Q.logs(x, x): branch names are uniquified and the union counts every
+    branch — the oracle is the doubled concatenation."""
+    eng = QueryEngine()
+    res = Q.logs(repo_a, repo_a).using(eng).dfg()
+    assert len(set(res.logical.source.split(","))) >= 1  # plan key stable
+    np.testing.assert_array_equal(res.value, 2 * _reference_dfg(repo_a))
+
+
+def test_union_with_empty_branch(repo_a):
+    empty = EventRepository(
+        event_activity=np.zeros((0,), np.int32),
+        event_trace=np.zeros((0,), np.int32),
+        event_time=np.zeros((0,), np.float64),
+        trace_log=np.zeros((0,), np.int32),
+        activity_names=list(repo_a.activity_names),
+        trace_names=[],
+        log_names=["empty"],
+    )
+    res = Q.logs((repo_a, "a"), (empty, "e")).using(QueryEngine()).dfg()
+    np.testing.assert_array_equal(res.value, _reference_dfg(repo_a))
+
+
+# ---------------------------------------------------------------------------
+# memmap branches: mixed physical backends, per-branch delta
+# ---------------------------------------------------------------------------
+
+
+def test_union_mixed_memmap_and_repo(repo_a, two_mmlogs):
+    log = two_mmlogs[0]
+    eng = QueryEngine(memory_budget_events=100)  # memmap branch streams
+    res = Q.logs((log, "disk"), (repo_a, "mem")).using(eng).dfg()
+    notes = " ".join(res.physical.notes)
+    assert "branch[disk]=streaming" in notes
+    oracle = _concat_oracle([
+        ("disk", repository_from_memmap(log, "disk")), ("mem", repo_a),
+    ])
+    np.testing.assert_array_equal(res.value, _reference_dfg(oracle))
+
+
+def test_union_delta_rescans_only_the_appended_branch(two_mmlogs, tmp_path):
+    """The satellite acceptance: append to one branch ⇒ the other branch's
+    cached state is untouched; only the appended suffix is scanned."""
+    paths = []
+    for i, src in enumerate(two_mmlogs):
+        p = str(tmp_path / f"copy{i}")
+        shutil.copytree(src.path, p)
+        paths.append(p)
+    log_a, log_b = MemmapLog.open(paths[0]), MemmapLog.open(paths[1])
+
+    eng = QueryEngine(memory_budget_events=0)  # streaming-first: resumable
+    q = lambda la, lb: Q.logs((la, "a"), (lb, "b")).using(eng).dfg()  # noqa: E731
+    first = q(log_a, log_b)
+    assert eng.stats.rows_scanned == log_a.num_events + log_b.num_events
+    assert q(log_a, log_b).from_cache  # union-level entry
+
+    # append to branch a only
+    rng = np.random.default_rng(3)
+    n_app = 150
+    act = rng.integers(0, log_a.num_activities, n_app).astype(np.int32)
+    case = rng.integers(0, log_a.num_traces, n_app).astype(np.int32)
+    times = float(log_a.time[-1]) + np.sort(rng.uniform(0, 50, n_app))
+    grown_a = log_a.append(act, case, times)
+
+    base = eng.stats.rows_scanned
+    res = q(grown_a, log_b)
+    assert not res.from_cache
+    assert eng.stats.delta_hits == 1  # branch a resumed over its suffix
+    assert eng.stats.rows_scanned - base == n_app  # branch b: zero rows
+    oracle = _concat_oracle([
+        ("a", repository_from_memmap(grown_a, "a")),
+        ("b", repository_from_memmap(log_b, "b")),
+    ])
+    np.testing.assert_array_equal(res.value, _reference_dfg(oracle))
+
+    # and the same for the other branch
+    grown_b = log_b.append(
+        act % log_b.num_activities, case % log_b.num_traces,
+        float(log_b.time[-1]) + np.sort(rng.uniform(0, 50, n_app)),
+    )
+    base = eng.stats.rows_scanned
+    res2 = q(grown_a, grown_b)
+    assert eng.stats.delta_hits == 2
+    assert eng.stats.rows_scanned - base == n_app
+    oracle2 = _concat_oracle([
+        ("a", repository_from_memmap(grown_a, "a")),
+        ("b", repository_from_memmap(grown_b, "b")),
+    ])
+    np.testing.assert_array_equal(res2.value, _reference_dfg(oracle2))
+
+
+def test_union_empty_window_short_circuits(two_mmlogs):
+    """EMPTY_WINDOW under a union: canonical shared plan, zeros, no scan."""
+    log_a, log_b = two_mmlogs
+    eng = QueryEngine(memory_budget_events=0)
+    q1 = Q.logs((log_a, "a"), (log_b, "b")).using(eng).window(5.0, 3.0)
+    q2 = Q.logs((log_a, "a"), (log_b, "b")).using(eng).window(99.0, 7.0)
+    p1, _ = canonicalize(q1.logical_plan(DFGSink()))
+    p2, _ = canonicalize(q2.logical_plan(DFGSink()))
+    assert p1.key() == p2.key()
+
+    r1 = q1.dfg()
+    assert not r1.value.any()
+    assert r1.value.shape[0] == len(r1.names)
+    assert eng.stats.rows_scanned == 0  # neither branch touched
+    assert q2.dfg().from_cache  # differently phrased, same entry
+    r3 = q1.histogram()
+    assert not r3.value.any() and eng.stats.rows_scanned == 0
+    # compare also short-circuits on the canonical empty window
+    rc = Q.logs((log_a, "a"), (log_b, "b")).using(eng).window(5.0, 3.0).compare()
+    assert not any(p.any() for p in rc.value.psis)
+    assert eng.stats.rows_scanned == 0
+
+
+def test_union_fingerprint_is_composite_and_prefix_preserving(two_mmlogs):
+    union = Q.logs((two_mmlogs[0], "a"), (two_mmlogs[1], "b")).source
+    fp = fingerprint(union)
+    parts = split_union_fingerprint(fp)
+    assert [n for n, _ in parts] == ["a", "b"]
+    for (_, bfp), log in zip(parts, two_mmlogs):
+        assert bfp == fingerprint(log)  # per-branch prefix-preserving form
+        assert bfp.startswith("memmap:")
+
+
+def test_union_fingerprint_escapes_separator_injection(repo_a, repo_b):
+    """A branch name containing '='/'|' must not be able to forge another
+    union's composite key."""
+    two = Q.logs((repo_a, "a"), (repo_b, "b")).source
+    fp_two = fingerprint(two)
+    forged_name = f"a={split_union_fingerprint(fp_two)[0][1]}|b"
+    one = Q.logs((repo_a, forged_name)).source
+    assert fingerprint(one) != fp_two
+    # and names round-trip through the escape
+    assert split_union_fingerprint(fingerprint(one))[0][0] == forged_name
+
+
+# ---------------------------------------------------------------------------
+# FromLogs + compare
+# ---------------------------------------------------------------------------
+
+
+def test_select_logs_is_the_lxt_dice(multilog_repo):
+    sub = multilog_repo.select_logs(["prod"])
+    assert sub.log_names == ["prod"]
+    assert sub.activity_names == multilog_repo.activity_names
+    keep = multilog_repo.trace_log == multilog_repo.log_names.index("prod")
+    assert sub.num_traces == int(keep.sum())
+    assert sub.trace_names == [
+        t for t, k in zip(multilog_repo.trace_names, keep) if k
+    ]
+    with pytest.raises(ValueError):
+        multilog_repo.select_logs(["nope"])
+
+
+def test_qlogs_expands_multilog_repository(multilog_repo):
+    q = Q.logs(multilog_repo)
+    assert isinstance(q.source, UnionSource)
+    assert q.source.branch_names == tuple(multilog_repo.log_names)
+    # union of all logs == the whole repository
+    res = q.using(QueryEngine()).dfg()
+    np.testing.assert_array_equal(res.value, _reference_dfg(multilog_repo))
+
+
+def test_compare_per_log_oracle_and_drift(multilog_repo):
+    eng = QueryEngine()
+    res = Q.logs(multilog_repo).using(eng).compare()
+    cr = res.value
+    assert cr.log_names == ("canary", "prod")
+    union_names = list(multilog_repo.activity_names)
+    for name, psi in zip(cr.log_names, cr.psis):
+        sub = multilog_repo.select_logs([name])
+        want = _embed(_reference_dfg(sub), sub.activity_names, union_names)
+        np.testing.assert_array_equal(psi, want)
+    np.testing.assert_array_equal(cr.diff, cr.psis[1] - cr.psis[0])
+    np.testing.assert_array_equal(cr.diffs[0], np.zeros_like(cr.psis[0]))
+
+    # fitness: every branch replayed against the reference branch's model
+    ref = multilog_repo.select_logs(["canary"])
+    s, d, v = ref.df_pairs()
+    model = discover_dependency_graph(
+        dfg_numpy(s, d, v, ref.num_activities), ref.activity_names,
+        *ref.trace_boundaries(),
+    )
+    assert cr.fitness[0] == pytest.approx(
+        replay_fitness(ref, model).fitness
+    )
+    assert cr.fitness[1] == pytest.approx(
+        replay_fitness(multilog_repo.select_logs(["prod"]), model).fitness
+    )
+
+
+def test_compare_windowed_matches_per_log_reference(multilog_repo):
+    ts = multilog_repo.event_time
+    t0, t1 = float(np.quantile(ts, 0.1)), float(np.quantile(ts, 0.9))
+    cr = Q.logs(multilog_repo).using(QueryEngine()).window(t0, t1).compare().value
+    union_names = list(multilog_repo.activity_names)
+    for name, psi in zip(cr.log_names, cr.psis):
+        sub = multilog_repo.select_logs([name])
+        want = _embed(
+            _reference_dfg(sub, window=(t0, t1)), sub.activity_names,
+            union_names,
+        )
+        np.testing.assert_array_equal(psi, want)
+
+
+def test_compare_fitness_is_whole_log_and_memoized(multilog_repo):
+    """fitness is documented as window-independent: an empty or sliding
+    window reports the same tuple, served from the per-fingerprint memo."""
+    eng = QueryEngine()
+    base = Q.logs(multilog_repo).using(eng).compare().value
+    empty = Q.logs(multilog_repo).using(eng).window(5.0, 5.0).compare().value
+    assert empty.fitness == base.fitness
+    assert not any(p.any() for p in empty.psis)
+
+    calls = []
+    real = eng._compute_compare_fitness
+
+    def counting(union):
+        calls.append(1)
+        return real(union)
+
+    eng._compute_compare_fitness = counting
+    ts = multilog_repo.event_time
+    for q in (0.3, 0.6, 0.9):  # a dashboard sliding its window
+        t1 = float(np.quantile(ts, q))
+        res = Q.logs(multilog_repo).using(eng).window(0.0, t1).compare()
+        assert res.value.fitness == base.fitness
+    assert calls == []  # memo hit for every window over unchanged data
+
+
+def test_concat_rejects_colliding_trace_namespaces():
+    r1 = EventRepository.from_traces([["p", "q"]], activity_vocab=["p", "q"])
+    r2 = EventRepository.from_traces([["p"]], activity_vocab=["p", "q"])
+    # branch "a" trace "x/t1" and branch "a/x" trace "t1" both namespace to
+    # "a/x/t1" — must be an error, not silently merged traces
+    r1 = type(r1)(
+        event_activity=r1.event_activity, event_trace=r1.event_trace,
+        event_time=r1.event_time, trace_log=r1.trace_log,
+        activity_names=r1.activity_names, trace_names=["x/t1"],
+        log_names=r1.log_names,
+    )
+    with pytest.raises(ValueError):
+        concat_repositories([("a", r1), ("a/x", r2)])
+
+
+def test_compare_fitness_none_beyond_budget(two_mmlogs):
+    eng = QueryEngine(memory_budget_events=0)  # nothing materializes
+    cr = Q.logs((two_mmlogs[0], "a"), (two_mmlogs[1], "b")).using(
+        eng
+    ).compare().value
+    assert cr.fitness == (None, None)
+    # the Ψ matrices still compare exactly (streamed per branch)
+    np.testing.assert_array_equal(
+        cr.psis[0],
+        _embed(
+            streaming_dfg(two_mmlogs[0]),
+            two_mmlogs[0].activity_labels(),
+            cr.names,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# errors + builder edges
+# ---------------------------------------------------------------------------
+
+
+def test_union_and_compare_errors(repo_a, repo_b, two_mmlogs):
+    with pytest.raises(QueryPlanError):
+        Q.logs()
+    with pytest.raises(QueryPlanError):
+        Q.log(repo_a).using(QueryEngine()).compare()  # single source
+    with pytest.raises(QueryPlanError):
+        # compare needs >= 2 branches
+        Q.logs((repo_a, "only")).using(QueryEngine()).compare()
+    with pytest.raises(QueryPlanError):
+        # barriers do not distribute under compare
+        Q.logs((repo_a, "a"), (repo_b, "b")).using(
+            QueryEngine()
+        ).top_variants(2).compare()
+    with pytest.raises(QueryPlanError):
+        # pinned streaming cannot run a repository branch
+        Q.logs((repo_a, "a"), (repo_b, "b")).using(
+            QueryEngine()
+        ).dfg(backend="streaming")
+    with pytest.raises(QueryPlanError):
+        # unknown activities validate against the union vocabulary
+        Q.logs((repo_a, "a"), (repo_b, "b")).using(
+            QueryEngine()
+        ).activities(["nope"]).dfg()
+    with pytest.raises(QueryPlanError):
+        UnionSource([])
+    with pytest.raises(QueryPlanError):
+        FromLogs(repo_a, ["not-a-log"])
+    with pytest.raises(QueryPlanError):
+        # explicit duplicate names would silently double-count
+        Q.logs((repo_a, "same"), (repo_b, "same"))
+    with pytest.raises(QueryPlanError):
+        # out-of-core union cannot materialize for variants
+        Q.logs((two_mmlogs[0], "a"), (two_mmlogs[1], "b")).using(
+            QueryEngine(memory_budget_events=100)
+        ).variants()
+
+
+def test_qlogs_flattens_and_uniquifies(repo_a, two_mmlogs):
+    inner = Q.logs((repo_a, "x"), (two_mmlogs[0], "y")).source
+    outer = Q.logs(inner, LogRef(repo_a, "z")).source
+    assert outer.branch_names == ("x", "y", "z")
+    dup = Q.logs(repo_a, repo_a).source
+    assert len(set(dup.branch_names)) == 2
+    # auto-uniquified names must themselves stay unique even when the
+    # suffixed form collides with another auto-derived basename
+    import dataclasses as dc
+
+    named = lambda n: dc.replace(repo_a, log_names=[n])  # noqa: E731
+    tricky = Q.logs(named("x#1"), named("x"), named("x")).source
+    assert len(set(tricky.branch_names)) == 3
+
+
+def test_single_logref_and_fromlogs_resolve_in_q_log(repo_a, multilog_repo):
+    """LogRef/FromLogs are grammar sources: Q.log must accept them too."""
+    res = Q.log(LogRef(repo_a, "a")).using(QueryEngine()).dfg()
+    np.testing.assert_array_equal(res.value, _reference_dfg(repo_a))
+    res2 = Q.log(FromLogs(multilog_repo, ("prod",))).using(QueryEngine()).dfg()
+    np.testing.assert_array_equal(
+        res2.value, _reference_dfg(multilog_repo.select_logs(["prod"]))
+    )
+
+
+def test_split_logs_equals_select_logs(multilog_repo):
+    split = multilog_repo.split_logs(multilog_repo.log_names)
+    for name, sub in split.items():
+        want = multilog_repo.select_logs([name])
+        np.testing.assert_array_equal(sub.event_activity, want.event_activity)
+        np.testing.assert_array_equal(sub.event_trace, want.event_trace)
+        np.testing.assert_array_equal(sub.event_time, want.event_time)
+        assert sub.trace_names == want.trace_names
+        assert sub.log_names == want.log_names
+
+    # Q.logs expansion shares one split pass across sibling branches
+    calls = []
+    real = EventRepository.select_logs
+
+    def counting(self, names):
+        calls.append(tuple(names))
+        return real(self, names)
+
+    EventRepository.select_logs = counting
+    try:
+        res = Q.logs(multilog_repo).using(QueryEngine()).dfg()
+    finally:
+        EventRepository.select_logs = real
+    assert calls == []  # resolved through split_logs, not per-branch dices
+    np.testing.assert_array_equal(res.value, _reference_dfg(multilog_repo))
+
+
+def test_union_cache_content_addressed_per_branch(repo_a, repo_b):
+    eng = QueryEngine()
+    import dataclasses as dc
+
+    Q.logs((repo_a, "a"), (repo_b, "b")).using(eng).dfg()
+    clone = dc.replace(repo_a, event_activity=repo_a.event_activity.copy())
+    # equal bytes, same branch names → union-level cache hit
+    assert Q.logs((clone, "a"), (repo_b, "b")).using(eng).dfg().from_cache
+    # same bytes under a *different* branch name → different provenance
+    assert not Q.logs((clone, "a2"), (repo_b, "b")).using(eng).dfg().from_cache
+
+
+# ---------------------------------------------------------------------------
+# satellite: repository_from_memmap provenance
+# ---------------------------------------------------------------------------
+
+
+def test_repository_from_memmap_derives_log_name(two_mmlogs):
+    log = two_mmlogs[0]
+    repo = repository_from_memmap(log)
+    assert repo.log_names == [memmap_log_name(log)]
+    assert repo.log_names != ["l1"]  # the old hardcoding
+    assert repository_from_memmap(log, "prod").log_names == ["prod"]
+
+
+# ---------------------------------------------------------------------------
+# satellite: measured cost-model calibration
+# ---------------------------------------------------------------------------
+
+
+def test_calibration_fallback_and_load(tmp_path, monkeypatch):
+    from repro.query.planner import MEMORY_BUDGET_EVENTS, TINY_PAIRS
+
+    monkeypatch.delenv("GRAPHPM_BENCH_QUERY", raising=False)
+    missing = str(tmp_path / "nope.json")
+    cal = load_calibration(missing)
+    assert cal == {
+        "tiny_pairs": TINY_PAIRS,
+        "memory_budget_events": MEMORY_BUDGET_EVENTS,
+    }
+
+    bench = tmp_path / "BENCH_query.json"
+    bench.write_text(
+        '{"calibration": {"tiny_pairs": 512, '
+        '"memory_budget_events": 2097152}}'
+    )
+    cal = load_calibration(str(bench))
+    assert cal["tiny_pairs"] == 512
+    assert cal["memory_budget_events"] == 2097152
+
+    # clamped to sanity rails
+    bench.write_text(
+        '{"calibration": {"tiny_pairs": 1000000000, '
+        '"memory_budget_events": 1}}'
+    )
+    cal = load_calibration(str(bench))
+    assert cal["tiny_pairs"] == 4096
+    assert cal["memory_budget_events"] == 1 << 20
+
+    # corrupt file → static fallback
+    bench.write_text("{not json")
+    assert load_calibration(str(bench))["tiny_pairs"] == TINY_PAIRS
+
+
+def test_engine_picks_up_calibration(tmp_path, monkeypatch):
+    bench = tmp_path / "BENCH_query.json"
+    bench.write_text('{"calibration": {"tiny_pairs": 777}}')
+    monkeypatch.setenv("GRAPHPM_BENCH_QUERY", str(bench))
+    assert QueryEngine().tiny_pairs == 777
+    # explicit arguments always win over the calibration record
+    assert QueryEngine(tiny_pairs=9).tiny_pairs == 9
+    assert QueryEngine(calibration_path=str(bench)).tiny_pairs == 777
+
+
+# ---------------------------------------------------------------------------
+# serving: multi-log requests + cross-union policy guards
+# ---------------------------------------------------------------------------
+
+
+def test_service_union_and_compare(repo_a, repo_b):
+    from repro.serve import QueryService
+
+    svc = QueryService()
+    svc.register("prod", repo_a)
+    svc.register("canary", repo_b)
+    oracle = _concat_oracle([("canary", repo_b), ("prod", repo_a)])
+
+    out = svc.query({"logs": ["canary", "prod"], "sink": "dfg"})
+    np.testing.assert_array_equal(
+        np.asarray(out["psi"]), _reference_dfg(oracle)
+    )
+    assert out["logs"] == ["canary", "prod"] and out["backend"] == "union"
+    assert svc.query({"logs": ["canary", "prod"], "sink": "dfg"})["from_cache"]
+
+    cmp_out = svc.query({"logs": ["prod", "canary"], "sink": "compare"})
+    assert set(cmp_out["psi"]) == {"prod", "canary"}
+    np.testing.assert_array_equal(
+        np.asarray(cmp_out["diff"]["canary"]),
+        np.asarray(cmp_out["psi"]["canary"])
+        - np.asarray(cmp_out["psi"]["prod"]),
+    )
+    assert set(cmp_out["fitness"]) == {"prod", "canary"}
+
+    with pytest.raises(KeyError):
+        svc.query({"logs": ["prod", "ghost"], "sink": "dfg"})
+    with pytest.raises(QueryPlanError):
+        # naming the same log twice would double-count its events
+        svc.query({"logs": ["prod", "prod"], "sink": "dfg"})
+
+
+def test_service_union_policy_guards(repo_a, repo_b):
+    from repro.core.views import AccessDenied, AccessPolicy
+    from repro.serve import QueryService
+
+    view = ActivityView({n: "g" for n in repo_a.activity_names[:4]})
+    svc = QueryService()
+    svc.register("open", repo_a)
+    svc.register("veiled", repo_b, policy=AccessPolicy(view=view))
+    svc.register("veiled2", repo_a, policy=AccessPolicy(view=view))
+    svc.register(
+        "other_view", repo_a,
+        policy=AccessPolicy(view=ActivityView({"act_000": "x"})),
+    )
+    svc.register("nodice", repo_a,
+                 policy=AccessPolicy(time_windows_allowed=False))
+    svc.register("floored", repo_a,
+                 policy=AccessPolicy(min_group_count=10**9))
+
+    # a view-protected log cannot be unioned with an unprotected one ...
+    with pytest.raises(AccessDenied):
+        svc.query({"logs": ["open", "veiled"], "sink": "compare"})
+    # ... nor with a log under a different view
+    with pytest.raises(AccessDenied):
+        svc.query({"logs": ["veiled", "other_view"], "sink": "compare"})
+    # identical views combine, and the result lives in group space
+    out = svc.query({"logs": ["veiled", "veiled2"], "sink": "compare"})
+    assert out["names"] == ["g"]
+
+    # time dicing must be allowed by every member
+    with pytest.raises(AccessDenied):
+        svc.query({"logs": ["open", "nodice"], "sink": "dfg",
+                   "window": [0.0, 1.0]})
+    # the k-anonymity floor is the max across the union
+    out = svc.query({"logs": ["open", "floored"], "sink": "dfg"})
+    assert not np.asarray(out["psi"]).any()
+    out = svc.query({"logs": ["open", "floored"], "sink": "compare"})
+    assert not any(np.asarray(p).any() for p in out["psi"].values())
+    # raw-activity filters stay denied under a view, union or not
+    with pytest.raises(AccessDenied):
+        svc.query({"logs": ["veiled", "veiled2"], "sink": "dfg",
+                   "activities": [repo_b.activity_names[0]]})
