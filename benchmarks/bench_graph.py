@@ -1,0 +1,169 @@
+"""Graph-tier benchmark: what does materializing the :DF relation buy?
+
+Builds the event-knowledge graph of a mined memmap log once, then re-issues
+the serve tier's topology queries two ways:
+
+* **columnar recompute** — what every query used to cost: re-derive Ψ from
+  the flat pair columns, then filter/traverse it;
+* **graph** — the aggregated CSR answers the same query as a store lookup
+  (DFG densify, neighborhood BFS, process-map sort).
+
+Also measures build throughput and derives the columnar↔graph crossover
+(the repeat-query count above which paying the build wins) that
+``planner.load_calibration`` feeds back into the cost model.
+
+Emits CSV rows (and ``BENCH_graph.json`` on direct invocation).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+# runnable directly (`python benchmarks/bench_graph.py`) without PYTHONPATH
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+EVENTS = int(os.environ.get("BENCH_EVENTS", 2_000_000))
+REPEAT_QUERIES = 20
+
+
+def _timed(fn, repeat: int = 1):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn()
+    return out, (time.perf_counter() - t0) * 1e6 / repeat
+
+
+def run(write_json: bool = False) -> list:
+    """CSV rows; ``write_json=True`` (direct invocation only) also rewrites
+    the committed ``BENCH_graph.json`` record — the aggregator's reduced
+    ``--fast`` runs must not clobber it (same guard as bench_delta)."""
+    from repro.core.dfg import dfg_numpy
+    from repro.data import ProcessSpec, generate_memmap_log
+    from repro.graph import (
+        build_graph,
+        derive_neighborhood,
+        derive_process_map,
+        csr_from_dense,
+    )
+    from repro.query.execute import repository_from_memmap
+
+    rows = []
+    tmp = tempfile.mkdtemp(prefix="graphpm_benchg_")
+    log = generate_memmap_log(
+        os.path.join(tmp, "log"), EVENTS,
+        ProcessSpec(num_activities=64, seed=31, horizon_days=120), seed=31,
+    )
+
+    # -- build throughput ----------------------------------------------------
+    g, build_us = _timed(lambda: build_graph(log))
+    rows.append((
+        "graph_build", build_us,
+        f"events={log.num_events};nnz={g.adj.nnz};"
+        f"events_per_s={log.num_events / (build_us / 1e6):.0f}",
+    ))
+
+    # -- DFG: store lookup vs columnar recompute -----------------------------
+    repo = repository_from_memmap(log)
+    src, dst, valid = repo.df_pairs()
+
+    def columnar_dfg():
+        return dfg_numpy(src, dst, valid, repo.num_activities)
+
+    psi_cold, columnar_dfg_us = _timed(columnar_dfg, repeat=3)
+    psi_graph, graph_dfg_us = _timed(g.psi, repeat=3)
+    assert np.array_equal(psi_cold, psi_graph)
+    rows.append((
+        "dfg_from_graph", graph_dfg_us,
+        f"recompute_us={columnar_dfg_us:.0f};"
+        f"speedup={columnar_dfg_us / max(graph_dfg_us, 1):.1f}x",
+    ))
+
+    # -- repeated topology queries: graph vs columnar ------------------------
+    names = g.activity_names
+    centers = [names[i % len(names)] for i in range(REPEAT_QUERIES)]
+
+    def columnar_neigh():
+        # what the engine's columnar path does per query: recount Ψ from
+        # the pair columns, then traverse — every query pays the recount
+        for c in centers:
+            adj = csr_from_dense(
+                dfg_numpy(src, dst, valid, repo.num_activities)
+            )
+            derive_neighborhood(adj, adj.transpose(), names, c, 2, "both")
+
+    def graph_neigh():
+        for c in centers:
+            derive_neighborhood(g.adj, g.radj, names, c, 2, "both")
+
+    _, col_neigh_us = _timed(columnar_neigh)
+    _, g_neigh_us = _timed(graph_neigh)
+    col_q = col_neigh_us / REPEAT_QUERIES
+    g_q = g_neigh_us / REPEAT_QUERIES
+    neigh_speedup = col_q / max(g_q, 1e-9)
+    rows.append((
+        "neighborhood_repeat", g_q,
+        f"columnar_us={col_q:.0f};queries={REPEAT_QUERIES};"
+        f"speedup={neigh_speedup:.1f}x",
+    ))
+
+    def columnar_pm():
+        psi = dfg_numpy(src, dst, valid, repo.num_activities)
+        counts = np.bincount(
+            repo.event_activity, minlength=repo.num_activities
+        ).astype(np.int64)
+        return derive_process_map(csr_from_dense(psi), counts, names, 0.2)
+
+    pm_cold, col_pm_us = _timed(columnar_pm, repeat=3)
+    pm_graph, g_pm_us = _timed(
+        lambda: derive_process_map(g.adj, g.node_counts, names, 0.2),
+        repeat=3,
+    )
+    assert pm_cold.edges == pm_graph.edges
+    pm_speedup = col_pm_us / max(g_pm_us, 1e-9)
+    rows.append((
+        "process_map_repeat", g_pm_us,
+        f"columnar_us={col_pm_us:.0f};speedup={pm_speedup:.1f}x",
+    ))
+
+    # -- the columnar↔graph crossover the planner learns ---------------------
+    saving_us = max(col_q - g_q, 1.0)
+    crossover = max(1, math.ceil(build_us / saving_us))
+    rows.append((
+        "graph_crossover", crossover,
+        f"build_us={build_us:.0f};per_query_saving_us={saving_us:.0f}",
+    ))
+
+    if not write_json:
+        return rows
+    with open("BENCH_graph.json", "w") as f:
+        json.dump({
+            "events": log.num_events,
+            "num_activities": log.num_activities,
+            "nnz": g.adj.nnz,
+            "build_us": build_us,
+            "columnar_dfg_us": columnar_dfg_us,
+            "graph_dfg_us": graph_dfg_us,
+            "neighborhood_columnar_us_per_query": col_q,
+            "neighborhood_graph_us_per_query": g_q,
+            "neighborhood_speedup": neigh_speedup,
+            "process_map_columnar_us": col_pm_us,
+            "process_map_graph_us": g_pm_us,
+            "process_map_speedup": pm_speedup,
+            "calibration": {"graph_repeat_crossover": crossover},
+        }, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(write_json=True):
+        print(",".join(str(x) for x in r))

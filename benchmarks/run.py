@@ -29,6 +29,7 @@ def main() -> None:
         bench_delta,
         bench_dfg_example,
         bench_dicing,
+        bench_graph,
         bench_kernels,
         bench_memory_scaling,
         bench_multilog,
@@ -44,6 +45,7 @@ def main() -> None:
         (bench_query_engine, "query"),
         (bench_delta, "delta"),
         (bench_multilog, "multilog"),
+        (bench_graph, "graph"),
         (roofline_table, "roofline"),
     ):
         try:

@@ -53,3 +53,16 @@ stats = default_engine().stats
 print(f"\nre-issued the same query: from_cache={again.from_cache} "
       f"(engine: {stats.queries} queries, {stats.executions} executions, "
       f"{stats.cache_hits} cache hits)")
+
+# --- 5. the event-knowledge-graph tier --------------------------------------
+# in auto mode the planner builds the graph once a source crosses the
+# measured repeat-query threshold; backend="graph" pins it explicitly
+pm = Q.log(repo).process_map(top=0.2).value
+print(f"\nprocess map (top 20% nodes/edges): {len(pm.activities)} activities,"
+      f" {len(pm.edges)} edges (dropped {pm.dropped_activities} nodes, "
+      f"{pm.dropped_edges} edges)")
+center = pm.activities[0]
+nb = Q.log(repo).neighborhood(center, k=2, direction="both", backend="graph")
+print(f"2-hop neighborhood of {center!r}: {len(nb.value.activities)} "
+      f"activities via backend={nb.physical.backend} "
+      f"(graph store: {default_engine().graphs.stats})")

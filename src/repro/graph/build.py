@@ -1,0 +1,421 @@
+"""Event-knowledge-graph construction — the paper's store, materialized.
+
+The paper's central claim is that the event log should *live as a graph*
+(Event / Case / Activity nodes with ``:DF``, ``:BELONGS_TO``, ``:OF_TYPE``
+edges) so topology queries run inside the store instead of being re-derived
+from flat arrays on every request.  :class:`EventGraph` is that store for
+this codebase: a property graph held as **CSR adjacency in numpy/JAX
+arrays**, built once per source and then answering DFG / neighborhood /
+process-map queries as index lookups ("Native Directly Follows Operator",
+Syamsiyah et al.; graph-vs-relational, Joishi & Sureka).
+
+Two tiers, mirroring the columnar store:
+
+* **full graph** — the three Event-node property columns in canonical
+  (case-contiguous, time-sorted) order plus the ``:OF_TYPE`` (activity →
+  events) and ``:BELONGS_TO`` (case → events) CSR indexes.  Event-level
+  ``:DF`` edges stay implicit in the canonical order (event ``i`` →
+  ``i+1`` within a case), exactly like :class:`EventRepository`;
+* **topology-only graph** — for out-of-core memmap sources the event tables
+  are skipped and only the aggregated activity-level ``:DF`` CSR (forward +
+  reverse) plus node degrees are kept: O(A² + nnz) memory independent of E.
+
+Aggregation runs as segment-sort / segment-sum: pair keys ``src·A + dst``
+are sorted and run-length encoded (sparse regime), or counted densely
+through the existing DFG backends (scatter / one-hot / Pallas MXU kernel —
+"Pallas where it pays") and then sparsified.  Node degrees route through
+:mod:`repro.kernels.segment_count` on TPU and ``np.bincount`` on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.repository import EventRepository
+from repro.core.streaming import MemmapLog, MinerState, StreamingDFGMiner
+
+__all__ = ["EventGraph", "CSR", "build_graph", "csr_from_dense", "dense_from_csr"]
+
+
+#: above this many dense Ψ cells, aggregation goes through the sorted-key
+#: (segment-sort / segment-sum) path instead of densify-then-sparsify
+_DENSE_PSI_CELLS = 1 << 24
+
+
+@dataclasses.dataclass
+class CSR:
+    """One adjacency direction of the aggregated ``:DF`` multigraph:
+    ``indices[indptr[a]:indptr[a+1]]`` are the neighbor activity ids of
+    ``a`` (ascending), ``counts`` the multiplicity (Ψ entries)."""
+
+    indptr: np.ndarray  # (A+1,) int64
+    indices: np.ndarray  # (nnz,) int32
+    counts: np.ndarray  # (nnz,) int64
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.indptr.shape[0] - 1)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def row(self, a: int) -> Tuple[np.ndarray, np.ndarray]:
+        lo, hi = int(self.indptr[a]), int(self.indptr[a + 1])
+        return self.indices[lo:hi], self.counts[lo:hi]
+
+    def transpose(self) -> "CSR":
+        """Reverse adjacency (CSC of the same matrix, as CSR)."""
+        a = self.num_nodes
+        rows = np.repeat(
+            np.arange(a, dtype=np.int32), np.diff(self.indptr).astype(np.int64)
+        )
+        order = np.lexsort((rows, self.indices))
+        indptr = np.zeros(a + 1, dtype=np.int64)
+        np.cumsum(np.bincount(self.indices, minlength=a), out=indptr[1:])
+        return CSR(
+            indptr=indptr,
+            indices=rows[order].astype(np.int32),
+            counts=self.counts[order].astype(np.int64),
+        )
+
+
+def csr_from_dense(psi: np.ndarray) -> CSR:
+    """Sparsify a dense Ψ count matrix (row-major ⇒ ascending indices)."""
+    rows, cols = np.nonzero(psi)
+    indptr = np.zeros(psi.shape[0] + 1, dtype=np.int64)
+    np.cumsum(np.bincount(rows, minlength=psi.shape[0]), out=indptr[1:])
+    return CSR(
+        indptr=indptr,
+        indices=cols.astype(np.int32),
+        counts=psi[rows, cols].astype(np.int64),
+    )
+
+
+def dense_from_csr(csr: CSR) -> np.ndarray:
+    """Densify back to the (A, A) Ψ matrix — bit-identical to the matrix the
+    CSR was aggregated from (counts are exact int64)."""
+    a = csr.num_nodes
+    psi = np.zeros((a, a), dtype=np.int64)
+    rows = np.repeat(np.arange(a), np.diff(csr.indptr).astype(np.int64))
+    psi[rows, csr.indices] = csr.counts
+    return psi
+
+
+@dataclasses.dataclass
+class EventGraph:
+    """In-process event-knowledge graph (see module docstring).
+
+    ``adj`` / ``radj`` are the aggregated activity-level ``:DF`` relation
+    (forward / reverse CSR) — the store's first-class topology.
+    ``node_counts[a]`` is the ``:OF_TYPE`` in-degree of Activity node ``a``
+    (events executing it), the process-map node significance.
+
+    ``miner`` (memmap-sourced graphs) carries the resumable streaming state
+    (Ψ + open-case tails) that lets :mod:`repro.graph.store` extend the CSR
+    over an appended suffix instead of rebuilding — the PR 2 delta
+    machinery applied to the graph tier.
+    """
+
+    activity_names: List[str]
+    num_events: int
+    num_traces: int
+    node_counts: np.ndarray  # (A,) int64
+    adj: CSR
+    radj: CSR
+    # -- full-graph tier (None ⇒ topology-only) -----------------------------
+    event_activity: Optional[np.ndarray] = None  # (E,) int32, canonical order
+    event_trace: Optional[np.ndarray] = None  # (E,) int32
+    event_time: Optional[np.ndarray] = None  # (E,) float64
+    act_indptr: Optional[np.ndarray] = None  # (A+1,) :OF_TYPE CSR
+    act_events: Optional[np.ndarray] = None  # (E,) event ids by activity
+    case_indptr: Optional[np.ndarray] = None  # (T+1,) :BELONGS_TO CSR
+    # -- provenance / append machinery --------------------------------------
+    source_fp: Optional[str] = None  # fingerprint of the source at build time
+    rows_end: int = 0  # memmap rows consumed (0 for repositories)
+    miner: Optional[MinerState] = None  # memmap-sourced: resumable Ψ state
+
+    @property
+    def num_activities(self) -> int:
+        return len(self.activity_names)
+
+    @property
+    def num_df_edges(self) -> int:
+        """Total event-level ``:DF`` relations (Σ of the aggregated counts)."""
+        return int(self.adj.counts.sum())
+
+    @property
+    def has_event_tables(self) -> bool:
+        return self.event_activity is not None
+
+    def psi(self) -> np.ndarray:
+        """The dense Ψ count matrix — Algorithm 1's output, from the store."""
+        return dense_from_csr(self.adj)
+
+    def events_of_activity(self, a: int) -> np.ndarray:
+        """``•a`` as a CSR lookup (full graphs only)."""
+        if self.act_indptr is None:
+            raise ValueError("topology-only graph has no event tables")
+        lo, hi = int(self.act_indptr[a]), int(self.act_indptr[a + 1])
+        return self.act_events[lo:hi]
+
+    def events_of_case(self, t: int) -> Tuple[int, int]:
+        """The ``:BELONGS_TO`` row of case ``t`` as a row range (events are
+        case-contiguous in canonical order)."""
+        if self.case_indptr is None:
+            raise ValueError("topology-only graph has no event tables")
+        return int(self.case_indptr[t]), int(self.case_indptr[t + 1])
+
+
+# ---------------------------------------------------------------------------
+# Aggregation primitives (segment-sort / segment-sum)
+# ---------------------------------------------------------------------------
+
+
+def _aggregate_pairs_sparse(
+    src: np.ndarray, dst: np.ndarray, valid: np.ndarray, a: int
+) -> CSR:
+    """Sort-based aggregation for graphs whose dense Ψ would not fit:
+    segment-sort the pair keys, segment-sum the run lengths."""
+    keys = src[valid].astype(np.int64) * a + dst[valid].astype(np.int64)
+    keys.sort(kind="stable")
+    if keys.shape[0] == 0:
+        return CSR(
+            indptr=np.zeros(a + 1, dtype=np.int64),
+            indices=np.zeros((0,), dtype=np.int32),
+            counts=np.zeros((0,), dtype=np.int64),
+        )
+    boundary = np.empty(keys.shape[0], dtype=bool)
+    boundary[0] = True
+    np.not_equal(keys[1:], keys[:-1], out=boundary[1:])
+    uniq = keys[boundary]
+    starts = np.nonzero(boundary)[0]
+    counts = np.diff(np.append(starts, keys.shape[0])).astype(np.int64)
+    rows = (uniq // a).astype(np.int64)
+    indptr = np.zeros(a + 1, dtype=np.int64)
+    np.cumsum(np.bincount(rows, minlength=a), out=indptr[1:])
+    return CSR(
+        indptr=indptr,
+        indices=(uniq % a).astype(np.int32),
+        counts=counts,
+    )
+
+
+def _aggregate_pairs(
+    src: np.ndarray,
+    dst: np.ndarray,
+    valid: np.ndarray,
+    a: int,
+    backend: str = "auto",
+) -> Tuple[CSR, np.ndarray]:
+    """(forward CSR, dense Ψ or None) from directly-follows pair columns.
+
+    Dense regime counts through the existing DFG backends (numpy scatter,
+    jnp scatter, one-hot MXU, Pallas kernel) and sparsifies; the sparse
+    regime segment-sorts the keys directly.
+    """
+    if a * a > _DENSE_PSI_CELLS:
+        return _aggregate_pairs_sparse(src, dst, valid, a), None
+    if backend == "auto":
+        import jax
+
+        backend = "numpy" if jax.default_backend() == "cpu" else "pallas"
+    if backend == "numpy" or src.shape[0] == 0:
+        from repro.core.dfg import dfg_numpy
+
+        psi = dfg_numpy(np.asarray(src), np.asarray(dst), np.asarray(valid), a)
+    else:
+        from repro.core.dfg import dfg
+
+        psi = dfg(src, dst, valid, a, backend=backend)
+    return csr_from_dense(psi), psi
+
+
+def _node_counts(
+    event_activity: np.ndarray, a: int, backend: str = "auto"
+) -> np.ndarray:
+    """``:OF_TYPE`` node degrees.  ``np.bincount`` on CPU; the TPU-native
+    path routes through the segment_count Pallas kernel."""
+    if backend == "auto":
+        import jax
+
+        backend = "numpy" if jax.default_backend() == "cpu" else "pallas"
+    if backend == "pallas":
+        import jax.numpy as jnp
+
+        from repro.kernels.segment_count import segment_count
+
+        out = segment_count(
+            jnp.asarray(event_activity, jnp.int32),
+            jnp.ones(event_activity.shape, jnp.bool_),
+            num_segments=a,
+        )
+        return np.asarray(out, dtype=np.int64)
+    return np.bincount(event_activity, minlength=a).astype(np.int64)
+
+
+def _miner_state_from_columns(
+    psi: np.ndarray,
+    event_activity: np.ndarray,
+    case_ids: np.ndarray,
+    num_events: int,
+) -> MinerState:
+    """The :class:`MinerState` a streaming scan of the same rows would have
+    left behind: Ψ plus the last (time-ordered) activity of every case —
+    constructed vectorized from canonical columns, no second scan."""
+    last_by_case: Dict[int, int] = {}
+    if num_events:
+        is_end = np.ones(case_ids.shape[0], dtype=bool)
+        is_end[:-1] = case_ids[:-1] != case_ids[1:]
+        for c, a in zip(case_ids[is_end], event_activity[is_end]):
+            last_by_case[int(c)] = int(a)
+    return MinerState(
+        psi=psi.astype(np.int64), last_by_case=last_by_case,
+        events_seen=num_events,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+
+def _event_tables(
+    event_activity: np.ndarray,
+    event_trace: np.ndarray,
+    event_time: np.ndarray,
+    a: int,
+    t: int,
+) -> dict:
+    """The two node-expansion CSR indexes over canonical event columns."""
+    order = np.argsort(event_activity, kind="stable")
+    act_indptr = np.zeros(a + 1, dtype=np.int64)
+    np.cumsum(np.bincount(event_activity, minlength=a), out=act_indptr[1:])
+    case_indptr = np.zeros(t + 1, dtype=np.int64)
+    np.cumsum(np.bincount(event_trace, minlength=t), out=case_indptr[1:])
+    return dict(
+        event_activity=np.ascontiguousarray(event_activity, dtype=np.int32),
+        event_trace=np.ascontiguousarray(event_trace, dtype=np.int32),
+        event_time=np.ascontiguousarray(event_time, dtype=np.float64),
+        act_indptr=act_indptr,
+        act_events=order.astype(np.int64),
+        case_indptr=case_indptr,
+    )
+
+
+def _build_from_repository(
+    repo: EventRepository, backend: str, source_fp: Optional[str]
+) -> EventGraph:
+    a = repo.num_activities
+    src, dst, valid = repo.df_pairs()
+    adj, psi = _aggregate_pairs(src, dst, valid, a, backend)
+    return EventGraph(
+        activity_names=list(repo.activity_names),
+        num_events=repo.num_events,
+        num_traces=repo.num_traces,
+        node_counts=_node_counts(repo.event_activity, a, backend),
+        adj=adj,
+        radj=adj.transpose(),
+        source_fp=source_fp,
+        **_event_tables(
+            repo.event_activity, repo.event_trace, repo.event_time,
+            a, repo.num_traces,
+        ),
+    )
+
+
+def _build_from_memmap(
+    log: MemmapLog,
+    backend: str,
+    source_fp: Optional[str],
+    memory_budget_events: Optional[int],
+) -> EventGraph:
+    a = log.num_activities
+    in_budget = (
+        memory_budget_events is None
+        or log.num_events <= memory_budget_events
+    )
+    if in_budget:
+        # one materialization gives canonical event tables *and* the pair
+        # columns; the miner state is reconstructed vectorized (no rescan)
+        from repro.query.execute import repository_from_memmap
+
+        repo = repository_from_memmap(log)
+        src, dst, valid = repo.df_pairs()
+        adj, psi = _aggregate_pairs(src, dst, valid, a, backend)
+        if psi is None:
+            psi = dense_from_csr(adj)
+        # miner keys are the log's raw case ids, not repo trace indices
+        raw_case = np.asarray(log.case)
+        order = np.lexsort(
+            (np.arange(raw_case.shape[0]), np.asarray(log.time), raw_case)
+        )
+        miner = _miner_state_from_columns(
+            psi, np.asarray(log.activity)[order], raw_case[order],
+            log.num_events,
+        )
+        return EventGraph(
+            activity_names=list(repo.activity_names),
+            num_events=log.num_events,
+            num_traces=repo.num_traces,
+            node_counts=_node_counts(repo.event_activity, a, backend),
+            adj=adj,
+            radj=adj.transpose(),
+            source_fp=source_fp,
+            rows_end=log.num_events,
+            miner=miner,
+            **_event_tables(
+                repo.event_activity, repo.event_trace, repo.event_time,
+                a, repo.num_traces,
+            ),
+        )
+    # out-of-core: one streaming scan, topology-only (O(A² + nnz) memory)
+    miner = StreamingDFGMiner(a)
+    node_counts = np.zeros(a, dtype=np.int64)
+    for acts, cases, times in log.iter_chunks():
+        miner.update(acts, cases, times)
+        node_counts += np.bincount(acts, minlength=a)
+    psi = miner.finalize()
+    adj = csr_from_dense(psi)
+    return EventGraph(
+        activity_names=log.activity_labels(),
+        num_events=log.num_events,
+        num_traces=log.num_traces,
+        node_counts=node_counts,
+        adj=adj,
+        radj=adj.transpose(),
+        source_fp=source_fp,
+        rows_end=log.num_events,
+        miner=miner.snapshot(),
+    )
+
+
+def build_graph(
+    source,
+    *,
+    backend: str = "auto",
+    memory_budget_events: Optional[int] = None,
+    source_fp: Optional[str] = None,
+) -> EventGraph:
+    """Construct the event-knowledge graph of a store.
+
+    ``source`` is an :class:`EventRepository` or :class:`MemmapLog`;
+    ``backend`` pins the dense-aggregation operator (``auto`` / ``numpy`` /
+    ``scatter`` / ``onehot`` / ``pallas``).  Memmap logs beyond
+    ``memory_budget_events`` build a topology-only graph in one streaming
+    scan.  ``source_fp`` (a :func:`repro.query.cache.fingerprint` string)
+    records provenance so snapshots can prove append-only extension.
+    """
+    if isinstance(source, EventRepository):
+        return _build_from_repository(source, backend, source_fp)
+    if isinstance(source, MemmapLog):
+        return _build_from_memmap(
+            source, backend, source_fp, memory_budget_events
+        )
+    raise TypeError(
+        f"build_graph expects EventRepository or MemmapLog, "
+        f"got {type(source).__name__}"
+    )

@@ -1,0 +1,3 @@
+from .ops import segment_count
+
+__all__ = ["segment_count"]

@@ -18,6 +18,7 @@ with an LRU plan/result cache (:mod:`repro.query.cache`).
 
 from .ast import (
     EMPTY_WINDOW,
+    TOPOLOGY_SINKS,
     Activities,
     ApplyView,
     CompareSink,
@@ -26,6 +27,8 @@ from .ast import (
     HistogramSink,
     LogicalPlan,
     LogRef,
+    NeighborhoodSink,
+    ProcessMapSink,
     Q,
     Query,
     QueryPlanError,
@@ -67,7 +70,8 @@ from .planner import (
 __all__ = [
     "Q", "Query", "QueryPlanError",
     "Window", "EMPTY_WINDOW", "Activities", "TopVariants", "ApplyView",
-    "DFGSink", "HistogramSink", "VariantsSink", "CompareSink", "LogicalPlan",
+    "DFGSink", "HistogramSink", "VariantsSink", "CompareSink",
+    "ProcessMapSink", "NeighborhoodSink", "TOPOLOGY_SINKS", "LogicalPlan",
     "LogRef", "FromLogs", "UnionSource", "union_activity_names",
     "QueryCache", "fingerprint", "fingerprint_memmap",
     "fingerprint_repository", "fingerprint_union", "split_union_fingerprint",

@@ -31,6 +31,8 @@ Grammar::
             | ApplyView(mapping)        -- access-control projection (§2.2)
     sink   := DFGSink(backend) | HistogramSink() | VariantsSink(k)
             | CompareSink(backend)      -- union only: per-log Ψ + drift
+            | ProcessMapSink(top, ...)  -- significance-filtered map
+            | NeighborhoodSink(act, k)  -- k-hop :DF neighborhood
 
 The source algebra is what makes "which logs" a plan property instead of a
 pre-filter: predicates distribute into every branch, union sinks merge
@@ -59,6 +61,9 @@ __all__ = [
     "HistogramSink",
     "VariantsSink",
     "CompareSink",
+    "ProcessMapSink",
+    "NeighborhoodSink",
+    "TOPOLOGY_SINKS",
     "LogRef",
     "FromLogs",
     "UnionSource",
@@ -199,7 +204,41 @@ class VariantsSink:
     k: Optional[int] = None
 
 
-Sink = Union[DFGSink, HistogramSink, VariantsSink, CompareSink]
+@dataclasses.dataclass(frozen=True)
+class ProcessMapSink:
+    """ProFIT-style significance-filtered process map: the top ``top``
+    fraction of Activity nodes by event frequency, then the top
+    ``edge_top`` (default ``top``) fraction of ``:DF`` edges among them —
+    the sink the graph tier makes a store lookup.  ``backend`` pins the
+    physical operator like :class:`DFGSink` (``"graph"`` forces the CSR
+    store)."""
+
+    top: float = 0.2
+    edge_top: Optional[float] = None
+    backend: str = "auto"
+
+
+@dataclasses.dataclass(frozen=True)
+class NeighborhoodSink:
+    """k-hop ``:DF`` neighborhood of one activity (``direction`` ∈
+    out | in | both): reached activities with hop distances plus the
+    induced edge subgraph.  Under a view, ``activity`` names a visible
+    group label."""
+
+    activity: str
+    k: int = 1
+    direction: str = "out"
+    backend: str = "auto"
+
+
+Sink = Union[
+    DFGSink, HistogramSink, VariantsSink, CompareSink,
+    ProcessMapSink, NeighborhoodSink,
+]
+
+#: sinks answered from the aggregated :DF topology — the graph backend's
+#: domain (and the planner's amortization candidates)
+TOPOLOGY_SINKS = (DFGSink, ProcessMapSink, NeighborhoodSink)
 
 
 # ---------------------------------------------------------------------------
@@ -461,6 +500,38 @@ class Query:
 
     def variants(self, k: Optional[int] = None):
         return self._run(VariantsSink(k=k))
+
+    def process_map(
+        self,
+        top: float = 0.2,
+        edge_top: Optional[float] = None,
+        backend: str = "auto",
+    ):
+        """Significance-filtered process map (top-fraction nodes/edges) —
+        served from the CSR graph store once one is built."""
+        return self._run(ProcessMapSink(
+            top=float(top),
+            edge_top=float(edge_top) if edge_top is not None else None,
+            backend=backend,
+        ))
+
+    def neighborhood(
+        self,
+        activity: str,
+        k: int = 1,
+        direction: str = "out",
+        backend: str = "auto",
+    ):
+        """k-hop ``:DF`` successor/predecessor neighborhood of
+        ``activity``."""
+        if direction not in ("out", "in", "both"):
+            raise QueryPlanError(
+                f"direction must be out|in|both, got {direction!r}"
+            )
+        return self._run(NeighborhoodSink(
+            activity=str(activity), k=int(k), direction=direction,
+            backend=backend,
+        ))
 
     def compare(self, backend: str = "auto"):
         """Cross-log comparison (requires a ``Q.logs(...)`` source): per-log

@@ -43,14 +43,24 @@ from repro.core.repository import EventRepository, concat_repositories
 from repro.core.streaming import MemmapLog, StreamingDFGMiner, memmap_log_name
 from repro.core.variants import trace_variants, variant_filtered_repository
 from repro.core.views import HIDDEN
+from repro.graph import (
+    GraphStore,
+    csr_from_dense,
+    derive_neighborhood,
+    derive_process_map,
+)
+from repro.graph.build import EventGraph
 
 from .ast import (
+    TOPOLOGY_SINKS,
     Activities,
     ApplyView,
     CompareSink,
     DFGSink,
     HistogramSink,
     LogicalPlan,
+    NeighborhoodSink,
+    ProcessMapSink,
     Query,
     QueryPlanError,
     Sink,
@@ -117,6 +127,7 @@ class EngineStats:
     delta_free_hits: int = 0  # append-only + window inside old range: no scan
     rows_scanned: int = 0  # memmap rows fed to streaming/delta scans
     union_queries: int = 0  # multi-source (Q.logs) queries, incl. compare
+    graph_queries: int = 0  # answered from the CSR event-knowledge graph
 
 
 @dataclasses.dataclass
@@ -294,10 +305,13 @@ class QueryEngine:
         cache: Optional[QueryCache] = None,
         repo_memo_size: int = 4,
         calibration_path: Optional[str] = None,
+        graph_crossover: Optional[int] = None,
+        max_graphs: int = 8,
     ):
         self.mesh = mesh
         # thresholds left unset fall back to the measured calibration
-        # (BENCH_query.json) when one exists, else the static constants
+        # (BENCH_query.json / BENCH_graph.json) when one exists, else the
+        # static constants
         cal = load_calibration(calibration_path)
         self.tiny_pairs = (
             cal["tiny_pairs"] if tiny_pairs is None else tiny_pairs
@@ -307,6 +321,23 @@ class QueryEngine:
             if memory_budget_events is None
             else memory_budget_events
         )
+        # repeated topology queries on one source after which building the
+        # event-knowledge graph amortizes (measured columnar↔graph
+        # crossover from BENCH_graph.json when available)
+        self.graph_crossover = (
+            cal["graph_repeat_crossover"]
+            if graph_crossover is None
+            else graph_crossover
+        )
+        # built graphs keyed by source fingerprint; appends extend the CSR
+        # over the proven suffix instead of rebuilding
+        self.graphs = GraphStore(
+            max_graphs=max_graphs,
+            memory_budget_events=self.memory_budget_events,
+        )
+        # per-source topology-query (miss) counter feeding the crossover
+        self._topo_seen: "OrderedDict[str, int]" = OrderedDict()
+        self._max_topo_seen = 512
         # the fused Pallas WHERE clause compares f32 timestamps; leave it on
         # unless your timestamps do not round-trip through f32
         self.fused_dicing = fused_dicing
@@ -358,7 +389,8 @@ class QueryEngine:
             if delta is not None:
                 return delta
 
-        physical = self._plan_cached(logical, info)
+        graph_available = self._graph_available(query.source, key[0], logical)
+        physical = self._plan_cached(logical, info, graph_available)
 
         t0 = time.perf_counter()
         value, names, resume = self._execute(
@@ -377,10 +409,35 @@ class QueryEngine:
         )
         return result
 
-    def _plan_cached(self, logical: LogicalPlan, info: SourceInfo) -> PhysicalPlan:
+    def _graph_available(self, source, fp: str, logical: LogicalPlan) -> bool:
+        """The planner's amortization signal: is the event-knowledge graph
+        of this source built (or provably extendable over an append), or has
+        this source crossed the repeat-query count where building one pays?
+        Counts only topology-sink cache *misses* — every hit is already
+        O(1), so repeats that matter are the ones that would rescan."""
+        if not isinstance(logical.sink, TOPOLOGY_SINKS) or logical.has_barrier():
+            return False
+        if isinstance(source, UnionSource):
+            return False  # branches make their own per-source decision
+        if self.graphs.peek(fp) or self.graphs.has_extendable(source):
+            return True
+        with self._lock:
+            n = self._topo_seen.get(fp, 0) + 1
+            self._topo_seen[fp] = n
+            self._topo_seen.move_to_end(fp)
+            while len(self._topo_seen) > self._max_topo_seen:
+                self._topo_seen.popitem(last=False)
+        return n >= self.graph_crossover
+
+    def _plan_cached(
+        self,
+        logical: LogicalPlan,
+        info: SourceInfo,
+        graph_available: bool = False,
+    ) -> PhysicalPlan:
         """LRU-memoized physical planning (plans depend only on the canonical
-        plan + source shape, never on data bytes)."""
-        plan_key = (logical.key(), info)
+        plan + source shape + graph availability, never on data bytes)."""
+        plan_key = (logical.key(), info, graph_available)
         with self._lock:
             physical = self._plans.get(plan_key)
             if physical is not None:
@@ -392,6 +449,7 @@ class QueryEngine:
             tiny_pairs=self.tiny_pairs,
             memory_budget_events=self.memory_budget_events,
             fused_dicing=self.fused_dicing,
+            graph_available=graph_available,
         )
         with self._lock:
             self._plans[plan_key] = physical
@@ -404,12 +462,30 @@ class QueryEngine:
         logical, rewrites = canonicalize(
             query.logical_plan(sink), info.activity_names
         )
+        if isinstance(query.source, UnionSource):
+            graph_available = False
+        else:
+            # the same signal run() would see, read-only: explain never
+            # bumps the repeat counter, but must predict the next run
+            fp = fingerprint(query.source)
+            with self._lock:
+                seen = self._topo_seen.get(fp, 0)
+            graph_available = (
+                isinstance(logical.sink, TOPOLOGY_SINKS)
+                and not logical.has_barrier()
+                and (
+                    self.graphs.peek(fp)
+                    or self.graphs.has_extendable(query.source)
+                    or seen + 1 >= self.graph_crossover
+                )
+            )
         physical = plan_physical(
             logical, info,
             mesh=self.mesh,
             tiny_pairs=self.tiny_pairs,
             memory_budget_events=self.memory_budget_events,
             fused_dicing=self.fused_dicing,
+            graph_available=graph_available,
         )
         lines = [
             f"logical : {logical.describe()}",
@@ -500,20 +576,51 @@ class QueryEngine:
         self.cache.put(key, result)
         return result
 
-    def _branch_raw(self, union: UnionSource, logical: LogicalPlan):
+    def _branch_raw(
+        self,
+        union: UnionSource,
+        logical: LogicalPlan,
+        branch_sink: Optional[Sink] = None,
+    ):
         """Per-branch *raw* sink values (window pushed down, no mask/view),
         each via a full :meth:`run` so caching + delta apply per branch."""
         branch_ops, _merge = distribute_over_union(logical)
-        if isinstance(logical.sink, HistogramSink):
-            branch_sink: Sink = HistogramSink()
-        else:  # DFG and compare both count per-branch Ψ
-            branch_sink = DFGSink(backend=logical.sink.backend)
+        if branch_sink is None:
+            if isinstance(logical.sink, HistogramSink):
+                branch_sink = HistogramSink()
+            else:  # DFG, compare, and topology sinks all count per-branch Ψ
+                branch_sink = DFGSink(backend=logical.sink.backend)
         out = []
         for branch in union.branches:
             src = branch.resolve()
             sub = self.run(Query(src, branch_ops, self), branch_sink)
             out.append((branch, src, sub.value))
         return out
+
+    def _merged_psi(
+        self, union: UnionSource, logical: LogicalPlan,
+        union_names: List[str], *, empty: bool,
+    ) -> np.ndarray:
+        u = len(union_names)
+        psi = np.zeros((u, u), dtype=np.int64)
+        if not empty:
+            for _branch, src, value in self._branch_raw(union, logical):
+                ids = self._align_ids(self._branch_names_of(src), union_names)
+                psi[np.ix_(ids, ids)] += value
+        return psi
+
+    def _merged_counts(
+        self, union: UnionSource, logical: LogicalPlan,
+        union_names: List[str], *, empty: bool,
+    ) -> np.ndarray:
+        counts = np.zeros(len(union_names), dtype=np.int64)
+        if not empty:
+            for _branch, src, value in self._branch_raw(
+                union, logical, HistogramSink()
+            ):
+                ids = self._align_ids(self._branch_names_of(src), union_names)
+                counts[ids] += value
+        return counts
 
     def _execute_union_merge(
         self,
@@ -524,21 +631,27 @@ class QueryEngine:
         *,
         empty: bool,
     ):
-        u = len(union_names)
         if isinstance(logical.sink, DFGSink):
-            psi = np.zeros((u, u), dtype=np.int64)
-            if not empty:
-                for _branch, src, value in self._branch_raw(union, logical):
-                    ids = self._align_ids(
-                        self._branch_names_of(src), union_names
-                    )
-                    psi[np.ix_(ids, ids)] += value
+            psi = self._merged_psi(union, logical, union_names, empty=empty)
             return self._finish_streaming_dfg(psi, union_names, st)
-        counts = np.zeros(u, dtype=np.int64)
-        if not empty:
-            for _branch, src, value in self._branch_raw(union, logical):
-                ids = self._align_ids(self._branch_names_of(src), union_names)
-                counts[ids] += value
+        if isinstance(logical.sink, (ProcessMapSink, NeighborhoodSink)):
+            # branch Ψ (and, for process maps, branch histograms) merge on
+            # the union vocabulary; the derivation runs once at the merge.
+            # A process map issues two sub-queries per branch (DFG +
+            # histogram) — one extra cold scan per branch, deliberately:
+            # both sub-results are plain single-log entries the cache and
+            # the delta path reuse across every sink type, which a fused
+            # Ψ+histogram branch sink would forfeit
+            psi = self._merged_psi(union, logical, union_names, empty=empty)
+            counts = (
+                self._merged_counts(union, logical, union_names, empty=empty)
+                if isinstance(logical.sink, ProcessMapSink)
+                else np.zeros(len(union_names), dtype=np.int64)
+            )
+            return self._finish_topology(
+                psi, counts, union_names, st, logical.sink
+            )
+        counts = self._merged_counts(union, logical, union_names, empty=empty)
         return self._finish_streaming_hist(counts, union_names, st)
 
     def _execute_compare(
@@ -814,7 +927,8 @@ class QueryEngine:
         source_fp: Optional[str] = None,
     ):
         if not logical.has_barrier() and isinstance(
-            logical.sink, (DFGSink, HistogramSink)
+            logical.sink, (DFGSink, HistogramSink, ProcessMapSink,
+                           NeighborhoodSink)
         ):
             pre = _collect(None, logical)
             if pre.window is not None and pre.window.empty:
@@ -822,6 +936,8 @@ class QueryEngine:
                 # right shape, without materializing or scanning anything
                 value, names = self._empty_result(source, logical, pre)
                 return value, names, None
+        if physical.backend == "graph":
+            return self._execute_graph(source, logical, physical, source_fp)
         if physical.backend == "streaming":
             return self._execute_streaming(source, logical, physical)
         repo = (
@@ -838,6 +954,8 @@ class QueryEngine:
             value, names = self._histogram_on_repo(st)
         elif isinstance(logical.sink, VariantsSink):
             value, names = self._variants_on_repo(st, logical.sink)
+        elif isinstance(logical.sink, (ProcessMapSink, NeighborhoodSink)):
+            value, names = self._topology_on_repo(st, logical, physical)
         else:
             raise QueryPlanError(f"unknown sink {logical.sink!r}")
         return value, names, None
@@ -851,6 +969,12 @@ class QueryEngine:
         if st.keep is not None:
             _validate_keep(st.keep, names)
         a = len(names)
+        if isinstance(logical.sink, (ProcessMapSink, NeighborhoodSink)):
+            return self._finish_topology(
+                np.zeros((a, a), dtype=np.int64),
+                np.zeros(a, dtype=np.int64),
+                names, st, logical.sink,
+            )
         if isinstance(logical.sink, DFGSink):
             return self._finish_streaming_dfg(
                 np.zeros((a, a), dtype=np.int64), names, st
@@ -996,6 +1120,148 @@ class QueryEngine:
             )
         return tv, None
 
+    # -- graph (event-knowledge-graph store) ---------------------------------
+    def _execute_graph(
+        self, source, logical: LogicalPlan, physical: PhysicalPlan,
+        source_fp: Optional[str],
+    ):
+        """Topology sinks answered from the CSR graph store.
+
+        The graph is built once per source fingerprint (appends extend it
+        over the proven suffix) and then:
+
+        * un-windowed, un-filtered plans are pure lookups — DFG densifies
+          the CSR, neighborhood/process map walk it directly;
+        * filters/views post-process the densified Ψ exactly like the
+          streaming finishers (count-preserving, pinned bit-identical);
+        * a window needs the event-level tables (full graphs only): pairs
+          are re-aggregated under the endpoint mask — same O(E) as
+          columnar, kept only for pinned-backend correctness.
+        """
+        fp = source_fp if source_fp is not None else fingerprint(source)
+        g = self.graphs.graph_for(source, fp)
+        with self._lock:
+            self.stats.graph_queries += 1
+        names = list(g.activity_names)
+        st = _collect(None, logical)  # planner guarantees barrier-free
+        if st.keep is not None:
+            _validate_keep(st.keep, names)
+        windowed = st.window is not None and not st.window.empty
+        plain = st.window is None and st.keep is None and st.view is None
+
+        if plain and isinstance(logical.sink, NeighborhoodSink):
+            self._check_center(logical.sink, names)
+            value = derive_neighborhood(
+                g.adj, g.radj, names, logical.sink.activity,
+                logical.sink.k, logical.sink.direction,
+            )
+            return value, names, None
+        if plain and isinstance(logical.sink, ProcessMapSink):
+            value = derive_process_map(
+                g.adj, g.node_counts, names,
+                logical.sink.top, logical.sink.edge_top,
+            )
+            return value, names, None
+
+        if windowed:
+            if not g.has_event_tables:
+                raise QueryPlanError(
+                    "windowed graph queries need event tables; this graph "
+                    "is topology-only (built out-of-core) — use "
+                    "streaming/auto"
+                )
+            psi, counts = self._windowed_from_tables(g, st.window)
+        else:
+            psi = g.psi()
+            counts = np.asarray(g.node_counts)
+        if isinstance(logical.sink, DFGSink):
+            value, out_names = self._finish_streaming_dfg(psi, names, st)
+        else:
+            value, out_names = self._finish_topology(
+                psi, counts, names, st, logical.sink
+            )
+        return value, out_names, None
+
+    @staticmethod
+    def _windowed_from_tables(g: EventGraph, window: Window):
+        """(Ψ, node counts) under a time window, from the graph's canonical
+        event tables — identical to the columnar pair-endpoint mask."""
+        acts = np.asarray(g.event_activity)
+        traces = np.asarray(g.event_trace)
+        times = np.asarray(g.event_time)
+        m = (times >= window.t0) & (times < window.t1)
+        a = g.num_activities
+        counts = np.bincount(acts[m], minlength=a).astype(np.int64)
+        if acts.shape[0] < 2:
+            return np.zeros((a, a), dtype=np.int64), counts
+        valid = (traces[:-1] == traces[1:]) & m[:-1] & m[1:]
+        return dfg_numpy(acts[:-1], acts[1:], valid, a), counts
+
+    @staticmethod
+    def _check_center(sink: NeighborhoodSink, names: List[str]) -> None:
+        if sink.activity not in names:
+            raise QueryPlanError(
+                f"unknown activity {sink.activity!r} for neighborhood(); "
+                "under a view, name a visible group label"
+            )
+
+    def _finish_topology(
+        self,
+        psi_raw: np.ndarray,
+        counts_raw: np.ndarray,
+        names: List[str],
+        st: _Collected,
+        sink: Sink,
+    ):
+        """Mask/project a raw Ψ (+ raw node counts) and derive the topology
+        sink's value.  Every execution path (graph, columnar, streaming,
+        union merge) funnels through this + the same derive functions, so
+        backend equivalence reduces to Ψ equivalence."""
+        psi_v, names_v = self._finish_streaming_dfg(psi_raw, names, st)
+        if isinstance(sink, ProcessMapSink):
+            counts_v, _hnames = self._finish_streaming_hist(
+                counts_raw, names, st
+            )
+            value = derive_process_map(
+                csr_from_dense(psi_v), counts_v, names_v,
+                sink.top, sink.edge_top,
+            )
+            return value, names_v
+        self._check_center(sink, names_v)
+        adj = csr_from_dense(psi_v)
+        value = derive_neighborhood(
+            adj, adj.transpose(), names_v, sink.activity, sink.k,
+            sink.direction,
+        )
+        return value, names_v
+
+    def _topology_on_repo(
+        self, st: _Collected, logical: LogicalPlan, physical: PhysicalPlan
+    ):
+        """Columnar path for process map / neighborhood: count Ψ on the
+        planned backend (window as pair predicate or fused into the
+        kernel), raw node counts alongside, then the shared derivation."""
+        repo = st.repo
+        src, dst, valid = repo.df_pairs()
+        window_fused = physical.fused_dicing and st.window is not None
+        ev_mask = np.ones(repo.num_events, dtype=bool)
+        if st.window is not None:
+            ts = repo.event_time
+            ev_mask = (ts >= st.window.t0) & (ts < st.window.t1)
+            if not window_fused:
+                valid = valid & pair_mask_for_window(
+                    repo, (st.window.t0, st.window.t1)
+                )
+        psi = self._count(
+            src, dst, valid, repo.num_activities, st, physical, repo
+        )
+        counts = np.bincount(
+            repo.event_activity[ev_mask], minlength=repo.num_activities
+        ).astype(np.int64)
+        return self._finish_topology(
+            psi, counts, list(repo.activity_names), st, logical.sink
+        )
+
     # -- streaming (out-of-core) ---------------------------------------------
     def _finish_streaming_dfg(self, psi: np.ndarray, names: List[str], st: _Collected):
         """Post-mask + project a raw Ψ (shared by streaming, delta, and the
@@ -1065,6 +1331,17 @@ class QueryEngine:
                 )
             value, out_names = self._finish_streaming_hist(counts, names, st)
             return value, out_names, resume
+        if isinstance(logical.sink, (ProcessMapSink, NeighborhoodSink)):
+            # one scan accumulates Ψ and node counts together
+            miner = StreamingDFGMiner(log.num_activities)
+            counts = np.zeros(log.num_activities, dtype=np.int64)
+            for a, c, t in log.iter_chunks(row_range=rng):
+                miner.update(a, c, t)
+                counts += np.bincount(a, minlength=log.num_activities)
+            value, out_names = self._finish_topology(
+                miner.finalize(), counts, names, st, logical.sink
+            )
+            return value, out_names, None
         raise QueryPlanError(
             f"sink {type(logical.sink).__name__} has no streaming path"
         )

@@ -73,6 +73,12 @@ def distribute_over_union(plan: LogicalPlan) -> Tuple[Tuple[Op, ...], Tuple[Op, 
     Materializing ops (:func:`is_barrier`) do not distribute — top-k
     variants of a union is not the union of per-branch top-k — and are
     routed to the materialized-concatenation path by the planner.
+
+    Topology sinks (process map / neighborhood) ride the same split: their
+    branch sub-queries count plain Ψ (plus per-branch histograms for node
+    significance), and the significance filter / BFS runs once at the
+    merge on the aligned union matrix — a per-branch process map would not
+    merge count-preservingly.
     """
     if plan.has_barrier():
         raise QueryPlanError(

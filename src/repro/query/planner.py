@@ -15,6 +15,9 @@ mesh available            ``distributed`` shard_map + psum over every axis
 CPU default backend       ``scatter`` (jnp .at[].add)
 TPU/GPU                   ``pallas`` MXU kernel; a time window fuses into the
                           kernel's WHERE clause (``dfg_count_diced``)
+graph built / amortized   ``graph`` — un-windowed topology sinks (DFG,
+                          process map, neighborhood) become CSR lookups in
+                          the event-knowledge graph store (repro.graph)
 ========================  =====================================================
 
 Pushdown decisions recorded on the :class:`PhysicalPlan`:
@@ -51,12 +54,15 @@ from repro.core.repository import EventRepository
 from repro.core.streaming import MemmapLog
 
 from .ast import (
+    TOPOLOGY_SINKS,
     Activities,
     ApplyView,
     CompareSink,
     DFGSink,
     HistogramSink,
     LogicalPlan,
+    NeighborhoodSink,
+    ProcessMapSink,
     QueryPlanError,
     UnionSource,
     VariantsSink,
@@ -78,6 +84,10 @@ __all__ = [
 TINY_PAIRS = 2048
 #: above this many events a memmap log is mined out-of-core
 MEMORY_BUDGET_EVENTS = 1 << 22
+#: repeated topology queries on one source after which building the
+#: event-knowledge graph (repro.graph) amortizes — measured crossover
+#: comes from BENCH_graph.json when available
+GRAPH_REPEAT_CROSSOVER = 3
 
 
 # ---------------------------------------------------------------------------
@@ -90,34 +100,27 @@ _CALIBRATION_CLAMPS = {
     "tiny_pairs": (256, 4096),
     "memory_budget_events": (1 << 20, 1 << 26),
 }
+_GRAPH_CLAMPS = {
+    "graph_repeat_crossover": (1, 64),
+}
 _REPO_ROOT = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "..", "..")
 )
 
 
-def load_calibration(path: Optional[str] = None) -> Dict[str, int]:
-    """Cost-model thresholds, measured when available.
-
-    ``benchmarks/bench_query_engine.py`` writes a ``calibration`` section
-    (backend-crossover ``tiny_pairs``, machine-sized
-    ``memory_budget_events``) into ``BENCH_query.json``.  When such a record
-    exists — searched as: explicit ``path``, ``$GRAPHPM_BENCH_QUERY``,
-    ``./BENCH_query.json``, ``<repo root>/BENCH_query.json`` — its values
-    replace the static constants, clamped to sanity rails.  The constants
-    are always the fallback, so a machine that never benchmarked plans
-    exactly as before.
-    """
-    out = {
-        "tiny_pairs": TINY_PAIRS,
-        "memory_budget_events": MEMORY_BUDGET_EVENTS,
-    }
-    # an explicitly named record (argument or env var) is authoritative: if
-    # it is missing or corrupt we fall back to the *static constants*, never
-    # to whatever BENCH_query.json happens to sit in the cwd / repo root
-    explicit = path or os.environ.get("GRAPHPM_BENCH_QUERY")
+def _read_calibration(
+    explicit: Optional[str],
+    basename: str,
+    clamps: Dict[str, Tuple[int, int]],
+    out: Dict[str, int],
+) -> None:
+    """Merge one bench record's ``calibration`` section into ``out``,
+    clamped.  An explicitly named record is authoritative: if it is missing
+    or corrupt we fall back to the *static constants*, never to whatever
+    record happens to sit in the cwd / repo root."""
     candidates = [explicit] if explicit else [
-        "BENCH_query.json",
-        os.path.join(_REPO_ROOT, "BENCH_query.json"),
+        basename,
+        os.path.join(_REPO_ROOT, basename),
     ]
     for cand in candidates:
         if not cand or not os.path.isfile(cand):
@@ -130,15 +133,49 @@ def load_calibration(path: Optional[str] = None) -> Dict[str, int]:
         cal = data.get("calibration")
         if not isinstance(cal, dict):
             continue
-        for key, (lo, hi) in _CALIBRATION_CLAMPS.items():
+        for key, (lo, hi) in clamps.items():
             v = cal.get(key)
             if isinstance(v, (int, float)) and not isinstance(v, bool) and v > 0:
                 out[key] = int(min(max(int(v), lo), hi))
-        return out
+        return
+
+
+def load_calibration(
+    path: Optional[str] = None, graph_path: Optional[str] = None
+) -> Dict[str, int]:
+    """Cost-model thresholds, measured when available.
+
+    ``benchmarks/bench_query_engine.py`` writes a ``calibration`` section
+    (backend-crossover ``tiny_pairs``, machine-sized
+    ``memory_budget_events``) into ``BENCH_query.json``, and
+    ``benchmarks/bench_graph.py`` writes the columnar↔graph crossover
+    (``graph_repeat_crossover`` — the repeat-query count above which
+    building the event-knowledge graph amortizes) into
+    ``BENCH_graph.json``.  When such records exist — searched as: explicit
+    path argument, ``$GRAPHPM_BENCH_QUERY`` / ``$GRAPHPM_BENCH_GRAPH``,
+    ``./BENCH_*.json``, ``<repo root>/BENCH_*.json`` — their values replace
+    the static constants, clamped to sanity rails.  The constants are
+    always the fallback, so a machine that never benchmarked plans exactly
+    as before.
+    """
+    out = {
+        "tiny_pairs": TINY_PAIRS,
+        "memory_budget_events": MEMORY_BUDGET_EVENTS,
+        "graph_repeat_crossover": GRAPH_REPEAT_CROSSOVER,
+    }
+    _read_calibration(
+        path or os.environ.get("GRAPHPM_BENCH_QUERY"),
+        "BENCH_query.json", _CALIBRATION_CLAMPS, out,
+    )
+    _read_calibration(
+        graph_path or os.environ.get("GRAPHPM_BENCH_GRAPH"),
+        "BENCH_graph.json", _GRAPH_CLAMPS, out,
+    )
     return out
 
 _DFG_BACKENDS = {
     "auto", "numpy", "scatter", "onehot", "pallas", "streaming", "distributed",
+    "graph",
 }
 
 
@@ -190,12 +227,13 @@ def source_info(source) -> SourceInfo:
 @dataclasses.dataclass(frozen=True)
 class PhysicalPlan:
     # numpy | scatter | onehot | pallas | streaming | distributed | delta
-    #   | union | compare | concat
+    #   | union | compare | concat | graph
     # ("delta" is engine-chosen only: it resumes cached streaming state over
     # a proven append-only suffix and is never requestable by the analyst;
     # "union"/"compare" merge per-branch sub-plans — the notes record each
-    # branch's own backend — and "concat" materializes the concatenated
-    # repository for ops that do not distribute)
+    # branch's own backend — "concat" materializes the concatenated
+    # repository for ops that do not distribute, and "graph" answers
+    # topology sinks from the CSR event-knowledge graph store)
     backend: str
     materialize: bool = False  # memmap source loaded into memory first
     row_range_window: Optional[Tuple[float, float]] = None
@@ -336,10 +374,19 @@ def plan_physical(
     tiny_pairs: int = TINY_PAIRS,
     memory_budget_events: int = MEMORY_BUDGET_EVENTS,
     fused_dicing: bool = True,
+    graph_available: bool = False,
 ) -> PhysicalPlan:
     """Map a canonical logical plan to a physical one.  ``plan`` must be the
-    output of :func:`repro.query.optimize.canonicalize`."""
-    if isinstance(plan.sink, (DFGSink, CompareSink)):
+    output of :func:`repro.query.optimize.canonicalize`.
+
+    ``graph_available`` is the engine's amortization signal: True when the
+    event-knowledge graph of this source is already built (or provably
+    extendable / past the repeat-query crossover, so building it now pays).
+    With it, un-windowed topology sinks route to the ``graph`` backend —
+    CSR lookups instead of an O(E) recount.
+    """
+    if isinstance(plan.sink, (DFGSink, CompareSink, ProcessMapSink,
+                              NeighborhoodSink)):
         if plan.sink.backend not in _DFG_BACKENDS:
             raise QueryPlanError(f"unknown DFG backend {plan.sink.backend!r}")
     if info.branches is not None:
@@ -377,8 +424,41 @@ def plan_physical(
             return PhysicalPlan(backend="numpy", materialize=True)
         return PhysicalPlan(backend="numpy")
 
-    # -- DFG sink ------------------------------------------------------------
+    # -- topology sinks (DFG / process map / neighborhood) -------------------
     requested = plan.sink.backend  # validated against _DFG_BACKENDS above
+
+    # graph backend: the aggregated :DF CSR answers un-windowed topology
+    # queries as lookups.  A window needs the event-level tables (out-of-core
+    # graphs are topology-only), and barriers change the source itself.
+    if requested == "graph" or (
+        requested == "auto"
+        and graph_available
+        and not has_barrier
+        and (window is None or window.empty)
+    ):
+        if has_barrier:
+            raise QueryPlanError(
+                "graph backend cannot evaluate materializing ops "
+                "(top_variants / relink); drop them or use another backend"
+            )
+        windowed = window is not None and not window.empty
+        if (
+            windowed
+            and info.kind == "memmap"
+            and info.num_events > memory_budget_events
+        ):
+            raise QueryPlanError(
+                "windowed graph queries need event tables; this out-of-core "
+                "log builds a topology-only graph — use streaming/auto"
+            )
+        notes.append(
+            "graph=event_tables_window" if windowed else "graph=csr_lookup"
+        )
+        return PhysicalPlan(
+            backend="graph",
+            activities_as_output_mask=acts is not None,
+            notes=tuple(notes),
+        )
 
     if info.kind == "memmap":
         if has_barrier:

@@ -18,6 +18,13 @@ HTTP/RPC layer can wrap it without touching engine internals::
     })
     out["psi"], out["names"], out["from_cache"]
 
+Topology sinks ride the engine's graph tier: ``{"sink": "process_map"}``
+(significance-filtered map, k-anonymity floor applied to nodes *and*
+edges) and ``{"sink": "neighborhood", "activity": a, "k": 2}`` are served
+from the CSR event-knowledge graph once the engine's repeat-query
+crossover builds it — repeated dashboard topology queries stop rescanning
+the log entirely.
+
 Multi-log requests name several registered logs at once and compile to the
 engine's union source algebra::
 
@@ -215,6 +222,57 @@ class QueryService:
             q = q.view(grant.view)
         return q
 
+    @staticmethod
+    def _floor_process_map(pm, floor: int) -> Dict:
+        """k-anonymity on a process map: nodes below the floor disappear,
+        and so does every edge below the floor or touching a dropped node —
+        a sub-floor activity must not be reconstructible from its flows."""
+        keep = {
+            a for a, c in zip(pm.activities, pm.node_counts)
+            if not floor or int(c) >= floor
+        }
+        edges = [
+            (s, d, int(c)) for s, d, c in pm.edges
+            if s in keep and d in keep and (not floor or int(c) >= floor)
+        ]
+        return {
+            "activities": [a for a in pm.activities if a in keep],
+            "node_counts": [
+                int(c) for a, c in zip(pm.activities, pm.node_counts)
+                if a in keep
+            ],
+            "edges": [list(e) for e in edges],
+            "top": pm.top,
+            "edge_top": pm.edge_top,
+            "dropped_activities": (
+                pm.dropped_activities + len(pm.activities) - len(keep)
+            ),
+            "dropped_edges": pm.dropped_edges + len(pm.edges) - len(edges),
+        }
+
+    @staticmethod
+    def _floor_neighborhood(nb, floor: int) -> Dict:
+        """k-anonymity on a neighborhood: sub-floor edges are dropped, and
+        with them any reached activity left without a surviving edge (the
+        center always remains)."""
+        edges = [
+            (s, d, int(c)) for s, d, c in nb.edges
+            if not floor or int(c) >= floor
+        ]
+        touched = {nb.center}
+        for s, d, _ in edges:
+            touched.add(s)
+            touched.add(d)
+        acts = [a for a in nb.activities if a in touched]
+        return {
+            "center": nb.center,
+            "k": nb.k,
+            "direction": nb.direction,
+            "activities": acts,
+            "hops": {a: nb.hops[a] for a in acts},
+            "edges": [list(e) for e in edges],
+        }
+
     def query(self, request: Dict) -> Dict:
         """Execute one request dict; returns a JSON-shaped response dict.
 
@@ -266,6 +324,27 @@ class QueryService:
                 "counts": tv.counts[keep].tolist(),
                 "sequences": [s for s, ok in zip(tv.sequences, keep) if ok],
             }
+        elif sink == "process_map":
+            res = q.process_map(
+                top=float(request.get("top", 0.2)),
+                edge_top=(
+                    float(request["edge_top"])
+                    if request.get("edge_top") is not None
+                    else None
+                ),
+                backend=request.get("backend", "auto"),
+            )
+            payload = self._floor_process_map(res.value, floor)
+        elif sink == "neighborhood":
+            if request.get("activity") is None:
+                raise KeyError('"neighborhood" requests need an "activity"')
+            res = q.neighborhood(
+                str(request["activity"]),
+                k=int(request.get("k", 1)),
+                direction=str(request.get("direction", "out")),
+                backend=request.get("backend", "auto"),
+            )
+            payload = self._floor_neighborhood(res.value, floor)
         elif sink == "compare":
             res = q.compare(backend=request.get("backend", "auto"))
             cr = res.value

@@ -1,0 +1,582 @@
+"""repro.graph — the event-knowledge-graph tier.
+
+Pins: CSR construction against the Algorithm 1 oracle, snapshot
+persistence (build → save → load → append → extend ≡ fresh build, array
+for array, with a prefix-preserving fingerprint), the graph-native sinks
+(DFG / neighborhood / process map / path frequencies), the ``graph``
+physical backend's bit-identity across windows / views / filters / unions,
+the planner's columnar↔graph crossover, and the serving exposure with the
+k-anonymity floor on process-map edges.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import dfg_algorithm1, dfg_numpy, paper_example_repo
+from repro.core.repository import EventRepository, concat_repositories
+from repro.core.streaming import streaming_dfg
+from repro.data import ProcessSpec, generate_memmap_log, generate_repository
+from repro.graph import (
+    GraphStore,
+    build_graph,
+    csr_from_dense,
+    dense_from_csr,
+    derive_neighborhood,
+    derive_process_map,
+    extend_graph,
+    load_graph,
+    neighborhood,
+    path_frequencies,
+    process_map,
+    save_graph,
+)
+from repro.graph.store import _proves_append_only
+from repro.query import Q, QueryEngine, QueryPlanError
+from repro.query.cache import (
+    fingerprint_memmap,
+    parse_memmap_fingerprint,
+    prefix_digest,
+)
+from repro.query.planner import load_calibration
+
+
+@pytest.fixture()
+def engine():
+    # crossover pinned so tests don't depend on the committed BENCH record
+    return QueryEngine(graph_crossover=3)
+
+
+@pytest.fixture(scope="module")
+def repo():
+    return generate_repository(500, ProcessSpec(num_activities=13, seed=17))
+
+
+@pytest.fixture()
+def mmlog(tmp_path):
+    return generate_memmap_log(
+        str(tmp_path / "log"), 20_000,
+        ProcessSpec(num_activities=14, seed=21), seed=21,
+    )
+
+
+def _append_batch(log, n, seed=1, new_activity=False):
+    rng = np.random.default_rng(seed)
+    hi = log.num_activities + (1 if new_activity else 0)
+    act = rng.integers(0, hi, n).astype(np.int32)
+    if new_activity:
+        act[0] = hi - 1  # make sure the new id actually occurs
+    case = rng.integers(0, log.num_traces, n).astype(np.int32)
+    times = float(log.time[-1]) + np.sort(rng.uniform(0.0, 100.0, n))
+    return log.append(act, case, times)
+
+
+def _assert_same_csr(a, b):
+    np.testing.assert_array_equal(np.asarray(a.indptr), np.asarray(b.indptr))
+    np.testing.assert_array_equal(np.asarray(a.indices), np.asarray(b.indices))
+    np.testing.assert_array_equal(np.asarray(a.counts), np.asarray(b.counts))
+
+
+# ---------------------------------------------------------------------------
+# construction — CSR ≡ Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def test_graph_psi_matches_algorithm1_oracle():
+    repo = paper_example_repo()
+    want, _acts = dfg_algorithm1(repo.to_graph())
+    g = build_graph(repo)
+    assert g.activity_names == repo.activity_names
+    np.testing.assert_array_equal(g.psi(), want)
+    np.testing.assert_array_equal(dense_from_csr(g.adj), want)
+    np.testing.assert_array_equal(dense_from_csr(g.radj), want.T)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "scatter", "onehot", "pallas"])
+def test_build_backends_agree(repo, backend):
+    src, dst, valid = repo.df_pairs()
+    want = dfg_numpy(src, dst, valid, repo.num_activities)
+    g = build_graph(repo, backend=backend)
+    np.testing.assert_array_equal(g.psi(), want)
+
+
+def test_csr_structure_and_node_tables(repo):
+    g = build_graph(repo)
+    a = repo.num_activities
+    assert g.adj.indptr.shape == (a + 1,)
+    assert np.all(np.diff(g.adj.indptr) >= 0)
+    for i in range(a):
+        row = g.adj.indices[g.adj.indptr[i] : g.adj.indptr[i + 1]]
+        assert np.all(np.diff(row) > 0)  # ascending, no duplicates
+    assert np.all(g.adj.counts > 0)
+    _assert_same_csr(g.radj, g.adj.transpose())
+    np.testing.assert_array_equal(
+        g.node_counts, np.bincount(repo.event_activity, minlength=a)
+    )
+    # :OF_TYPE expansion reproduces events_of_activity
+    for i, name in enumerate(repo.activity_names):
+        np.testing.assert_array_equal(
+            np.sort(g.events_of_activity(i)), repo.events_of_activity(name)
+        )
+    # :BELONGS_TO rows cover the canonical order exactly
+    assert g.case_indptr[0] == 0 and g.case_indptr[-1] == repo.num_events
+    for t in range(repo.num_traces):
+        lo, hi = g.events_of_case(t)
+        assert np.all(repo.event_trace[lo:hi] == t)
+
+
+def test_sparse_aggregation_matches_dense(repo):
+    import repro.graph.build as build_mod
+
+    src, dst, valid = repo.df_pairs()
+    want = csr_from_dense(dfg_numpy(src, dst, valid, repo.num_activities))
+    got = build_mod._aggregate_pairs_sparse(
+        src, dst, valid, repo.num_activities
+    )
+    _assert_same_csr(got, want)
+
+
+def test_segment_count_kernel_matches_bincount():
+    import jax.numpy as jnp
+
+    from repro.kernels.segment_count import segment_count
+
+    rng = np.random.default_rng(3)
+    ids = rng.integers(0, 200, 10_000).astype(np.int32)
+    valid = rng.random(10_000) < 0.7
+    out = segment_count(
+        jnp.asarray(ids), jnp.asarray(valid), num_segments=200
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out), np.bincount(ids[valid], minlength=200)
+    )
+
+
+def test_memmap_build_full_and_topology_only(mmlog):
+    want = streaming_dfg(mmlog)
+    full = build_graph(mmlog)
+    topo = build_graph(mmlog, memory_budget_events=100)
+    assert full.has_event_tables and not topo.has_event_tables
+    np.testing.assert_array_equal(full.psi(), want)
+    _assert_same_csr(full.adj, topo.adj)
+    np.testing.assert_array_equal(full.node_counts, topo.node_counts)
+
+
+# ---------------------------------------------------------------------------
+# persistence — build → save → load → append → extend round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_roundtrip_identical_arrays(repo, tmp_path):
+    g = build_graph(repo)
+    save_graph(g, str(tmp_path / "snap"))
+    g2 = load_graph(str(tmp_path / "snap"))
+    _assert_same_csr(g.adj, g2.adj)
+    _assert_same_csr(g.radj, g2.radj)
+    np.testing.assert_array_equal(g.node_counts, g2.node_counts)
+    for f in ("event_activity", "event_trace", "event_time",
+              "act_indptr", "act_events", "case_indptr"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(g, f)), np.asarray(getattr(g2, f))
+        )
+    assert g2.activity_names == g.activity_names
+    assert (g2.num_events, g2.num_traces) == (g.num_events, g.num_traces)
+
+
+@pytest.mark.parametrize("new_activity", [False, True])
+def test_snapshot_append_extend_roundtrip(mmlog, tmp_path, new_activity):
+    fp0 = fingerprint_memmap(mmlog)
+    g = build_graph(mmlog, source_fp=fp0)
+    save_graph(g, str(tmp_path / "snap"))
+
+    grown = _append_batch(mmlog, 700, new_activity=new_activity)
+    loaded = load_graph(str(tmp_path / "snap"))
+    # the stored fingerprint is prefix-preserving: the proof recomputes the
+    # prefix digest on the *current* bytes and matches the snapshot's
+    old = parse_memmap_fingerprint(loaded.source_fp)
+    assert old.num_events == mmlog.num_events
+    assert prefix_digest(grown, old.num_events) == old.prefix
+    assert _proves_append_only(loaded, grown)
+
+    ext = extend_graph(loaded, grown)
+    fresh = build_graph(grown)
+    _assert_same_csr(ext.adj, fresh.adj)
+    _assert_same_csr(ext.radj, fresh.radj)
+    np.testing.assert_array_equal(ext.node_counts, fresh.node_counts)
+    np.testing.assert_array_equal(
+        np.asarray(ext.event_activity), np.asarray(fresh.event_activity)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ext.act_events), np.asarray(fresh.act_events)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ext.case_indptr), np.asarray(fresh.case_indptr)
+    )
+    assert ext.source_fp == fingerprint_memmap(grown)
+    # an extended snapshot re-saves and still round-trips
+    save_graph(ext, str(tmp_path / "snap"))
+    again = load_graph(str(tmp_path / "snap"))
+    _assert_same_csr(again.adj, fresh.adj)
+
+
+def test_rewritten_log_fails_the_proof(mmlog, tmp_path):
+    g = build_graph(mmlog, source_fp=fingerprint_memmap(mmlog))
+    # rewrite a prefix byte in place: same shape growth afterwards
+    arr = np.memmap(
+        os.path.join(mmlog.path, "activity.i32"), dtype=np.int32, mode="r+",
+        shape=(mmlog.num_events,),
+    )
+    arr[0] = (int(arr[0]) + 1) % mmlog.num_activities
+    arr.flush()
+    del arr
+    grown = _append_batch(mmlog, 100)
+    assert not _proves_append_only(g, grown)
+
+
+def test_graph_store_hit_extend_rebuild(mmlog):
+    store = GraphStore()
+    fp0 = fingerprint_memmap(mmlog)
+    g1 = store.graph_for(mmlog, fp0)
+    assert store.graph_for(mmlog, fp0) is g1
+    assert store.stats.hits == 1 and store.stats.builds == 1
+
+    grown = _append_batch(mmlog, 500)
+    fp1 = fingerprint_memmap(grown)
+    g2 = store.graph_for(grown, fp1)
+    assert store.stats.extends == 1 and store.stats.builds == 1
+    _assert_same_csr(g2.adj, build_graph(grown).adj)
+    # the superseded generation is dropped — its fingerprint names bytes
+    # that no source will ever present again
+    assert not store.peek(fp0) and store.peek(fp1)
+    assert len(store) == 1
+
+
+def test_graph_store_concurrent_requests_build_once(repo):
+    import threading
+
+    from repro.query.cache import fingerprint_repository
+
+    store = GraphStore()
+    fp = fingerprint_repository(repo)
+    out, errors = [], []
+
+    def worker():
+        try:
+            out.append(store.graph_for(repo, fp))
+        except Exception as e:  # pragma: no cover - surfacing only
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert store.stats.builds == 1
+    assert all(g is out[0] for g in out)
+
+
+# ---------------------------------------------------------------------------
+# graph-native sinks
+# ---------------------------------------------------------------------------
+
+
+def test_neighborhood_directions():
+    repo = EventRepository.from_traces(
+        [["a", "b", "c"], ["a", "b", "d"], ["x", "a"]],
+        activity_vocab=["a", "b", "c", "d", "x"],
+    )
+    g = build_graph(repo)
+    out = neighborhood(g, "a", k=1, direction="out")
+    assert out.activities == ["a", "b"]
+    assert out.hops == {"a": 0, "b": 1}
+    inn = neighborhood(g, "a", k=1, direction="in")
+    assert inn.activities == ["a", "x"]
+    both = neighborhood(g, "a", k=2, direction="both")
+    assert set(both.activities) == {"a", "b", "c", "d", "x"}
+    assert both.hops["c"] == 2 and both.hops["x"] == 1
+    # induced edges only span reached nodes, with exact counts
+    assert ("a", "b", 2) in both.edges
+
+
+def test_path_frequencies_match_matrix_powers(repo):
+    g = build_graph(repo)
+    psi = g.psi().astype(np.float64)
+    s, d = repo.activity_names[0], repo.activity_names[3]
+    i, j = 0, 3
+    got = path_frequencies(g, s, d, max_hops=3)
+    acc = np.eye(psi.shape[0])
+    for hop in range(3):
+        acc = acc @ psi
+        assert got[hop] == acc[i, j]
+
+
+def test_process_map_filtering_deterministic(repo):
+    g = build_graph(repo)
+    full = process_map(g, top=1.0)
+    assert full.dropped_activities == 0 and full.dropped_edges == 0
+    # edges sorted by count desc, ties by (src, dst)
+    counts = [c for _, _, c in full.edges]
+    assert counts == sorted(counts, reverse=True)
+    psi = g.psi()
+    names = g.activity_names
+    for s, d, c in full.edges:
+        assert psi[names.index(s), names.index(d)] == c
+
+    some = process_map(g, top=0.3)
+    assert len(some.activities) < len(full.activities)
+    assert some.dropped_activities + len(some.activities) == len(
+        full.activities
+    )
+    # kept nodes are the most frequent ones
+    kept_min = min(
+        g.node_counts[names.index(a)] for a in some.activities
+    )
+    dropped_max = max(
+        (g.node_counts[i] for i, n in enumerate(names)
+         if n not in some.activities and g.node_counts[i] > 0),
+        default=0,
+    )
+    assert kept_min >= dropped_max
+
+
+def test_process_map_validates_top(repo):
+    g = build_graph(repo)
+    with pytest.raises(ValueError):
+        process_map(g, top=0.0)
+    with pytest.raises(ValueError):
+        process_map(g, top=1.5)
+
+
+# ---------------------------------------------------------------------------
+# engine: the `graph` physical backend — bit-identity
+# ---------------------------------------------------------------------------
+
+
+def _reference_dfg(repo, window=None, keep=None, view=None):
+    from repro.core.dicing import pair_mask_for_window
+
+    src, dst, valid = repo.df_pairs()
+    if window is not None:
+        valid = valid & pair_mask_for_window(repo, window)
+    if keep is not None:
+        ids = np.asarray([repo.activity_names.index(a) for a in keep])
+        m = np.isin(repo.event_activity, ids)
+        valid = valid & m[:-1] & m[1:]
+    psi = dfg_numpy(src, dst, valid, repo.num_activities)
+    if view is not None:
+        psi = view.apply_to_dfg(psi, repo.activity_names)
+    return psi
+
+
+def test_graph_backend_dfg_equals_oracle(repo, engine):
+    from repro.core import ActivityView
+
+    names = repo.activity_names
+    t0 = float(np.quantile(repo.event_time, 0.25))
+    t1 = float(np.quantile(repo.event_time, 0.8))
+    keep = names[1:6]
+    view = ActivityView({a: f"g{i % 3}" for i, a in enumerate(names)})
+    cases = [
+        (Q.log(repo).using(engine), dict()),
+        (Q.log(repo).using(engine).window(t0, t1), dict(window=(t0, t1))),
+        (Q.log(repo).using(engine).activities(keep), dict(keep=keep)),
+        (Q.log(repo).using(engine).view(view), dict(view=view)),
+        (
+            Q.log(repo).using(engine).window(t0, t1).activities(keep)
+            .view(view),
+            dict(window=(t0, t1), keep=keep, view=view),
+        ),
+    ]
+    for q, ref_kw in cases:
+        res = q.dfg(backend="graph")
+        assert res.physical.backend == "graph"
+        np.testing.assert_array_equal(res.value, _reference_dfg(repo, **ref_kw))
+
+
+def test_graph_backend_on_union_equals_concat_oracle(engine):
+    ra = generate_repository(300, ProcessSpec(num_activities=9, seed=4))
+    rb = generate_repository(260, ProcessSpec(num_activities=11, seed=5))
+    res = Q.logs((ra, "a"), (rb, "b")).using(engine).dfg(backend="graph")
+    cat = concat_repositories([("a", ra), ("b", rb)])
+    src, dst, valid = cat.df_pairs()
+    want = dfg_numpy(src, dst, valid, cat.num_activities)
+    np.testing.assert_array_equal(res.value, want)
+    assert res.names == cat.activity_names
+    # the per-branch sub-queries really ran on the graph store
+    assert engine.graphs.stats.builds == 2
+
+
+def test_graph_sinks_equal_columnar_everywhere(repo, engine):
+    """process_map / neighborhood: graph backend ≡ every columnar backend,
+    windowed and plain."""
+    t0 = float(np.quantile(repo.event_time, 0.2))
+    t1 = float(np.quantile(repo.event_time, 0.9))
+    for q_kw in (dict(), dict(window=True)):
+        def q():
+            base = Q.log(repo).using(engine)
+            return base.window(t0, t1) if q_kw else base
+
+        want_pm = q().process_map(top=0.5, backend="numpy").value
+        want_nb = q().neighborhood(
+            repo.activity_names[2], k=2, direction="both", backend="numpy"
+        ).value
+        for backend in ("scatter", "pallas", "graph"):
+            pm = q().process_map(top=0.5, backend=backend).value
+            assert pm.activities == want_pm.activities
+            np.testing.assert_array_equal(pm.node_counts, want_pm.node_counts)
+            assert pm.edges == want_pm.edges
+            nb = q().neighborhood(
+                repo.activity_names[2], k=2, direction="both", backend=backend
+            ).value
+            assert nb == want_nb
+
+
+def test_graph_sinks_streaming_vs_graph_on_memmap(mmlog):
+    eng = QueryEngine(memory_budget_events=0, graph_crossover=10**6)
+    cold = Q.log(mmlog).using(eng).process_map(top=0.4)
+    assert cold.physical.backend == "streaming"
+    hot = Q.log(mmlog).using(eng).process_map(top=0.4, backend="graph")
+    assert hot.physical.backend == "graph"
+    assert cold.value.activities == hot.value.activities
+    assert cold.value.edges == hot.value.edges
+
+
+def test_empty_window_short_circuits_graph_sinks(repo, engine):
+    res = Q.log(repo).using(engine).window(5.0, 5.0).process_map(top=0.5)
+    assert res.value.activities == [] and res.value.edges == []
+    center = repo.activity_names[0]
+    nb = Q.log(repo).using(engine).window(5.0, 5.0).neighborhood(center)
+    assert nb.value.activities == [center] and nb.value.edges == []
+
+
+def test_neighborhood_unknown_center_rejected(repo, engine):
+    with pytest.raises(QueryPlanError):
+        Q.log(repo).using(engine).neighborhood("nope")
+    with pytest.raises(QueryPlanError):
+        Q.log(repo).using(engine).neighborhood(
+            repo.activity_names[0], direction="sideways"
+        )
+
+
+def test_graph_backend_rejects_barriers(repo, engine):
+    with pytest.raises(QueryPlanError):
+        Q.log(repo).using(engine).top_variants(2).dfg(backend="graph")
+
+
+def test_windowed_graph_on_out_of_core_rejected(mmlog):
+    eng = QueryEngine(memory_budget_events=0)
+    with pytest.raises(QueryPlanError):
+        Q.log(mmlog).using(eng).window(0.0, 1e12).dfg(backend="graph")
+
+
+# ---------------------------------------------------------------------------
+# planner: the columnar↔graph crossover
+# ---------------------------------------------------------------------------
+
+
+def test_auto_routes_to_graph_after_crossover(repo):
+    eng = QueryEngine(graph_crossover=3)
+    names = repo.activity_names
+    r1 = Q.log(repo).using(eng).neighborhood(names[0])
+    r2 = Q.log(repo).using(eng).neighborhood(names[1])
+    assert r1.physical.backend != "graph"
+    assert r2.physical.backend != "graph"
+    # third distinct topology miss crosses the threshold: graph built
+    r3 = Q.log(repo).using(eng).neighborhood(names[2])
+    assert r3.physical.backend == "graph"
+    assert eng.graphs.stats.builds == 1
+    # and every later topology query is a store lookup
+    r4 = Q.log(repo).using(eng).process_map(top=0.5)
+    assert r4.physical.backend == "graph"
+    assert eng.graphs.stats.builds == 1
+    assert eng.stats.graph_queries == 2
+
+
+def test_cache_hits_do_not_advance_crossover(repo):
+    eng = QueryEngine(graph_crossover=3)
+    for _ in range(5):  # one miss + four hits
+        Q.log(repo).using(eng).process_map(top=0.5)
+    assert eng.graphs.stats.builds == 0
+
+
+def test_append_keeps_graph_tier_warm(mmlog):
+    eng = QueryEngine(memory_budget_events=0, graph_crossover=2)
+    names0 = Q.log(mmlog).using(eng).histogram().names
+    Q.log(mmlog).using(eng).neighborhood(names0[0])
+    r = Q.log(mmlog).using(eng).neighborhood(names0[1])
+    assert r.physical.backend == "graph"
+    assert eng.graphs.stats.builds == 1
+    grown = _append_batch(mmlog, 400)
+    # new fingerprint, but the registered graph is extendable: stays graph
+    r2 = Q.log(grown).using(eng).neighborhood(names0[1])
+    assert r2.physical.backend == "graph"
+    assert eng.graphs.stats.extends == 1 and eng.graphs.stats.builds == 1
+    fresh = QueryEngine(memory_budget_events=0)
+    want = Q.log(grown).using(fresh).neighborhood(names0[1])
+    assert want.physical.backend == "streaming"
+    assert r2.value == want.value
+
+
+def test_graph_calibration_loaded_and_clamped(tmp_path, monkeypatch):
+    from repro.query.planner import GRAPH_REPEAT_CROSSOVER
+
+    monkeypatch.delenv("GRAPHPM_BENCH_GRAPH", raising=False)
+    bench = tmp_path / "BENCH_graph.json"
+    bench.write_text('{"calibration": {"graph_repeat_crossover": 7}}')
+    cal = load_calibration(
+        str(tmp_path / "nope.json"), graph_path=str(bench)
+    )
+    assert cal["graph_repeat_crossover"] == 7
+    bench.write_text('{"calibration": {"graph_repeat_crossover": 100000}}')
+    cal = load_calibration(str(tmp_path / "nope.json"), graph_path=str(bench))
+    assert cal["graph_repeat_crossover"] == 64  # clamped
+    # corrupt → static fallback
+    bench.write_text("{not json")
+    cal = load_calibration(str(tmp_path / "nope.json"), graph_path=str(bench))
+    assert cal["graph_repeat_crossover"] == GRAPH_REPEAT_CROSSOVER
+    # engine picks the measured crossover up through the env var
+    bench.write_text('{"calibration": {"graph_repeat_crossover": 9}}')
+    monkeypatch.setenv("GRAPHPM_BENCH_GRAPH", str(bench))
+    assert QueryEngine().graph_crossover == 9
+    assert QueryEngine(graph_crossover=2).graph_crossover == 2
+
+
+# ---------------------------------------------------------------------------
+# serving: exposure + the k-anonymity floor on process-map edges
+# ---------------------------------------------------------------------------
+
+
+def test_service_process_map_floor():
+    from repro.core.views import AccessPolicy
+    from repro.serve import QueryService
+
+    repo = EventRepository.from_traces(
+        [["a", "b"]] * 5 + [["a", "c"]],  # a→b ×5, a→c ×1
+        activity_vocab=["a", "b", "c"],
+    )
+    svc = QueryService()
+    svc.register("bpi", repo, AccessPolicy(min_group_count=3))
+    out = svc.query({"log": "bpi", "sink": "process_map", "top": 1.0})
+    assert ["a", "b", 5] in out["edges"]
+    # a→c (count 1) and node c (count 1) are below the floor: gone
+    assert all(e[2] >= 3 for e in out["edges"])
+    assert "c" not in out["activities"]
+    assert out["dropped_edges"] >= 1
+    assert out["sink"] == "process_map" and out["log"] == "bpi"
+
+    nb = svc.query(
+        {"log": "bpi", "sink": "neighborhood", "activity": "a", "k": 1}
+    )
+    assert nb["edges"] == [["a", "b", 5]]
+    assert nb["activities"] == ["a", "b"]  # c dropped with its only edge
+
+
+def test_service_neighborhood_requires_activity():
+    from repro.serve import QueryService
+
+    svc = QueryService()
+    svc.register("bpi", paper_example_repo())
+    with pytest.raises(KeyError):
+        svc.query({"log": "bpi", "sink": "neighborhood"})

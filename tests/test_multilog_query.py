@@ -605,14 +605,20 @@ def test_repository_from_memmap_derives_log_name(two_mmlogs):
 
 
 def test_calibration_fallback_and_load(tmp_path, monkeypatch):
-    from repro.query.planner import MEMORY_BUDGET_EVENTS, TINY_PAIRS
+    from repro.query.planner import (
+        GRAPH_REPEAT_CROSSOVER,
+        MEMORY_BUDGET_EVENTS,
+        TINY_PAIRS,
+    )
 
     monkeypatch.delenv("GRAPHPM_BENCH_QUERY", raising=False)
+    monkeypatch.delenv("GRAPHPM_BENCH_GRAPH", raising=False)
     missing = str(tmp_path / "nope.json")
-    cal = load_calibration(missing)
+    cal = load_calibration(missing, graph_path=missing)
     assert cal == {
         "tiny_pairs": TINY_PAIRS,
         "memory_budget_events": MEMORY_BUDGET_EVENTS,
+        "graph_repeat_crossover": GRAPH_REPEAT_CROSSOVER,
     }
 
     bench = tmp_path / "BENCH_query.json"
