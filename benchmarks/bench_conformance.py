@@ -1,0 +1,199 @@
+"""Conformance-tier benchmark: what do graph-native + streaming replay buy?
+
+Discovers a reference model from a mined memmap log, then measures the
+subsystem's three promises:
+
+* **repeated conformance** — the engine's graph/cached path vs what every
+  query used to cost (materialize the log, replay columnar): the first
+  query pays once, every repeat is a cache hit / stored-table walk;
+* **streaming replay** — one O(A² + chunk) pass for out-of-core logs
+  (and the measured streaming↔materialize crossover
+  ``planner.load_calibration`` feeds back into the cost model);
+* **append + delta** — a 1% append replays only the suffix (rows_scanned
+  asserted through engine stats) instead of the whole log.
+
+Emits CSV rows (and ``BENCH_conformance.json`` on direct invocation only —
+the aggregator's reduced ``--fast`` runs must not clobber the committed
+2M-event record; same guard as bench_delta/bench_graph).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+# runnable directly (`python benchmarks/bench_conformance.py`) without PYTHONPATH
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+EVENTS = int(os.environ.get("BENCH_EVENTS", 2_000_000))
+REPEAT_QUERIES = 10
+APPEND_FRACTION = 0.01
+
+
+def _timed(fn, repeat: int = 1):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn()
+    return out, (time.perf_counter() - t0) * 1e6 / repeat
+
+
+def run(write_json: bool = False) -> list:
+    from repro.conformance import replay_fitness_graph, replay_fitness_streaming
+    from repro.core.conformance import replay_fitness
+    from repro.core.dfg import dfg_numpy
+    from repro.core.discovery import discover_dependency_graph
+    from repro.data import ProcessSpec, generate_memmap_log
+    from repro.graph import build_graph
+    from repro.query import Q, QueryEngine, fingerprint
+    from repro.query.execute import repository_from_memmap
+
+    rows = []
+    tmp = tempfile.mkdtemp(prefix="graphpm_benchc_")
+    log = generate_memmap_log(
+        os.path.join(tmp, "log"), EVENTS,
+        ProcessSpec(num_activities=64, seed=41, horizon_days=120), seed=41,
+    )
+
+    # reference model (pinned for every measurement below)
+    repo = repository_from_memmap(log)
+    s, d, v = repo.df_pairs()
+    psi = dfg_numpy(s, d, v, repo.num_activities)
+    starts, ends = repo.trace_boundaries()
+    model = discover_dependency_graph(
+        psi, repo.activity_names, starts, ends,
+        min_count=max(EVENTS // 10_000, 1), min_dependency=0.3,
+    )
+
+    # -- what every query used to cost: materialize + columnar replay --------
+    def recompute():
+        return replay_fitness(repository_from_memmap(log), model)
+
+    base, recompute_us = _timed(recompute)
+    rows.append((
+        "conformance_recompute", recompute_us,
+        f"events={log.num_events};fitness={base.fitness:.4f}",
+    ))
+
+    # -- streaming: one O(A²+chunk) pass (the out-of-core path) --------------
+    stream, streaming_us = _timed(
+        lambda: replay_fitness_streaming(log, model)
+    )
+    assert np.array_equal(stream.trace_fitness, base.trace_fitness)
+    rows.append((
+        "conformance_streaming", streaming_us,
+        f"recompute_us={recompute_us:.0f};"
+        f"speedup={recompute_us / max(streaming_us, 1):.1f}x",
+    ))
+
+    # -- graph path: replay the stored event tables (no re-materialization) --
+    g, build_us = _timed(lambda: build_graph(log))
+    graph_res, graph_us = _timed(
+        lambda: replay_fitness_graph(g, model), repeat=3
+    )
+    assert np.array_equal(graph_res.trace_fitness, base.trace_fitness)
+    rows.append((
+        "conformance_graph_replay", graph_us,
+        f"build_us={build_us:.0f};recompute_us={recompute_us:.0f};"
+        f"speedup={recompute_us / max(graph_us, 1):.1f}x",
+    ))
+
+    # -- repeated conformance through the engine (graph/cached path) ---------
+    eng = QueryEngine(graph_crossover=1)
+    eng.graphs.put(fingerprint(log), g)  # graph tier warm (built above)
+
+    def engine_repeat():
+        for _ in range(REPEAT_QUERIES):
+            Q.log(log).using(eng).fitness(model)
+
+    _, eng_total_us = _timed(engine_repeat)
+    eng_q_us = eng_total_us / REPEAT_QUERIES
+    repeat_speedup = recompute_us / max(eng_q_us, 1e-9)
+    rows.append((
+        "conformance_repeat_cached", eng_q_us,
+        f"recompute_us={recompute_us:.0f};queries={REPEAT_QUERIES};"
+        f"speedup={repeat_speedup:.1f}x",
+    ))
+
+    # -- append 1%: delta replay scans only the suffix -----------------------
+    eng2 = QueryEngine(
+        memory_budget_events=1, replay_crossover=1  # force streaming+delta
+    )
+    Q.log(log).using(eng2).fitness(model)
+    rows_before = eng2.stats.rows_scanned
+    n_app = max(int(EVENTS * APPEND_FRACTION), 1)
+    rng = np.random.default_rng(43)
+    last_t = float(np.asarray(log.time[-1]))
+    grown = log.append(
+        rng.integers(0, log.num_activities, n_app).astype(np.int32),
+        rng.integers(0, log.num_traces, n_app).astype(np.int32),
+        np.sort(rng.uniform(last_t, last_t + 86_400.0, n_app)),
+    )
+    _, delta_us = _timed(lambda: Q.log(grown).using(eng2).fitness(model))
+    suffix_rows = eng2.stats.rows_scanned - rows_before
+    assert eng2.stats.delta_hits == 1 and suffix_rows == n_app
+    full, full_us = _timed(lambda: replay_fitness_streaming(grown, model))
+    rows.append((
+        "conformance_delta_append", delta_us,
+        f"appended={n_app};rows_scanned={suffix_rows};"
+        f"full_replay_us={full_us:.0f};"
+        f"speedup={full_us / max(delta_us, 1):.1f}x",
+    ))
+
+    # -- alignments, batched per variant (mainstream behaviour: top-2000) ----
+    from repro.conformance import align_repository
+    from repro.core.variants import variant_filtered_repository
+
+    ali_repo = variant_filtered_repository(repo, 2_000)
+    ali, align_us = _timed(lambda: align_repository(ali_repo, model))
+    rows.append((
+        "conformance_alignments", align_us,
+        f"variants={ali.variant_costs.shape[0]};"
+        f"traces={ali.trace_cost.shape[0]};fitness={ali.fitness:.4f}",
+    ))
+
+    # -- the streaming↔materialize crossover the planner learns --------------
+    # both paths are linear in E, so the measurement is a rate comparison:
+    # if one streaming pass beats materialize+replay at this size it wins at
+    # any size (crossover → clamp floor); otherwise materialization stays
+    # preferred until the memory-budget rail (crossover → clamp ceiling)
+    crossover = (
+        1 << 18 if streaming_us < recompute_us else 1 << 26
+    )
+    rows.append((
+        "replay_crossover", crossover,
+        f"streaming_us={streaming_us:.0f};recompute_us={recompute_us:.0f}",
+    ))
+
+    if not write_json:
+        return rows
+    with open("BENCH_conformance.json", "w") as f:
+        json.dump({
+            "events": log.num_events,
+            "num_activities": log.num_activities,
+            "recompute_us": recompute_us,
+            "streaming_us": streaming_us,
+            "graph_build_us": build_us,
+            "graph_replay_us": graph_us,
+            "repeat_cached_us_per_query": eng_q_us,
+            "repeat_cached_speedup": repeat_speedup,
+            "delta_append_rows_scanned": suffix_rows,
+            "delta_append_us": delta_us,
+            "delta_full_replay_us": full_us,
+            "alignments_us": align_us,
+            "alignment_variants": int(ali.variant_costs.shape[0]),
+            "calibration": {"replay_streaming_crossover": crossover},
+        }, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(write_json=True):
+        print(",".join(str(x) for x in r))

@@ -26,6 +26,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     from benchmarks import (
+        bench_conformance,
         bench_delta,
         bench_dfg_example,
         bench_dicing,
@@ -46,6 +47,7 @@ def main() -> None:
         (bench_delta, "delta"),
         (bench_multilog, "multilog"),
         (bench_graph, "graph"),
+        (bench_conformance, "conformance"),
         (roofline_table, "roofline"),
     ):
         try:

@@ -66,3 +66,20 @@ nb = Q.log(repo).neighborhood(center, k=2, direction="both", backend="graph")
 print(f"2-hop neighborhood of {center!r}: {len(nb.value.activities)} "
       f"activities via backend={nb.physical.backend} "
       f"(graph store: {default_engine().graphs.stats})")
+
+# --- 6. conformance: replay fitness + optimal alignments --------------------
+# how well does the middle half of the horizon conform to the model
+# discovered from the whole log?  (sequence semantics: the window re-links)
+fit = Q.log(repo).window(t0, t1).fitness(model)
+print(f"\nreplay fitness of the diced slice vs the discovered model: "
+      f"{fit.value.fitness:.4f} ({fit.value.perfectly_fitting}/"
+      f"{fit.value.trace_fitness.shape[0]} traces perfect, "
+      f"backend={fit.physical.backend})")
+worst = sorted(fit.value.deviating_edges.items(), key=lambda kv: -kv[1])[:3]
+print(f"top deviating flows: {worst}")
+
+ali = Q.log(repo).alignments(model)
+print(f"optimal alignments (batched per variant, kernels/align_dp): "
+      f"mean fitness {ali.value.fitness:.4f}, "
+      f"mean cost {float(ali.value.trace_cost.mean()):.2f}, "
+      f"cheapest model walk = {ali.value.empty_cost} moves")

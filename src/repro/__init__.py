@@ -4,7 +4,10 @@ multi-pod JAX framework.
 Subpackages:
   core       — the paper's contribution: event repositories, Algorithm 1 DFG,
                views, distributed/streaming execution, discovery, telemetry
-  kernels    — Pallas TPU kernels (dfg_count) with jnp oracles
+  query      — declarative process-query engine (plans, cost model, cache)
+  graph      — in-process event-knowledge graph (CSR store + snapshots)
+  conformance— streaming/graph-native token replay + DFG alignments
+  kernels    — Pallas TPU kernels (dfg_count, segment_count, align_dp)
   models     — assigned architecture zoo (dense/MoE/SSM/hybrid/enc-dec/VLM)
   configs    — one config per assigned architecture + input shapes
   sharding   — logical-axis sharding policies

@@ -11,19 +11,111 @@ million-event logs.
 
 fitness(trace) = (allowed directly-follows moves + allowed start + allowed
 end) / (len(trace) + 1), matching the DFG abstraction's replay semantics.
+
+This module is the *columnar oracle* of the wider :mod:`repro.conformance`
+subsystem: the streaming and graph-native replay paths there are pinned
+bit-identical to :func:`replay_fitness`.  Shared pieces live here so every
+path uses the same arithmetic:
+
+* :class:`ModelSpec` — the canonical, hashable form of a
+  :class:`~repro.core.discovery.DiscoveredModel` (edge set + start/end
+  sets), usable as a frozen query-plan field;
+* :func:`model_tables` — (allowed, start_ok, end_ok) boolean tables over a
+  given activity axis;
+* :func:`deviation_census` — the disallowed-move census, vectorized via
+  ``np.unique`` over encoded pair ids (no host loop over deviating pairs).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Sequence, Tuple, Union
 
 import numpy as np
 
 from .discovery import DiscoveredModel
 from .repository import EventRepository
 
-__all__ = ["ReplayResult", "replay_fitness"]
+__all__ = [
+    "ModelSpec",
+    "ReplayResult",
+    "model_tables",
+    "deviation_census",
+    "replay_core",
+    "replay_fitness",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Canonical, hashable mirror of :class:`DiscoveredModel` — exactly the
+    information replay/alignment consumes (the edge relation plus start/end
+    sets), sorted so two equivalent models share one plan-cache key."""
+
+    activities: Tuple[str, ...]
+    edges: Tuple[Tuple[str, str], ...]
+    starts: Tuple[str, ...]
+    ends: Tuple[str, ...]
+
+    @staticmethod
+    def from_model(
+        model: Union[DiscoveredModel, "ModelSpec"]
+    ) -> "ModelSpec":
+        if isinstance(model, ModelSpec):
+            return model
+        return ModelSpec(
+            activities=tuple(model.activities),
+            edges=tuple(sorted(model.edge_set)),
+            starts=tuple(sorted(model.start_activities)),
+            ends=tuple(sorted(model.end_activities)),
+        )
+
+
+def model_tables(
+    model: Union[DiscoveredModel, ModelSpec], names: Sequence[str]
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(allowed (A,A), start_ok (A,), end_ok (A,)) boolean tables of the
+    model over the activity axis ``names``.  Model activities absent from
+    ``names`` are simply not representable (their edges drop); activities in
+    ``names`` unknown to the model get all-False rows — both directions of
+    vocabulary mismatch degrade to "move not allowed", never an error."""
+    spec = ModelSpec.from_model(model)
+    idx = {n: i for i, n in enumerate(names)}
+    a = len(names)
+    allowed = np.zeros((a, a), dtype=bool)
+    for s, d in spec.edges:
+        si, di = idx.get(s), idx.get(d)
+        if si is not None and di is not None:
+            allowed[si, di] = True
+    start_ok = np.zeros(a, dtype=bool)
+    for s in spec.starts:
+        si = idx.get(s)
+        if si is not None:
+            start_ok[si] = True
+    end_ok = np.zeros(a, dtype=bool)
+    for e in spec.ends:
+        ei = idx.get(e)
+        if ei is not None:
+            end_ok[ei] = True
+    return allowed, start_ok, end_ok
+
+
+def deviation_census(
+    bad_src: np.ndarray, bad_dst: np.ndarray, names: Sequence[str]
+) -> Dict[tuple, int]:
+    """``(src_name, dst_name) → count`` over disallowed moves, vectorized:
+    pairs are encoded as ``src·A + dst`` ids and counted with one
+    ``np.unique`` — million-event logs with noisy traces no longer pay a
+    Python loop per deviating pair."""
+    if bad_src.shape[0] == 0:
+        return {}
+    a = len(names)
+    keys = bad_src.astype(np.int64) * a + bad_dst.astype(np.int64)
+    uniq, counts = np.unique(keys, return_counts=True)
+    return {
+        (names[int(k // a)], names[int(k % a)]): int(c)
+        for k, c in zip(uniq, counts)
+    }
 
 
 @dataclasses.dataclass
@@ -47,61 +139,65 @@ class ReplayResult:
         }
 
 
-def replay_fitness(
-    repo: EventRepository, model: DiscoveredModel
-) -> ReplayResult:
-    names = repo.activity_names
-    idx = {n: i for i, n in enumerate(names)}
-    A = repo.num_activities
+def replay_core(
+    a: np.ndarray,
+    t: np.ndarray,
+    num_traces: int,
+    allowed: np.ndarray,
+    start_ok: np.ndarray,
+    end_ok: np.ndarray,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Token replay over canonical (trace-contiguous) event columns.
 
-    allowed = np.zeros((A, A), dtype=bool)
-    for s, d in model.edge_set:
-        if s in idx and d in idx:
-            allowed[idx[s], idx[d]] = True
-    start_ok = np.zeros(A, dtype=bool)
-    for a in model.start_activities:
-        if a in idx:
-            start_ok[idx[a]] = True
-    end_ok = np.zeros(A, dtype=bool)
-    for a in model.end_activities:
-        if a in idx:
-            end_ok[idx[a]] = True
-
-    t = repo.event_trace
-    a = repo.event_activity
-    T = repo.num_traces
+    Returns ``(trace_fitness (T,), bad_src, bad_dst)`` — the per-trace
+    scores plus the disallowed directly-follows pairs for the census.  This
+    is the one arithmetic every replay path (columnar, streaming, graph)
+    must reproduce bit for bit.
+    """
+    T = int(num_traces)
     lens = np.bincount(t, minlength=T)
 
     ok_moves = np.zeros(T, dtype=np.int64)
-    if repo.num_events >= 2:
+    bad_src = np.zeros((0,), dtype=np.int64)
+    bad_dst = np.zeros((0,), dtype=np.int64)
+    if a.shape[0] >= 2:
         same = t[:-1] == t[1:]
-        move_ok = allowed[a[:-1], a[1:]] & same
+        edge_ok = allowed[a[:-1], a[1:]]
+        move_ok = edge_ok & same
         np.add.at(ok_moves, t[:-1][same], move_ok[same].astype(np.int64))
+        bad = same & ~edge_ok
+        bad_src = a[:-1][bad].astype(np.int64)
+        bad_dst = a[1:][bad].astype(np.int64)
 
-    is_start = np.ones(repo.num_events, dtype=bool)
-    is_start[1:] = t[1:] != t[:-1]
-    is_end = np.ones(repo.num_events, dtype=bool)
-    is_end[:-1] = t[:-1] != t[1:]
     starts_fit = np.zeros(T, dtype=np.int64)
     ends_fit = np.zeros(T, dtype=np.int64)
-    np.add.at(starts_fit, t[is_start], start_ok[a[is_start]].astype(np.int64))
-    np.add.at(ends_fit, t[is_end], end_ok[a[is_end]].astype(np.int64))
+    if a.shape[0]:
+        is_start = np.ones(a.shape[0], dtype=bool)
+        is_start[1:] = t[1:] != t[:-1]
+        is_end = np.ones(a.shape[0], dtype=bool)
+        is_end[:-1] = t[:-1] != t[1:]
+        np.add.at(
+            starts_fit, t[is_start], start_ok[a[is_start]].astype(np.int64)
+        )
+        np.add.at(ends_fit, t[is_end], end_ok[a[is_end]].astype(np.int64))
 
     denom = np.maximum(lens + 1, 1)  # (len-1) moves + start + end
     trace_fit = (ok_moves + starts_fit + ends_fit) / denom
+    return trace_fit, bad_src, bad_dst
 
-    # deviation census (host loop over *deviating pairs only*)
-    deviations: Dict[tuple, int] = {}
-    if repo.num_events >= 2:
-        same = t[:-1] == t[1:]
-        bad = same & ~allowed[a[:-1], a[1:]]
-        for s_, d_ in zip(a[:-1][bad], a[1:][bad]):
-            key = (names[int(s_)], names[int(d_)])
-            deviations[key] = deviations.get(key, 0) + 1
 
+def replay_fitness(
+    repo: EventRepository, model: Union[DiscoveredModel, ModelSpec]
+) -> ReplayResult:
+    names = repo.activity_names
+    allowed, start_ok, end_ok = model_tables(model, names)
+    trace_fit, bad_src, bad_dst = replay_core(
+        repo.event_activity, repo.event_trace, repo.num_traces,
+        allowed, start_ok, end_ok,
+    )
     return ReplayResult(
-        fitness=float(trace_fit.mean()) if T else 1.0,
+        fitness=float(trace_fit.mean()) if trace_fit.shape[0] else 1.0,
         trace_fitness=trace_fit,
         perfectly_fitting=int((trace_fit >= 1.0 - 1e-12).sum()),
-        deviating_edges=deviations,
+        deviating_edges=deviation_census(bad_src, bad_dst, names),
     )

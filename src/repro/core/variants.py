@@ -16,7 +16,12 @@ import numpy as np
 
 from .repository import EventRepository
 
-__all__ = ["TraceVariants", "trace_variants", "variant_filtered_repository"]
+__all__ = [
+    "TraceVariants",
+    "trace_variants",
+    "variant_table",
+    "variant_filtered_repository",
+]
 
 _P1 = np.uint64(1_000_000_007)
 _P2 = np.uint64(0x9E3779B97F4A7C15)
@@ -40,18 +45,28 @@ class TraceVariants:
         return float(self.counts[:k].sum() / total) if total else 1.0
 
 
-def trace_variants(repo: EventRepository) -> TraceVariants:
-    t = repo.event_trace.astype(np.int64)
-    a = repo.event_activity.astype(np.uint64)
-    T = repo.num_traces
-    if repo.num_events == 0:
+def variant_table(
+    event_activity: np.ndarray,
+    event_trace: np.ndarray,
+    num_traces: int,
+    activity_names: List[str],
+) -> TraceVariants:
+    """Variant analysis straight off canonical (trace-contiguous) columns —
+    the array-level core :func:`trace_variants` wraps, usable by callers
+    (graph tables, transformed selections) that have no repository."""
+    t = np.asarray(event_trace).astype(np.int64)
+    act = np.asarray(event_activity)
+    a = act.astype(np.uint64)
+    T = int(num_traces)
+    n = t.shape[0]
+    if n == 0:
         return TraceVariants(
             counts=np.zeros((0,), np.int64), sequences=[],
             trace_variant=np.zeros((T,), np.int64),
         )
     # polynomial rolling hash per trace (canonical order is trace-contiguous)
-    pos = np.arange(repo.num_events, dtype=np.int64)
-    starts = np.zeros(repo.num_events, dtype=bool)
+    pos = np.arange(n, dtype=np.int64)
+    starts = np.zeros(n, dtype=bool)
     starts[0] = True
     starts[1:] = t[1:] != t[:-1]
     start_pos = np.maximum.accumulate(np.where(starts, pos, 0))
@@ -73,14 +88,21 @@ def trace_variants(repo: EventRepository) -> TraceVariants:
     # reconstruct one representative sequence per variant
     sequences: List[List[str]] = []
     rep_traces = first_idx[order]  # trace index owning each variant
-    names = repo.activity_names
+    names = activity_names
     for tr in rep_traces:
         idx = np.nonzero(t == tr)[0]
-        sequences.append([names[int(a_)] for a_ in repo.event_activity[idx]])
+        sequences.append([names[int(a_)] for a_ in act[idx]])
     return TraceVariants(
         counts=counts[order].astype(np.int64),
         sequences=sequences,
         trace_variant=trace_variant,
+    )
+
+
+def trace_variants(repo: EventRepository) -> TraceVariants:
+    return variant_table(
+        repo.event_activity, repo.event_trace, repo.num_traces,
+        repo.activity_names,
     )
 
 

@@ -2,9 +2,11 @@
 
 The paper's single hot loop is the in-store DFG computation (its Cypher
 MATCH); :mod:`repro.kernels.dfg_count` is the TPU-native version (one-hot
-MXU accumulation + fused WHERE-clause dicing).
+MXU accumulation + fused WHERE-clause dicing).  :mod:`repro.kernels.
+segment_count` covers the graph tier's node-degree histograms and
+:mod:`repro.kernels.align_dp` the conformance tier's alignment DP.
 """
 
-from . import dfg_count
+from . import align_dp, dfg_count, segment_count
 
-__all__ = ["dfg_count"]
+__all__ = ["align_dp", "dfg_count", "segment_count"]

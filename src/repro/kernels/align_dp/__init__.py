@@ -1,0 +1,3 @@
+from .ops import BIG_COST, align_dp, align_dp_numpy
+
+__all__ = ["align_dp", "align_dp_numpy", "BIG_COST"]

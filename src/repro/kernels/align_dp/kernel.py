@@ -1,0 +1,102 @@
+"""Pallas TPU kernel for the DFG-alignment banded DP.
+
+:mod:`repro.conformance.align` reduces a trace-to-model alignment to a
+layered DP over the model's state space: for every consumed event the
+(V, S) cost front takes one of two moves —
+
+* **log move** (skip the event): ``d += 1`` elementwise;
+* **model moves + sync**: land on the event's state at
+  ``min_s d[s] + M[s, a]`` (``M`` pre-folds any number of model moves
+  followed by one synchronous move via an APSP closure).
+
+Each layer is a one-hot gather of ``M``'s column — an MXU contraction
+(``OneHot(a) · Mᵀ``) — followed by a lane-axis min-reduce: the same
+"scatter → dense one-hot matmul" reformulation as the dfg_count and
+segment_count kernels ("Pallas where it pays").  The kernel walks all L
+layers for one variant block with the cost front resident in registers/VMEM
+(the band), so HBM traffic is the padded sequence block plus M once.
+
+VMEM working set per step (BV=128, S≤512, L≤1024, f32/int32):
+  seqs 128×1024×4 B = 512 KiB + Mᵀ 512×512×4 B = 1 MiB + front 256 KiB
+  « 16 MiB v5e VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["align_dp_kernel", "align_dp_pallas", "BIG_COST"]
+
+#: "unreachable" sentinel — large enough that no real alignment cost ever
+#: reaches it, small enough that f32 sums of a few of them stay finite
+BIG_COST = 1e9
+
+
+def align_dp_kernel(
+    seqs_ref, lens_ref, mt_ref, d0_ref, end_ref, out_ref, *, num_layers: int
+):
+    """One grid step: run the full layered DP for one variant block."""
+    seqs = seqs_ref[...]  # (BV, L) int32 — padded activity ids
+    lens = lens_ref[...]  # (BV,) int32
+    mt = mt_ref[...]  # (S, S) f32 — Mᵀ, padded states carry BIG_COST
+    d0 = d0_ref[...]  # (1, S) f32
+    end = end_ref[...]  # (1, S) f32
+
+    bv = seqs.shape[0]
+    s = mt.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bv, s), 1)
+
+    def layer(i, d):
+        a = jax.lax.dynamic_slice_in_dim(seqs, i, 1, axis=1)  # (BV, 1)
+        onehot = (cols == a).astype(jnp.float32)  # (BV, S)
+        # Mcol[v, s] = M[s, a_v]  via  OneHot(a) · Mᵀ on the MXU
+        mcol = jnp.dot(onehot, mt, preferred_element_type=jnp.float32)
+        sync = jnp.min(d + mcol, axis=1, keepdims=True)  # (BV, 1)
+        nd = jnp.minimum(
+            d + 1.0,
+            jnp.where(onehot > 0, sync, BIG_COST),
+        )
+        active = (lens > i)[:, None]
+        return jnp.where(active, nd, d)
+
+    d = jnp.broadcast_to(d0, (bv, s))
+    d = jax.lax.fori_loop(0, num_layers, layer, d)
+    out_ref[...] = jnp.min(d + end, axis=1)[None, :]  # (1, BV)
+
+
+def align_dp_pallas(
+    seqs: jax.Array,
+    lens: jax.Array,
+    mt: jax.Array,
+    d0: jax.Array,
+    endcost: jax.Array,
+    *,
+    block_v: int,
+    interpret: bool,
+) -> jax.Array:
+    """Raw pallas_call wrapper.  All shapes must be pre-padded:
+    seqs (Vp, Lp) with Vp % block_v == 0, state axis lane-aligned."""
+    vp, lp = seqs.shape
+    s = mt.shape[0]
+    grid = (vp // block_v,)
+
+    kernel = functools.partial(align_dp_kernel, num_layers=lp)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_v, lp), lambda v: (v, 0)),
+            pl.BlockSpec((block_v,), lambda v: (v,)),
+            pl.BlockSpec((s, s), lambda v: (0, 0)),
+            pl.BlockSpec((1, s), lambda v: (0, 0)),
+            pl.BlockSpec((1, s), lambda v: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_v), lambda v: (0, v)),
+        out_shape=jax.ShapeDtypeStruct((1, vp), jnp.float32),
+        interpret=interpret,
+    )(seqs, lens, mt, d0, endcost)
+    return out[0]

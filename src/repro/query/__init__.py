@@ -17,16 +17,20 @@ with an LRU plan/result cache (:mod:`repro.query.cache`).
 """
 
 from .ast import (
+    CONFORMANCE_SINKS,
     EMPTY_WINDOW,
     TOPOLOGY_SINKS,
     Activities,
+    AlignmentsSink,
     ApplyView,
     CompareSink,
     DFGSink,
+    FitnessSink,
     FromLogs,
     HistogramSink,
     LogicalPlan,
     LogRef,
+    ModelSpec,
     NeighborhoodSink,
     ProcessMapSink,
     Q,
@@ -71,7 +75,8 @@ __all__ = [
     "Q", "Query", "QueryPlanError",
     "Window", "EMPTY_WINDOW", "Activities", "TopVariants", "ApplyView",
     "DFGSink", "HistogramSink", "VariantsSink", "CompareSink",
-    "ProcessMapSink", "NeighborhoodSink", "TOPOLOGY_SINKS", "LogicalPlan",
+    "ProcessMapSink", "NeighborhoodSink", "FitnessSink", "AlignmentsSink",
+    "ModelSpec", "TOPOLOGY_SINKS", "CONFORMANCE_SINKS", "LogicalPlan",
     "LogRef", "FromLogs", "UnionSource", "union_activity_names",
     "QueryCache", "fingerprint", "fingerprint_memmap",
     "fingerprint_repository", "fingerprint_union", "split_union_fingerprint",

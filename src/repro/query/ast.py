@@ -33,6 +33,13 @@ Grammar::
             | CompareSink(backend)      -- union only: per-log Ψ + drift
             | ProcessMapSink(top, ...)  -- significance-filtered map
             | NeighborhoodSink(act, k)  -- k-hop :DF neighborhood
+            | FitnessSink(model)        -- token-replay conformance
+            | AlignmentsSink(model)     -- optimal DFG alignments
+
+Conformance sinks evaluate **sequence semantics**: Window / Activities /
+ApplyView drop (or relabel) events and re-link the survivors within each
+trace, exactly like :class:`VariantsSink` — replay scores trace
+*sequences*, so predicates must transform the sequences, not mask pairs.
 
 The source algebra is what makes "which logs" a plan property instead of a
 pre-filter: predicates distribute into every branch, union sinks merge
@@ -47,6 +54,7 @@ import hashlib
 import json
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+from repro.core.conformance import ModelSpec
 from repro.core.repository import EventRepository
 from repro.core.streaming import MemmapLog, memmap_log_name
 from repro.core.views import HIDDEN, ActivityView
@@ -63,7 +71,11 @@ __all__ = [
     "CompareSink",
     "ProcessMapSink",
     "NeighborhoodSink",
+    "FitnessSink",
+    "AlignmentsSink",
     "TOPOLOGY_SINKS",
+    "CONFORMANCE_SINKS",
+    "ModelSpec",
     "LogRef",
     "FromLogs",
     "UnionSource",
@@ -231,14 +243,46 @@ class NeighborhoodSink:
     backend: str = "auto"
 
 
+@dataclasses.dataclass(frozen=True)
+class FitnessSink:
+    """Token-replay conformance: per-trace replay fitness of the selected
+    traces against ``model`` (a canonical :class:`ModelSpec`).
+
+    ``model=None`` replays against the source's **own** discovered
+    dependency graph (whole log, the plan's view/filter applied, windows
+    ignored — the "does this slice conform to the overall process" drift
+    question; the engine memoizes the discovery per source fingerprint).
+    Under :meth:`Query.compare` the default is the *reference branch's*
+    model.  ``backend`` ∈ auto | numpy | streaming | graph."""
+
+    model: Optional[ModelSpec] = None
+    backend: str = "auto"
+
+
+@dataclasses.dataclass(frozen=True)
+class AlignmentsSink:
+    """Optimal DFG alignments (skip / insert / move-on-model edit distance
+    over the model's edge relation), batched per trace variant.  ``model``
+    defaults like :class:`FitnessSink`.  Needs the variant table, so it
+    materializes like :class:`VariantsSink` (budget-gated out-of-core)."""
+
+    model: Optional[ModelSpec] = None
+    backend: str = "auto"
+
+
 Sink = Union[
     DFGSink, HistogramSink, VariantsSink, CompareSink,
-    ProcessMapSink, NeighborhoodSink,
+    ProcessMapSink, NeighborhoodSink, FitnessSink, AlignmentsSink,
 ]
 
 #: sinks answered from the aggregated :DF topology — the graph backend's
 #: domain (and the planner's amortization candidates)
 TOPOLOGY_SINKS = (DFGSink, ProcessMapSink, NeighborhoodSink)
+
+#: sinks that replay/align trace sequences — ops apply with re-linking
+#: (sequence) semantics, and the graph backend serves them from the stored
+#: event tables rather than the aggregated CSR
+CONFORMANCE_SINKS = (FitnessSink, AlignmentsSink)
 
 
 # ---------------------------------------------------------------------------
@@ -530,6 +574,26 @@ class Query:
             )
         return self._run(NeighborhoodSink(
             activity=str(activity), k=int(k), direction=direction,
+            backend=backend,
+        ))
+
+    def fitness(self, model=None, backend: str = "auto"):
+        """Token-replay conformance of the selected traces.
+
+        ``model`` is a :class:`~repro.core.discovery.DiscoveredModel` (or
+        canonical :class:`ModelSpec`); ``None`` replays against the
+        source's own whole-log discovered model (see :class:`FitnessSink`).
+        """
+        return self._run(FitnessSink(
+            model=ModelSpec.from_model(model) if model is not None else None,
+            backend=backend,
+        ))
+
+    def alignments(self, model=None, backend: str = "auto"):
+        """Optimal DFG alignments (per-trace cost + normalized fitness),
+        batched per variant.  ``model`` as in :meth:`fitness`."""
+        return self._run(AlignmentsSink(
+            model=ModelSpec.from_model(model) if model is not None else None,
             backend=backend,
         ))
 

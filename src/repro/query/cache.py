@@ -226,12 +226,17 @@ class ResumableState:
     """State a streaming scan leaves behind when it consumed the log through
     its last row: resuming it over an appended suffix (including the pairs
     that straddle the boundary, via the miner's per-case tails) reproduces a
-    full rescan bit for bit."""
+    full rescan bit for bit.  ``replay`` carries the streaming replayer's
+    per-case tails + fitness accumulators for conformance sinks (only
+    plans whose model is pinned in the sink are resumable — a default
+    model is re-discovered from the grown log and would change under the
+    resumed state's feet)."""
 
     rows_end: int  # rows [lo, rows_end) are accounted for
     num_activities: int
     miner: Optional[MinerState] = None  # DFG sinks
     counts: Optional[np.ndarray] = None  # histogram sinks (raw, pre-mask/view)
+    replay: Optional[object] = None  # conformance sinks (ReplayState)
 
     def copy(self) -> "ResumableState":
         return ResumableState(
@@ -239,6 +244,7 @@ class ResumableState:
             self.num_activities,
             self.miner.copy() if self.miner is not None else None,
             self.counts.copy() if self.counts is not None else None,
+            self.replay.copy() if self.replay is not None else None,
         )
 
 

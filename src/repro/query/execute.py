@@ -30,14 +30,21 @@ import os
 import threading
 import time
 from collections import OrderedDict
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.conformance import replay_fitness
+from repro.conformance import (
+    AlignmentResult,
+    StreamingModelDiscoverer,
+    StreamingReplayer,
+    align_arrays,
+    replay_fitness_arrays,
+)
+from repro.core.conformance import ModelSpec, ReplayResult
 from repro.core.dfg import dfg, dfg_numpy
 from repro.core.dicing import dice_repository, pair_mask_for_window
-from repro.core.discovery import discover_dependency_graph
+from repro.core.discovery import DiscoveredModel, discover_dependency_graph
 from repro.core.distributed import distributed_dfg
 from repro.core.repository import EventRepository, concat_repositories
 from repro.core.streaming import MemmapLog, StreamingDFGMiner, memmap_log_name
@@ -52,11 +59,14 @@ from repro.graph import (
 from repro.graph.build import EventGraph
 
 from .ast import (
+    CONFORMANCE_SINKS,
     TOPOLOGY_SINKS,
     Activities,
+    AlignmentsSink,
     ApplyView,
     CompareSink,
     DFGSink,
+    FitnessSink,
     HistogramSink,
     LogicalPlan,
     NeighborhoodSink,
@@ -128,6 +138,7 @@ class EngineStats:
     rows_scanned: int = 0  # memmap rows fed to streaming/delta scans
     union_queries: int = 0  # multi-source (Q.logs) queries, incl. compare
     graph_queries: int = 0  # answered from the CSR event-knowledge graph
+    conformance_queries: int = 0  # fitness / alignments sinks
 
 
 @dataclasses.dataclass
@@ -138,16 +149,16 @@ class CompareResult:
     ``diffs[i] = psis[i] - psis[0]`` — the Ψ-drift of log ``i`` against the
     first (reference) log; ``fitness[i]`` is the replay fitness of log
     ``i``'s traces on the dependency graph discovered from the reference
-    log (None when a branch is too large to materialize in budget).
-    Windows/filters/views shape the Ψ matrices; fitness is a whole-log
-    conformance signal.
+    log (out-of-budget memmap branches replay in one streaming scan, so no
+    branch reports None).  Windows/filters/views shape the Ψ matrices;
+    fitness is a whole-log conformance signal.
     """
 
     log_names: Tuple[str, ...]
     names: List[str]
     psis: Tuple[np.ndarray, ...]
     diffs: Tuple[np.ndarray, ...]
-    fitness: Tuple[Optional[float], ...]
+    fitness: Tuple[float, ...]
 
     @property
     def diff(self) -> np.ndarray:
@@ -306,6 +317,7 @@ class QueryEngine:
         repo_memo_size: int = 4,
         calibration_path: Optional[str] = None,
         graph_crossover: Optional[int] = None,
+        replay_crossover: Optional[int] = None,
         max_graphs: int = 8,
     ):
         self.mesh = mesh
@@ -328,6 +340,14 @@ class QueryEngine:
             cal["graph_repeat_crossover"]
             if graph_crossover is None
             else graph_crossover
+        )
+        # memmap events above which one-pass streaming replay beats
+        # materialize-then-replay for conformance sinks (measured crossover
+        # from BENCH_conformance.json when available; explicit arg wins)
+        self.replay_crossover = (
+            cal["replay_streaming_crossover"]
+            if replay_crossover is None
+            else replay_crossover
         )
         # built graphs keyed by source fingerprint; appends extend the CSR
         # over the proven suffix instead of rebuilding
@@ -358,6 +378,11 @@ class QueryEngine:
         # signal: one entry serves every window/filter/view over the union)
         self._fitness_memo: "OrderedDict[str, Tuple]" = OrderedDict()
         self._max_fitness_memo = 16
+        # discovered default models per (source fp, non-window ops):
+        # sliding-window conformance dashboards (and compare()'s reference
+        # model) stop re-running discovery on unchanged data
+        self._model_memo: "OrderedDict[Tuple, ModelSpec]" = OrderedDict()
+        self._max_model_memo = 16
         self._lock = threading.Lock()
 
     # -- public --------------------------------------------------------------
@@ -367,6 +392,8 @@ class QueryEngine:
             return self._run_union(query, sink, t_start)
         with self._lock:
             self.stats.queries += 1
+            if isinstance(sink, CONFORMANCE_SINKS):
+                self.stats.conformance_queries += 1
         info = source_info(query.source)
         logical, rewrites = canonicalize(
             query.logical_plan(sink), info.activity_names
@@ -409,16 +436,31 @@ class QueryEngine:
         )
         return result
 
+    def _conformance_graph_ok(self, source) -> bool:
+        """Conformance can use the graph tier only when the graph carries
+        event tables — out-of-core sources build topology-only graphs
+        (logs only grow, so an in-budget source was in budget at build)."""
+        return not (
+            isinstance(source, MemmapLog)
+            and source.num_events > self.memory_budget_events
+        )
+
     def _graph_available(self, source, fp: str, logical: LogicalPlan) -> bool:
         """The planner's amortization signal: is the event-knowledge graph
         of this source built (or provably extendable over an append), or has
         this source crossed the repeat-query count where building one pays?
-        Counts only topology-sink cache *misses* — every hit is already
-        O(1), so repeats that matter are the ones that would rescan."""
-        if not isinstance(logical.sink, TOPOLOGY_SINKS) or logical.has_barrier():
+        Counts only topology/conformance cache *misses* — every hit is
+        already O(1), so repeats that matter are the ones that would
+        rescan."""
+        if not isinstance(
+            logical.sink, TOPOLOGY_SINKS + CONFORMANCE_SINKS
+        ) or logical.has_barrier():
             return False
         if isinstance(source, UnionSource):
             return False  # branches make their own per-source decision
+        if isinstance(logical.sink, CONFORMANCE_SINKS):
+            if not self._conformance_graph_ok(source):
+                return False
         if self.graphs.peek(fp) or self.graphs.has_extendable(source):
             return True
         with self._lock:
@@ -450,6 +492,7 @@ class QueryEngine:
             memory_budget_events=self.memory_budget_events,
             fused_dicing=self.fused_dicing,
             graph_available=graph_available,
+            replay_crossover=self.replay_crossover,
         )
         with self._lock:
             self._plans[plan_key] = physical
@@ -470,8 +513,12 @@ class QueryEngine:
             fp = fingerprint(query.source)
             with self._lock:
                 seen = self._topo_seen.get(fp, 0)
+            sink_ok = isinstance(logical.sink, TOPOLOGY_SINKS) or (
+                isinstance(logical.sink, CONFORMANCE_SINKS)
+                and self._conformance_graph_ok(query.source)
+            )
             graph_available = (
-                isinstance(logical.sink, TOPOLOGY_SINKS)
+                sink_ok
                 and not logical.has_barrier()
                 and (
                     self.graphs.peek(fp)
@@ -486,6 +533,7 @@ class QueryEngine:
             memory_budget_events=self.memory_budget_events,
             fused_dicing=self.fused_dicing,
             graph_available=graph_available,
+            replay_crossover=self.replay_crossover,
         )
         lines = [
             f"logical : {logical.describe()}",
@@ -528,6 +576,8 @@ class QueryEngine:
         with self._lock:
             self.stats.queries += 1
             self.stats.union_queries += 1
+            if isinstance(sink, CONFORMANCE_SINKS):
+                self.stats.conformance_queries += 1
         # derived from unresolved branch metadata: a cache hit must not pay
         # an O(E) FromLogs materialization
         union_names = union_activity_names(union)
@@ -560,6 +610,10 @@ class QueryEngine:
                 value, names = self._execute_compare(
                     union, logical, st, union_names, empty=empty,
                     union_fp=fp,
+                )
+            elif isinstance(logical.sink, CONFORMANCE_SINKS):
+                value, names = self._execute_conformance_union(
+                    union, logical, st, union_names
                 )
             else:
                 value, names = self._execute_union_merge(
@@ -654,6 +708,121 @@ class QueryEngine:
         counts = self._merged_counts(union, logical, union_names, empty=empty)
         return self._finish_streaming_hist(counts, union_names, st)
 
+    @staticmethod
+    def _branch_conformance_ops(
+        ops: Tuple, branch_names: List[str]
+    ) -> Tuple:
+        """Distribute conformance (sequence-semantics) ops into one branch:
+        every op applies per event, but an activity filter may name
+        union-level activities a branch has never seen — intersect it with
+        the branch vocabulary so branch validation passes (the missing
+        names could not have matched any of the branch's events anyway)."""
+        out = []
+        for op in ops:
+            if isinstance(op, Activities):
+                out.append(Activities(
+                    tuple(sorted(set(op.keep) & set(branch_names))),
+                    op.relink,
+                ))
+            else:
+                out.append(op)
+        return tuple(out)
+
+    def _model_for_source(
+        self, sink, ops: Tuple, src, st: _Collected
+    ) -> ModelSpec:
+        """Resolve the (default) model for one concrete source — the
+        union, compare, and serve ``model_of`` paths' entry into the
+        per-fingerprint model memo.  The memo key carries ``st``'s folded
+        keep/view, so a view-governed resolution never aliases a raw one
+        on the same source."""
+        fp = fingerprint(src)
+
+        def build():
+            if isinstance(src, EventRepository):
+                repo = src
+            elif src.num_events <= self.memory_budget_events:
+                repo = self._materialize(src, fp)
+            else:
+                names = memmap_activity_names(src)
+                dest, out_names = self._transform_tables(st, names)
+                return self._streaming_default_model(src, dest, out_names)
+            names = list(repo.activity_names)
+            dest, out_names = self._transform_tables(st, names)
+            acts = repo.event_activity.astype(np.int64)
+            traces = repo.event_trace
+            if dest is not None:
+                tacts = dest[acts]
+                m = tacts >= 0
+                acts, traces = tacts[m], traces[m]
+            return self._model_from_arrays(acts, traces, out_names)
+
+        return self._resolve_model(sink, self._model_key(ops, st), fp, build)
+
+    def _execute_conformance_union(
+        self,
+        union: UnionSource,
+        logical: LogicalPlan,
+        st: _Collected,
+        union_names: List[str],
+    ):
+        """Fitness/alignments over a union: one shared model (explicit, or
+        the reference branch's discovered model — compare() semantics),
+        then one sub-query per branch through :meth:`run` so each branch
+        keeps its own cache entry and append-aware delta path.  Traces
+        never span branches, so the merge concatenates the per-trace
+        arrays in branch order and sums the censuses."""
+        sink = logical.sink
+        spec = (
+            sink.model
+            if sink.model is not None
+            else self._model_for_source(
+                sink, logical.ops, union.branches[0].resolve(), st
+            )
+        )
+        pinned = dataclasses.replace(sink, model=spec)
+        results = []
+        for branch in union.branches:
+            src = branch.resolve()
+            ops = self._branch_conformance_ops(
+                logical.ops, self._branch_names_of(src)
+            )
+            sub = self.run(Query(src, ops, self), pinned)
+            results.append(sub.value)
+        _dest_u, out_names = self._transform_tables(st, union_names)
+
+        def cat(arrays, dtype):
+            arrays = [a for a in arrays if a.shape[0]]
+            return (
+                np.concatenate(arrays) if arrays
+                else np.zeros((0,), dtype=dtype)
+            )
+
+        census: Dict = {}
+        for r in results:
+            for edge, c in r.deviating_edges.items():
+                census[edge] = census.get(edge, 0) + c
+        if isinstance(sink, FitnessSink):
+            tf = cat([r.trace_fitness for r in results], np.float64)
+            value = ReplayResult(
+                fitness=float(tf.mean()) if tf.shape[0] else 1.0,
+                trace_fitness=tf,
+                perfectly_fitting=sum(r.perfectly_fitting for r in results),
+                deviating_edges=census,
+            )
+            return value, out_names
+        fit = cat([r.trace_fitness for r in results], np.float64)
+        value = AlignmentResult(
+            fitness=float(fit.mean()) if fit.shape[0] else 1.0,
+            trace_cost=cat([r.trace_cost for r in results], np.int64),
+            trace_fitness=fit,
+            variant_costs=cat([r.variant_costs for r in results], np.int64),
+            perfectly_fitting=sum(r.perfectly_fitting for r in results),
+            empty_cost=results[0].empty_cost,
+            deviating_edges=census,
+        )
+        return value, out_names
+
     def _execute_compare(
         self,
         union: UnionSource,
@@ -694,11 +863,11 @@ class QueryEngine:
 
     def _compare_fitness(
         self, union: UnionSource, union_fp: str
-    ) -> Tuple[Optional[float], ...]:
+    ) -> Tuple[float, ...]:
         """Replay-fitness drift: every branch replayed against the dependency
-        graph discovered from the first (reference) branch.  Needs whole
-        branch repositories; branches beyond the memory budget report None
-        (the Ψ matrices still compare exactly).
+        graph discovered from the first (reference) branch — in-budget
+        branches columnar, out-of-budget memmap branches via the one-pass
+        streaming replayer (never None).
 
         The value depends only on the union's data (never on the plan's
         window/filter/view), so it is memoized per composite fingerprint —
@@ -717,31 +886,25 @@ class QueryEngine:
 
     def _compute_compare_fitness(
         self, union: UnionSource
-    ) -> Tuple[Optional[float], ...]:
-        repos: List[Optional[EventRepository]] = []
+    ) -> Tuple[float, ...]:
+        """Whole-log replay fitness of every branch against the reference
+        branch's discovered model.  The model comes from the per-fingerprint
+        model memo (discovery runs once per data generation), and each
+        branch replays through :meth:`run` — in-budget branches
+        materialize, out-of-budget memmap branches replay in one streaming
+        scan, so no branch ever reports ``None``."""
+        raw = _Collected(repo=None)  # whole-log, untransformed signal
+        sink = FitnessSink()
+        spec = self._model_for_source(
+            sink, (), union.branches[0].resolve(), raw
+        )
+        pinned = FitnessSink(model=spec)
+        out = []
         for branch in union.branches:
             src = branch.resolve()
-            if isinstance(src, EventRepository):
-                repos.append(src)
-            elif src.num_events <= self.memory_budget_events:
-                repos.append(
-                    self._materialize(src, fingerprint(src), branch.name)
-                )
-            else:
-                repos.append(None)
-        ref = repos[0]
-        if ref is None:
-            return tuple(None for _ in repos)
-        src_a, dst_a, valid = ref.df_pairs()
-        psi_ref = dfg_numpy(src_a, dst_a, valid, ref.num_activities)
-        starts, ends = ref.trace_boundaries()
-        model = discover_dependency_graph(
-            psi_ref, ref.activity_names, starts, ends
-        )
-        return tuple(
-            float(replay_fitness(r, model).fitness) if r is not None else None
-            for r in repos
-        )
+            sub = self.run(Query(src, (), self), pinned)
+            out.append(float(sub.value.fitness))
+        return tuple(out)
 
     def _execute_concat(
         self,
@@ -775,7 +938,9 @@ class QueryEngine:
         # single-source execution on the concatenation, planned on its shape
         inner = LogicalPlan("repository", logical.ops, logical.sink)
         physical = self._plan_cached(inner, source_info(repo_u))
-        value, names, _resume = self._execute(repo_u, inner, physical)
+        value, names, _resume = self._execute(
+            repo_u, inner, physical, source_fp=fp
+        )
         return value, names
 
     # -- delta (append-aware) ------------------------------------------------
@@ -812,8 +977,16 @@ class QueryEngine:
         """
         fp_new, plan_key = key
         if logical.has_barrier() or not isinstance(
-            logical.sink, (DFGSink, HistogramSink)
+            logical.sink, (DFGSink, HistogramSink, FitnessSink)
         ):
+            return None
+        if (
+            isinstance(logical.sink, FitnessSink)
+            and logical.sink.model is None
+        ):
+            # the default model is re-discovered from the *grown* log; the
+            # cached state replayed against the old model would not be
+            # bit-identical to a recompute — full replay instead
             return None
         hint = self._source_hint(log)
         cand = self.cache.delta_candidate(hint, plan_key)
@@ -855,6 +1028,8 @@ class QueryEngine:
 
         if resume is None or resume.rows_end > old.num_events:
             return None
+        if isinstance(logical.sink, FitnessSink) and resume.replay is None:
+            return None
         start = max(resume.rows_end, lo)
         t0 = time.perf_counter()
         value, out_names, new_resume = self._execute_delta(
@@ -892,6 +1067,20 @@ class QueryEngine:
         names = memmap_activity_names(log)
         with self._lock:
             self.stats.rows_scanned += max(hi - start, 0)
+        if isinstance(logical.sink, FitnessSink):
+            dest, out_names = self._transform_tables(st, names)
+            rep = StreamingReplayer.restore(
+                resume.replay, out_names, logical.sink.model
+            )
+            for a, c, t in log.iter_chunks(row_range=(start, hi)):
+                rep.update(*self._apply_stream_transform(dest, a, c, t))
+            new_resume = None
+            if hi == log.num_events:
+                new_resume = ResumableState(
+                    rows_end=hi, num_activities=log.num_activities,
+                    replay=rep.snapshot(),
+                )
+            return rep.finalize(), out_names, new_resume
         if isinstance(logical.sink, DFGSink):
             miner = StreamingDFGMiner.restore(
                 resume.miner, num_activities=log.num_activities
@@ -939,7 +1128,9 @@ class QueryEngine:
         if physical.backend == "graph":
             return self._execute_graph(source, logical, physical, source_fp)
         if physical.backend == "streaming":
-            return self._execute_streaming(source, logical, physical)
+            return self._execute_streaming(
+                source, logical, physical, source_fp
+            )
         repo = (
             self._materialize(source, source_fp)
             if logical.source == "memmap"
@@ -956,6 +1147,8 @@ class QueryEngine:
             value, names = self._variants_on_repo(st, logical.sink)
         elif isinstance(logical.sink, (ProcessMapSink, NeighborhoodSink)):
             value, names = self._topology_on_repo(st, logical, physical)
+        elif isinstance(logical.sink, CONFORMANCE_SINKS):
+            value, names = self._conformance_on_repo(st, logical, source_fp)
         else:
             raise QueryPlanError(f"unknown sink {logical.sink!r}")
         return value, names, None
@@ -1120,6 +1313,172 @@ class QueryEngine:
             )
         return tv, None
 
+    # -- conformance (fitness / alignments) ----------------------------------
+    @staticmethod
+    def _transform_tables(st: _Collected, names: List[str]):
+        """(dest, out_names) for conformance's sequence semantics: ``dest``
+        maps each raw activity id to its transformed id, ``-1`` meaning the
+        event is dropped (filtered out / hidden) and its neighbors re-link.
+        ``dest=None`` is the identity (no keep / no view)."""
+        if st.keep is None and st.view is None:
+            return None, list(names)
+        a = len(names)
+        dest = np.arange(a, dtype=np.int64)
+        out_names = list(names)
+        if st.keep is not None:
+            kept = set(st.keep)
+            for i, n in enumerate(names):
+                if n not in kept:
+                    dest[i] = -1
+        if st.view is not None:
+            view = st.view.to_view()
+            out_names = view.visible_names(names)
+            gidx = {g: i for i, g in enumerate(out_names)}
+            mapped = np.full(a, -1, dtype=np.int64)
+            for i, n in enumerate(names):
+                if dest[i] < 0:
+                    continue
+                g = view.mapping.get(n, view.default)
+                mapped[i] = gidx.get(g, -1)  # HIDDEN drops the event
+            dest = mapped
+        return dest, out_names
+
+    @staticmethod
+    def _model_key(ops: Tuple, st: _Collected) -> Tuple:
+        """What the default model depends on besides the data: any barrier
+        ops (they change the source the model is discovered from) plus the
+        *folded* keep/view transform.  Keyed on ``st`` — not the raw op
+        list — so every resolution route (plan ops, compare's raw signal,
+        serve's grant view) that means the same transform shares one memo
+        entry, and routes that mean different transforms never collide
+        (a view-protected model must not alias the raw one)."""
+        return (
+            tuple(op for op in ops if is_barrier(op)),
+            st.keep,
+            st.view,
+        )
+
+    def _resolve_model(
+        self, sink, key_tail: Tuple, fp: Optional[str], build
+    ) -> ModelSpec:
+        """The sink's model, or the memoized default (discovered from the
+        whole source under the plan's transform — windows are a drift
+        *question* against the overall process, so a sliding dashboard
+        keeps one model per data generation).  ``key_tail`` comes from
+        :meth:`_model_key`."""
+        if sink.model is not None:
+            return sink.model
+        key = (fp,) + key_tail
+        if fp is not None:
+            with self._lock:
+                hit = self._model_memo.get(key)
+                if hit is not None:
+                    self._model_memo.move_to_end(key)
+                    return hit
+        spec = ModelSpec.from_model(build())
+        if fp is not None:
+            with self._lock:
+                self._model_memo[key] = spec
+                while len(self._model_memo) > self._max_model_memo:
+                    self._model_memo.popitem(last=False)
+        return spec
+
+    @staticmethod
+    def _model_from_arrays(
+        acts: np.ndarray, traces: np.ndarray, out_names: List[str]
+    ) -> DiscoveredModel:
+        """Dependency-graph discovery from (already transformed) canonical
+        columns — Ψ plus trace-boundary counts, all vectorized."""
+        a = len(out_names)
+        n = acts.shape[0]
+        starts = np.zeros(a, dtype=np.int64)
+        ends = np.zeros(a, dtype=np.int64)
+        if n == 0:
+            psi = np.zeros((a, a), dtype=np.int64)
+        else:
+            if n >= 2:
+                valid = traces[:-1] == traces[1:]
+                psi = dfg_numpy(acts[:-1], acts[1:], valid, a)
+            else:
+                psi = np.zeros((a, a), dtype=np.int64)
+            is_start = np.ones(n, dtype=bool)
+            is_start[1:] = traces[1:] != traces[:-1]
+            is_end = np.ones(n, dtype=bool)
+            is_end[:-1] = traces[:-1] != traces[1:]
+            np.add.at(starts, acts[is_start], 1)
+            np.add.at(ends, acts[is_end], 1)
+        return discover_dependency_graph(psi, out_names, starts, ends)
+
+    def _conformance_value(
+        self,
+        sink,
+        acts: np.ndarray,
+        traces: np.ndarray,
+        out_names: List[str],
+        model: ModelSpec,
+        num_traces: Optional[int],
+    ):
+        if isinstance(sink, FitnessSink):
+            return replay_fitness_arrays(
+                acts, traces, out_names, model, num_traces=num_traces
+            )
+        return align_arrays(
+            acts, traces, out_names, model, num_traces=num_traces,
+            backend="auto",
+        )
+
+    def _conformance_from_columns(
+        self,
+        logical: LogicalPlan,
+        st: _Collected,
+        source_fp: Optional[str],
+        acts: np.ndarray,
+        traces: np.ndarray,
+        times: np.ndarray,
+        num_traces: int,
+        names: List[str],
+    ):
+        """Shared columnar/graph conformance: transform the event columns
+        (sequence semantics), resolve the model from the whole selection,
+        replay/align the windowed selection."""
+        dest, out_names = self._transform_tables(st, names)
+        acts = np.asarray(acts).astype(np.int64)
+        traces = np.asarray(traces)
+        keep_mask = np.ones(acts.shape[0], dtype=bool)
+        tacts = acts
+        if dest is not None:
+            tacts = dest[acts]
+            keep_mask &= tacts >= 0
+        model = self._resolve_model(
+            logical.sink, self._model_key(logical.ops, st), source_fp,
+            lambda: self._model_from_arrays(
+                tacts[keep_mask], traces[keep_mask], out_names
+            ),
+        )
+        windowed = st.window is not None
+        if windowed:
+            ts = np.asarray(times)
+            keep_mask &= (ts >= st.window.t0) & (ts < st.window.t1)
+        transformed = dest is not None or windowed
+        value = self._conformance_value(
+            logical.sink,
+            tacts[keep_mask] if transformed else tacts,
+            traces[keep_mask] if transformed else traces,
+            out_names, model,
+            num_traces=None if transformed else num_traces,
+        )
+        return value, out_names
+
+    def _conformance_on_repo(
+        self, st: _Collected, logical: LogicalPlan, source_fp: Optional[str]
+    ):
+        repo = st.repo
+        return self._conformance_from_columns(
+            logical, st, source_fp,
+            repo.event_activity, repo.event_trace, repo.event_time,
+            repo.num_traces, list(repo.activity_names),
+        )
+
     # -- graph (event-knowledge-graph store) ---------------------------------
     def _execute_graph(
         self, source, logical: LogicalPlan, physical: PhysicalPlan,
@@ -1146,6 +1505,21 @@ class QueryEngine:
         st = _collect(None, logical)  # planner guarantees barrier-free
         if st.keep is not None:
             _validate_keep(st.keep, names)
+        if isinstance(logical.sink, CONFORMANCE_SINKS):
+            # replay/align over the stored event tables — the canonical
+            # :BELONGS_TO order makes each case a contiguous segment whose
+            # :DF steps are adjacent rows; no source re-materialization
+            if not g.has_event_tables:
+                raise QueryPlanError(
+                    "conformance needs event tables; this graph is "
+                    "topology-only (built out-of-core) — use streaming/auto"
+                )
+            value, out_names = self._conformance_from_columns(
+                logical, st, fp,
+                g.event_activity, g.event_trace, g.event_time,
+                g.num_traces, names,
+            )
+            return value, out_names, None
         windowed = st.window is not None and not st.window.empty
         plain = st.window is None and st.keep is None and st.view is None
 
@@ -1289,13 +1663,84 @@ class QueryEngine:
             return counts[vis], [labels[i] for i in vis]
         return counts, names
 
+    def _apply_stream_transform(self, dest, a, c, t):
+        """Sequence-semantics transform of one chunk: drop masked events,
+        relabel survivors (re-linking is implicit — the replayer only ever
+        sees the surviving stream)."""
+        if dest is None:
+            return a, c, t
+        ta = dest[np.asarray(a).astype(np.int64)]
+        m = ta >= 0
+        return ta[m], np.asarray(c)[m], np.asarray(t)[m]
+
+    def _streaming_default_model(
+        self, log: MemmapLog, dest, out_names: List[str]
+    ) -> DiscoveredModel:
+        """Whole-log discovery in one O(A² + chunk) scan (memoized by the
+        caller per source fingerprint)."""
+        disc = StreamingModelDiscoverer(len(out_names))
+        rows = 0
+        for a, c, t in log.iter_chunks():
+            rows += a.shape[0]
+            disc.update(*self._apply_stream_transform(dest, a, c, t))
+        with self._lock:
+            self.stats.rows_scanned += rows
+        return disc.finalize(out_names)
+
+    def _streaming_conformance(
+        self,
+        log: MemmapLog,
+        logical: LogicalPlan,
+        physical: PhysicalPlan,
+        st: _Collected,
+        names: List[str],
+        source_fp: Optional[str],
+    ):
+        """One-pass streaming replay (FitnessSink only — alignments need
+        the variant table and are budget-gated by the planner)."""
+        dest, out_names = self._transform_tables(st, names)
+        model = self._resolve_model(
+            logical.sink, self._model_key(logical.ops, st), source_fp,
+            lambda: self._streaming_default_model(log, dest, out_names),
+        )
+        if st.window is not None and st.window.empty:
+            rng = (0, 0)
+        else:
+            window = physical.row_range_window
+            rng = (
+                log.rows_for_window(*window) if window
+                else (0, log.num_events)
+            )
+        with self._lock:
+            self.stats.rows_scanned += max(rng[1] - rng[0], 0)
+        rep = StreamingReplayer(out_names, model)
+        for a, c, t in log.iter_chunks(row_range=rng):
+            rep.update(*self._apply_stream_transform(dest, a, c, t))
+        resume = None
+        if rng[1] == log.num_events and logical.sink.model is not None:
+            # resumable only under a pinned model: a default model is
+            # re-discovered from the grown log, invalidating old state
+            resume = ResumableState(
+                rows_end=rng[1], num_activities=log.num_activities,
+                replay=rep.snapshot(),
+            )
+        return rep.finalize(), out_names, resume
+
     def _execute_streaming(
-        self, log: MemmapLog, logical: LogicalPlan, physical: PhysicalPlan
+        self,
+        log: MemmapLog,
+        logical: LogicalPlan,
+        physical: PhysicalPlan,
+        source_fp: Optional[str] = None,
     ):
         names = memmap_activity_names(log)
         st = _collect(None, logical)  # plan guarantees no barriers here
         if st.keep is not None:
             _validate_keep(st.keep, names)
+        if isinstance(logical.sink, FitnessSink):
+            return self._streaming_conformance(
+                log, logical, physical, st, names, source_fp
+            )
         # the planner owns the row-range pushdown decision; consume it here
         # so describe()/explain() always reflect what actually runs
         window = physical.row_range_window

@@ -25,6 +25,14 @@ predicates must not cross them):
 * **no-op elimination** — infinite windows and keep-everything filters drop
   (needs the source schema, hence the ``activity_names`` argument).
 
+The same canonical form is count-preserving under the conformance sinks'
+**sequence semantics** (fitness / alignments re-link survivors instead of
+masking pairs): window fusion is exact because dicing events by two windows
+in either order keeps exactly the events inside the intersection, activity
+keep-sets intersect identically, and composed views project each event
+once — so one canonical plan serves both interpretation families and they
+share cache keys per sink.
+
 Physical pushdowns (row-range dicing into :class:`MemmapLog`'s chunk time
 index, fused Pallas dicing, view-below-count relabeling, activity filters as
 output masks) are decided by :mod:`repro.query.planner` on top of the

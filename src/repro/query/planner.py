@@ -54,11 +54,14 @@ from repro.core.repository import EventRepository
 from repro.core.streaming import MemmapLog
 
 from .ast import (
+    CONFORMANCE_SINKS,
     TOPOLOGY_SINKS,
     Activities,
+    AlignmentsSink,
     ApplyView,
     CompareSink,
     DFGSink,
+    FitnessSink,
     HistogramSink,
     LogicalPlan,
     NeighborhoodSink,
@@ -88,6 +91,11 @@ MEMORY_BUDGET_EVENTS = 1 << 22
 #: event-knowledge graph (repro.graph) amortizes — measured crossover
 #: comes from BENCH_graph.json when available
 GRAPH_REPEAT_CROSSOVER = 3
+#: memmap events above which the one-pass streaming replayer beats
+#: materialize-then-replay for conformance sinks; the static default ties
+#: it to the memory budget (identical behavior to the budget gate), the
+#: measured value comes from BENCH_conformance.json
+REPLAY_STREAMING_CROSSOVER = MEMORY_BUDGET_EVENTS
 
 
 # ---------------------------------------------------------------------------
@@ -102,6 +110,9 @@ _CALIBRATION_CLAMPS = {
 }
 _GRAPH_CLAMPS = {
     "graph_repeat_crossover": (1, 64),
+}
+_CONFORMANCE_CLAMPS = {
+    "replay_streaming_crossover": (1 << 18, 1 << 26),
 }
 _REPO_ROOT = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "..", "..")
@@ -141,7 +152,9 @@ def _read_calibration(
 
 
 def load_calibration(
-    path: Optional[str] = None, graph_path: Optional[str] = None
+    path: Optional[str] = None,
+    graph_path: Optional[str] = None,
+    conformance_path: Optional[str] = None,
 ) -> Dict[str, int]:
     """Cost-model thresholds, measured when available.
 
@@ -151,8 +164,12 @@ def load_calibration(
     ``benchmarks/bench_graph.py`` writes the columnar↔graph crossover
     (``graph_repeat_crossover`` — the repeat-query count above which
     building the event-knowledge graph amortizes) into
-    ``BENCH_graph.json``.  When such records exist — searched as: explicit
-    path argument, ``$GRAPHPM_BENCH_QUERY`` / ``$GRAPHPM_BENCH_GRAPH``,
+    ``BENCH_graph.json``, and ``benchmarks/bench_conformance.py`` the
+    streaming↔materialize replay crossover
+    (``replay_streaming_crossover`` events) into
+    ``BENCH_conformance.json``.  When such records exist — searched as:
+    explicit path argument, ``$GRAPHPM_BENCH_QUERY`` /
+    ``$GRAPHPM_BENCH_GRAPH`` / ``$GRAPHPM_BENCH_CONFORMANCE``,
     ``./BENCH_*.json``, ``<repo root>/BENCH_*.json`` — their values replace
     the static constants, clamped to sanity rails.  The constants are
     always the fallback, so a machine that never benchmarked plans exactly
@@ -162,6 +179,7 @@ def load_calibration(
         "tiny_pairs": TINY_PAIRS,
         "memory_budget_events": MEMORY_BUDGET_EVENTS,
         "graph_repeat_crossover": GRAPH_REPEAT_CROSSOVER,
+        "replay_streaming_crossover": REPLAY_STREAMING_CROSSOVER,
     }
     _read_calibration(
         path or os.environ.get("GRAPHPM_BENCH_QUERY"),
@@ -171,12 +189,20 @@ def load_calibration(
         graph_path or os.environ.get("GRAPHPM_BENCH_GRAPH"),
         "BENCH_graph.json", _GRAPH_CLAMPS, out,
     )
+    _read_calibration(
+        conformance_path or os.environ.get("GRAPHPM_BENCH_CONFORMANCE"),
+        "BENCH_conformance.json", _CONFORMANCE_CLAMPS, out,
+    )
     return out
 
 _DFG_BACKENDS = {
     "auto", "numpy", "scatter", "onehot", "pallas", "streaming", "distributed",
     "graph",
 }
+#: conformance sinks replay/align sequences — device counting backends do
+#: not apply; "numpy" is the columnar replay, "streaming" the one-pass
+#: replayer, "graph" the stored-event-table walk
+_CONFORMANCE_BACKENDS = {"auto", "numpy", "streaming", "graph"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -292,6 +318,97 @@ def _device_backend(
     return "pallas"
 
 
+def _plan_conformance(
+    plan: LogicalPlan,
+    info: SourceInfo,
+    *,
+    memory_budget_events: int,
+    replay_crossover: int,
+    graph_available: bool,
+) -> PhysicalPlan:
+    """Physical plan for fitness/alignments on a single source.
+
+    Replay (fitness) has all three evaluation paths; alignments need the
+    variant table, so out-of-core sources are budget-gated like
+    :class:`VariantsSink`.  The streaming↔materialize crossover for replay
+    is measured (``replay_streaming_crossover``), the budget is the hard
+    rail.
+    """
+    requested = plan.sink.backend
+    if requested not in _CONFORMANCE_BACKENDS:
+        raise QueryPlanError(
+            f"backend {requested!r} is not a conformance backend; pick one "
+            f"of {sorted(_CONFORMANCE_BACKENDS)}"
+        )
+    has_barrier, window, _acts, _view = _segment_features(plan)
+    notes = []
+    if window is not None and window.empty:
+        notes.append("empty_window=zeros")
+    is_align = isinstance(plan.sink, AlignmentsSink)
+
+    if requested == "graph" or (
+        requested == "auto" and graph_available and not has_barrier
+    ):
+        if has_barrier:
+            raise QueryPlanError(
+                "graph backend cannot evaluate materializing ops "
+                "(top_variants / relink); drop them or use another backend"
+            )
+        if info.kind == "memmap" and info.num_events > memory_budget_events:
+            raise QueryPlanError(
+                "graph conformance replays the stored event tables; this "
+                "out-of-core log builds a topology-only graph — use "
+                "streaming/auto"
+            )
+        return PhysicalPlan(
+            backend="graph",
+            notes=("graph=event_table_replay",) + tuple(notes),
+        )
+
+    if info.kind == "memmap":
+        if requested == "streaming" and (has_barrier or is_align):
+            raise QueryPlanError(
+                "streaming replay cannot evaluate "
+                + ("materializing ops" if has_barrier else "alignments")
+                + "; they need a materialized repository"
+            )
+        if has_barrier or is_align:
+            if info.num_events > memory_budget_events:
+                raise QueryPlanError(
+                    "alignments / materializing ops on an out-of-core log "
+                    "exceed the memory budget; raise memory_budget_events "
+                    "or pre-dice the log"
+                )
+            return PhysicalPlan(
+                backend="numpy", materialize=True, notes=tuple(notes)
+            )
+        out_of_core = info.num_events > memory_budget_events
+        if out_of_core and requested == "numpy":
+            raise QueryPlanError(
+                "backend 'numpy' would materialize an out-of-core log into "
+                "memory; use streaming/auto or raise memory_budget_events"
+            )
+        if requested == "streaming" or (
+            requested == "auto"
+            and info.num_events > min(memory_budget_events, replay_crossover)
+        ):
+            return PhysicalPlan(
+                backend="streaming",
+                row_range_window=(
+                    (window.t0, window.t1)
+                    if window is not None and not window.empty
+                    else None
+                ),
+                notes=("replay=O(A²+chunk) scan",) + tuple(notes),
+            )
+        return PhysicalPlan(
+            backend="numpy", materialize=True, notes=tuple(notes)
+        )
+    if requested == "streaming":
+        raise QueryPlanError("streaming backend requires a MemmapLog source")
+    return PhysicalPlan(backend="numpy", notes=tuple(notes))
+
+
 def _plan_union(
     plan: LogicalPlan,
     info: SourceInfo,
@@ -300,6 +417,7 @@ def _plan_union(
     tiny_pairs: int,
     memory_budget_events: int,
     fused_dicing: bool,
+    replay_crossover: int = REPLAY_STREAMING_CROSSOVER,
 ) -> PhysicalPlan:
     """Union costing: every branch is costed on its own shape (one union may
     mix an out-of-core memmap with tiny in-memory repositories), and the
@@ -338,13 +456,20 @@ def _plan_union(
         backend = "union"
 
     # per-branch sub-plans: the window distributes into each branch, the
-    # rest (activity mask / view) runs once at the merge
-    branch_ops = (window,) if window is not None else ()
-    branch_sink = (
-        HistogramSink()
-        if isinstance(plan.sink, HistogramSink)
-        else DFGSink(backend=plan.sink.backend)
-    )
+    # rest (activity mask / view) runs once at the merge.  Conformance
+    # sinks distribute *every* op (sequence predicates transform each
+    # branch's traces — traces never span branches) and keep their own
+    # sink so each branch is costed as a replay, not a count.
+    if isinstance(plan.sink, CONFORMANCE_SINKS):
+        branch_ops = plan.ops
+        branch_sink = plan.sink
+    else:
+        branch_ops = (window,) if window is not None else ()
+        branch_sink = (
+            HistogramSink()
+            if isinstance(plan.sink, HistogramSink)
+            else DFGSink(backend=plan.sink.backend)
+        )
     for name, binfo in zip(info.branch_names, info.branches):
         bplan = LogicalPlan(binfo.kind, branch_ops, branch_sink)
         bphys = plan_physical(
@@ -352,6 +477,7 @@ def _plan_union(
             mesh=mesh, tiny_pairs=tiny_pairs,
             memory_budget_events=memory_budget_events,
             fused_dicing=fused_dicing,
+            replay_crossover=replay_crossover,
         )
         notes.append(f"branch[{name}]={bphys.backend}")
     return PhysicalPlan(
@@ -375,6 +501,7 @@ def plan_physical(
     memory_budget_events: int = MEMORY_BUDGET_EVENTS,
     fused_dicing: bool = True,
     graph_available: bool = False,
+    replay_crossover: int = REPLAY_STREAMING_CROSSOVER,
 ) -> PhysicalPlan:
     """Map a canonical logical plan to a physical one.  ``plan`` must be the
     output of :func:`repro.query.optimize.canonicalize`.
@@ -383,7 +510,8 @@ def plan_physical(
     event-knowledge graph of this source is already built (or provably
     extendable / past the repeat-query crossover, so building it now pays).
     With it, un-windowed topology sinks route to the ``graph`` backend —
-    CSR lookups instead of an O(E) recount.
+    CSR lookups instead of an O(E) recount — and conformance sinks replay
+    the graph's stored event tables.
     """
     if isinstance(plan.sink, (DFGSink, CompareSink, ProcessMapSink,
                               NeighborhoodSink)):
@@ -395,11 +523,19 @@ def plan_physical(
             mesh=mesh, tiny_pairs=tiny_pairs,
             memory_budget_events=memory_budget_events,
             fused_dicing=fused_dicing,
+            replay_crossover=replay_crossover,
         )
     if isinstance(plan.sink, CompareSink):
         raise QueryPlanError(
             "compare() requires a multi-log source — build one with "
             "Q.logs(a, b, ...)"
+        )
+    if isinstance(plan.sink, CONFORMANCE_SINKS):
+        return _plan_conformance(
+            plan, info,
+            memory_budget_events=memory_budget_events,
+            replay_crossover=replay_crossover,
+            graph_available=graph_available,
         )
     has_barrier, window, acts, view = _segment_features(plan)
     notes = []

@@ -25,6 +25,16 @@ from the CSR event-knowledge graph once the engine's repeat-query
 crossover builds it — repeated dashboard topology queries stop rescanning
 the log entirely.
 
+Conformance sinks (``{"sink": "fitness"}`` / ``{"sink": "alignments"}``)
+expose aggregate replay/alignment conformance.  The model defaults to the
+log's own whole-log discovered dependency graph; ``"model_of": other_log``
+replays against another registered log's model (cross-deployment
+conformance) — the other log's policy joins the request's policy
+combination, so a tenant cannot route around a view through a model.  Only
+aggregates and the deviation census leave the service, and the census
+obeys the k-anonymity floor: deviating flows below the floor are not
+reported.
+
 Multi-log requests name several registered logs at once and compile to the
 engine's union source algebra::
 
@@ -251,6 +261,19 @@ class QueryService:
         }
 
     @staticmethod
+    def _floor_census(res, floor: int) -> List[Dict]:
+        """k-anonymity on a deviation census: a deviating flow observed
+        fewer than ``floor`` times is not reported (it could identify a
+        handful of cases); survivors are sorted most-frequent first."""
+        kept = [
+            {"edge": [s, d], "count": int(c)}
+            for (s, d), c in res.deviating_edges.items()
+            if not floor or int(c) >= floor
+        ]
+        kept.sort(key=lambda e: (-e["count"], e["edge"]))
+        return kept
+
+    @staticmethod
     def _floor_neighborhood(nb, floor: int) -> Dict:
         """k-anonymity on a neighborhood: sub-floor edges are dropped, and
         with them any reached activity left without a surviving edge (the
@@ -289,11 +312,24 @@ class QueryService:
             names = [request.get("log")]
             if names[0] is None:
                 raise KeyError("request names no log")
-        sources, grant = self._resolve(names)
+        sink = request.get("sink", "dfg")
+        model_src = None
+        if (
+            sink in ("fitness", "alignments")
+            and request.get("model_of") is not None
+        ):
+            # cross-log conformance: the reference log's policy joins the
+            # combination (strictest wins) before anything runs — a tenant
+            # cannot route around a log's view through its model
+            other = str(request["model_of"])
+            combined = list(dict.fromkeys(names + [other]))
+            sources_c, grant = self._resolve(combined)
+            sources = [sources_c[combined.index(n)] for n in names]
+            model_src = sources_c[combined.index(other)]
+        else:
+            sources, grant = self._resolve(names)
         q = self._build_query(request, sources, names, grant)
         floor = grant.floor
-
-        sink = request.get("sink", "dfg")
         if sink == "dfg":
             res = q.dfg(backend=request.get("backend", "auto"))
             psi = res.value
@@ -345,6 +381,42 @@ class QueryService:
                 backend=request.get("backend", "auto"),
             )
             payload = self._floor_neighborhood(res.value, floor)
+        elif sink in ("fitness", "alignments"):
+            model = None
+            if model_src is not None:
+                from repro.query.ast import FitnessSink
+                from repro.query.execute import _Collected
+
+                st = _Collected(repo=None)
+                if grant.has_view:
+                    st.view = ApplyView.from_view(grant.view)
+                model = self.engine._model_for_source(
+                    FitnessSink(), (), model_src, st
+                )
+            backend = request.get("backend", "auto")
+            if sink == "fitness":
+                res = q.fitness(model, backend=backend)
+                rr = res.value
+                payload = {
+                    "fitness": rr.fitness,
+                    "perfect_traces": rr.perfectly_fitting,
+                    "total_traces": int(rr.trace_fitness.shape[0]),
+                    "deviations": self._floor_census(rr, floor),
+                }
+            else:
+                res = q.alignments(model, backend=backend)
+                ar = res.value
+                payload = {
+                    "fitness": ar.fitness,
+                    "perfect_traces": ar.perfectly_fitting,
+                    "total_traces": int(ar.trace_cost.shape[0]),
+                    "mean_cost": (
+                        float(ar.trace_cost.mean())
+                        if ar.trace_cost.shape[0] else 0.0
+                    ),
+                    "empty_cost": ar.empty_cost,
+                    "deviations": self._floor_census(ar, floor),
+                }
         elif sink == "compare":
             res = q.compare(backend=request.get("backend", "auto"))
             cr = res.value

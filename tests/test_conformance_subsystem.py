@@ -1,0 +1,597 @@
+"""repro.conformance — graph-native / streaming / columnar conformance.
+
+Pins the subsystem's core contract: every evaluation path (columnar oracle,
+streaming replayer, graph event-table walk) produces **bit-identical**
+trace_fitness arrays and deviation censuses on shared inputs — across
+windows, views, activity filters, unions, and append + delta resume — and
+the engine plans/caches them like any other sink.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.conformance import (
+    ModelSpec,
+    StreamingModelDiscoverer,
+    StreamingReplayer,
+    align_repository,
+    alignment_cost_tables,
+    replay_fitness_graph,
+    replay_fitness_streaming,
+)
+from repro.core.conformance import (
+    deviation_census,
+    model_tables,
+    replay_fitness,
+)
+from repro.core.dfg import dfg_numpy
+from repro.core.dicing import dice_repository
+from repro.core.discovery import discover_dependency_graph
+from repro.core.repository import EventRepository
+from repro.core.streaming import MemmapLog
+from repro.data import ProcessSpec, generate_memmap_log, generate_repository
+from repro.graph import build_graph
+from repro.kernels.align_dp import align_dp
+from repro.query import Q, QueryEngine, QueryPlanError
+from repro.query.execute import repository_from_memmap
+from repro.query.planner import load_calibration
+
+
+def _discover(repo, **kw):
+    s, d, v = repo.df_pairs()
+    psi = dfg_numpy(s, d, v, repo.num_activities)
+    starts, ends = repo.trace_boundaries()
+    return discover_dependency_graph(
+        psi, repo.activity_names, starts, ends,
+        min_count=kw.get("min_count", 1),
+        min_dependency=kw.get("min_dependency", -1.0),
+    )
+
+
+@pytest.fixture()
+def mmlog(tmp_path):
+    return generate_memmap_log(
+        str(tmp_path / "mm"), 30_000,
+        ProcessSpec(num_activities=12, seed=11), seed=11, batch_traces=600,
+    )
+
+
+def _append_noise(log: MemmapLog, n: int, seed: int = 7) -> MemmapLog:
+    rng = np.random.default_rng(seed)
+    last_t = float(np.asarray(log.time[-1])) if log.num_events else 0.0
+    a = rng.integers(0, log.num_activities, n).astype(np.int32)
+    c = rng.integers(0, log.num_traces, n).astype(np.int32)
+    t = np.sort(rng.uniform(last_t, last_t + 500.0, n))
+    return log.append(a, c, t)
+
+
+# ---------------------------------------------------------------------------
+# core oracle edge cases (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_single_event_traces():
+    repo = EventRepository.from_traces([["a"], ["b"], ["a"]])
+    model = _discover(EventRepository.from_traces([["a"]] * 5,
+                                                  activity_vocab=["a", "b"]))
+    res = replay_fitness(repo, model)
+    # single-event trace: denom = 2 (start + end); "a" fits both, "b" neither
+    np.testing.assert_array_equal(res.trace_fitness, [1.0, 0.0, 1.0])
+    assert res.deviating_edges == {}
+
+
+def test_log_activities_absent_from_model_and_vice_versa():
+    model = ModelSpec(
+        activities=("a", "b", "ghost"),
+        edges=(("a", "b"), ("b", "ghost")),
+        starts=("a", "ghost"), ends=("b", "ghost"),
+    )
+    repo = EventRepository.from_traces(
+        [["a", "b"], ["a", "x", "b"]], activity_vocab=["a", "b", "x"]
+    )
+    res = replay_fitness(repo, model)
+    # "ghost" never observed: harmless; "x" unknown to the model: both its
+    # moves deviate
+    assert res.trace_fitness[0] == 1.0
+    assert res.trace_fitness[1] == pytest.approx(2 / 4)
+    assert res.deviating_edges == {("a", "x"): 1, ("x", "b"): 1}
+    allowed, start_ok, end_ok = model_tables(model, repo.activity_names)
+    assert allowed.shape == (3, 3) and not allowed[:, 2].any()
+
+
+def test_empty_repository_everywhere():
+    repo = EventRepository.from_traces([])
+    model = _discover(generate_repository(5, ProcessSpec(num_activities=3,
+                                                         seed=1)))
+    res = replay_fitness(repo, model)
+    assert res.fitness == 1.0 and res.trace_fitness.shape == (0,)
+    eng = QueryEngine()
+    r = Q.log(repo).using(eng).fitness(model)
+    assert r.value.fitness == 1.0
+    a = Q.log(repo).using(eng).alignments(model)
+    assert a.value.fitness == 1.0 and a.value.trace_cost.shape == (0,)
+
+
+def test_census_vectorized_matches_host_loop():
+    rng = np.random.default_rng(3)
+    names = [f"a{i}" for i in range(9)]
+    src = rng.integers(0, 9, 5000)
+    dst = rng.integers(0, 9, 5000)
+    want = {}
+    for s, d in zip(src, dst):
+        k = (names[int(s)], names[int(d)])
+        want[k] = want.get(k, 0) + 1
+    assert deviation_census(src, dst, names) == want
+    assert deviation_census(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                            names) == {}
+
+
+# ---------------------------------------------------------------------------
+# three-path bit-identity (the tentpole contract)
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_and_graph_replay_match_oracle(mmlog):
+    repo = repository_from_memmap(mmlog)
+    model = _discover(repo, min_count=40, min_dependency=0.3)
+    oracle = replay_fitness(repo, model)
+    stream = replay_fitness_streaming(mmlog, model)
+    g = build_graph(mmlog)
+    graph = replay_fitness_graph(g, model)
+    for other in (stream, graph):
+        np.testing.assert_array_equal(
+            oracle.trace_fitness, other.trace_fitness
+        )
+        assert oracle.deviating_edges == other.deviating_edges
+    assert oracle.fitness == stream.fitness == graph.fitness
+
+
+def test_topology_only_graph_rejects_replay(mmlog):
+    g = build_graph(mmlog, memory_budget_events=100)
+    assert not g.has_event_tables
+    model = ModelSpec(activities=("act_000",), edges=(), starts=(), ends=())
+    with pytest.raises(ValueError):
+        replay_fitness_graph(g, model)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "streaming", "graph"])
+def test_engine_backends_match_diced_oracle(mmlog, backend):
+    """Windows under conformance use sequence (re-link) semantics: every
+    engine path equals replay of the pm4py-diced repository."""
+    repo = repository_from_memmap(mmlog)
+    model = _discover(repo, min_count=40, min_dependency=0.3)
+    ts = np.asarray(mmlog.time)
+    t0, t1 = float(np.quantile(ts, 0.15)), float(np.quantile(ts, 0.7))
+    oracle = replay_fitness(
+        dice_repository(repo, time_window=(t0, t1)), model
+    )
+    res = Q.log(mmlog).using(QueryEngine()).window(t0, t1).fitness(
+        model, backend=backend
+    )
+    assert res.physical.backend == (
+        "numpy" if backend == "numpy" else backend
+    )
+    np.testing.assert_array_equal(
+        res.value.trace_fitness, oracle.trace_fitness
+    )
+    assert res.value.deviating_edges == oracle.deviating_edges
+
+
+def test_view_and_filter_paths_identical(mmlog):
+    repo = repository_from_memmap(mmlog)
+    names = repo.activity_names
+    view = {
+        n: ("g0" if i % 3 == 0 else "g1" if i % 3 == 1 else "<hidden>")
+        for i, n in enumerate(names)
+    }
+    keep = list(names[:9])
+    vals = {}
+    for backend in ("numpy", "streaming", "graph"):
+        res = Q.log(mmlog).using(QueryEngine()).activities(keep).view(
+            view
+        ).fitness(None, backend=backend)
+        vals[backend] = res.value
+        assert res.names == ["g0", "g1"]
+    base = vals["numpy"]
+    for backend in ("streaming", "graph"):
+        np.testing.assert_array_equal(
+            base.trace_fitness, vals[backend].trace_fitness
+        )
+        assert base.deviating_edges == vals[backend].deviating_edges
+
+
+def test_property_sweep_append_and_delta_resume(tmp_path):
+    """Seeded sweep: streaming/graph/columnar replay bit-identical,
+    including after an append served by the delta path (suffix-only scan
+    asserted through engine stats)."""
+    for seed in (2, 13, 29):
+        log = generate_memmap_log(
+            str(tmp_path / f"s{seed}"), 12_000,
+            ProcessSpec(num_activities=8, seed=seed), seed=seed,
+            batch_traces=400,
+        )
+        repo = repository_from_memmap(log)
+        model = _discover(repo, min_count=25, min_dependency=0.2)
+        eng = QueryEngine(
+            memory_budget_events=2_000, replay_crossover=2_000
+        )  # force streaming
+        r1 = Q.log(log).using(eng).fitness(model)
+        assert r1.physical.backend == "streaming"
+        base_rows = eng.stats.rows_scanned
+
+        grown = _append_noise(log, 700, seed=seed)
+        r2 = Q.log(grown).using(eng).fitness(model)
+        assert r2.physical.backend == "delta"
+        assert eng.stats.delta_hits == 1
+        assert eng.stats.rows_scanned - base_rows == 700  # suffix only
+
+        repo2 = repository_from_memmap(grown)
+        oracle = replay_fitness(repo2, model)
+        np.testing.assert_array_equal(
+            r2.value.trace_fitness, oracle.trace_fitness
+        )
+        assert r2.value.deviating_edges == oracle.deviating_edges
+        stream = replay_fitness_streaming(grown, model)
+        graph = replay_fitness_graph(build_graph(grown), model)
+        np.testing.assert_array_equal(
+            stream.trace_fitness, oracle.trace_fitness
+        )
+        np.testing.assert_array_equal(
+            graph.trace_fitness, oracle.trace_fitness
+        )
+
+
+def test_default_model_not_delta_resumed(mmlog, tmp_path):
+    """model=None re-discovers from the grown log: the engine must fall
+    back to a full replay (delta would score against a stale model)."""
+    eng = QueryEngine(memory_budget_events=2_000, replay_crossover=2_000)
+    r1 = Q.log(mmlog).using(eng).fitness()
+    assert r1.physical.backend == "streaming"
+    grown = _append_noise(mmlog, 500)
+    r2 = Q.log(grown).using(eng).fitness()
+    assert r2.physical.backend == "streaming"  # full replay, no delta
+    assert eng.stats.delta_hits == 0
+    # and it equals a from-scratch default-model replay
+    disc = StreamingModelDiscoverer(grown.num_activities)
+    for a, c, t in grown.iter_chunks():
+        disc.update(a, c, t)
+    model = disc.finalize(grown.activity_labels())
+    want = replay_fitness_streaming(grown, model)
+    np.testing.assert_array_equal(
+        r2.value.trace_fitness, want.trace_fitness
+    )
+
+
+def test_free_rewrite_for_windowed_fitness(mmlog):
+    """A pinned-model windowed fitness whose window predates the append is
+    served from cache with zero additional scan."""
+    repo = repository_from_memmap(mmlog)
+    model = _discover(repo, min_count=40)
+    ts = np.asarray(mmlog.time)
+    t0, t1 = float(np.quantile(ts, 0.1)), float(np.quantile(ts, 0.5))
+    eng = QueryEngine(memory_budget_events=2_000, replay_crossover=2_000)
+    r1 = Q.log(mmlog).using(eng).window(t0, t1).fitness(model)
+    rows = eng.stats.rows_scanned
+    grown = _append_noise(mmlog, 400)
+    r2 = Q.log(grown).using(eng).window(t0, t1).fitness(model)
+    assert r2.from_cache and eng.stats.delta_free_hits == 1
+    assert eng.stats.rows_scanned == rows
+    np.testing.assert_array_equal(
+        r1.value.trace_fitness, r2.value.trace_fitness
+    )
+
+
+# ---------------------------------------------------------------------------
+# engine planning / caching / stats
+# ---------------------------------------------------------------------------
+
+
+def test_fitness_cache_hit_and_model_memo(mmlog):
+    eng = QueryEngine()
+    r1 = Q.log(mmlog).using(eng).fitness()
+    assert not r1.from_cache
+    r2 = Q.log(mmlog).using(eng).fitness()
+    assert r2.from_cache
+    # sliding windows share the memoized default model (one discovery)
+    assert len(eng._model_memo) == 1
+    ts = np.asarray(mmlog.time)
+    for q in (0.3, 0.6):
+        Q.log(mmlog).using(eng).window(0.0, float(np.quantile(ts, q))).fitness()
+    assert len(eng._model_memo) == 1
+    assert eng.stats.conformance_queries == 4
+
+
+def test_conformance_backend_validation(mmlog):
+    with pytest.raises(QueryPlanError):
+        Q.log(mmlog).using(QueryEngine()).fitness(None, backend="pallas")
+    repo = repository_from_memmap(mmlog)
+    with pytest.raises(QueryPlanError):
+        Q.log(repo).using(QueryEngine()).fitness(None, backend="streaming")
+
+
+def test_out_of_core_guards(mmlog):
+    eng = QueryEngine(memory_budget_events=100)
+    model = ModelSpec(activities=("act_000",), edges=(), starts=(), ends=())
+    # fitness streams; numpy/graph would materialize → rejected
+    r = Q.log(mmlog).using(eng).fitness(model)
+    assert r.physical.backend == "streaming"
+    with pytest.raises(QueryPlanError):
+        Q.log(mmlog).using(eng).fitness(model, backend="numpy")
+    with pytest.raises(QueryPlanError):
+        Q.log(mmlog).using(eng).fitness(model, backend="graph")
+    # alignments need the variant table → budget-gated
+    with pytest.raises(QueryPlanError):
+        Q.log(mmlog).using(eng).alignments(model)
+
+
+def test_graph_auto_routing_after_crossover(mmlog):
+    eng = QueryEngine(graph_crossover=2)
+    model = _discover(repository_from_memmap(mmlog), min_count=40)
+    ts = np.asarray(mmlog.time)
+    windows = [(0.0, float(np.quantile(ts, q))) for q in (0.2, 0.4, 0.6)]
+    backends = []
+    for t0, t1 in windows:
+        r = Q.log(mmlog).using(eng).window(t0, t1).fitness(model)
+        backends.append(r.physical.backend)
+    assert backends[0] != "graph"  # below the crossover
+    assert backends[-1] == "graph"  # amortized: replay from stored tables
+    assert eng.stats.graph_queries >= 1
+
+
+# ---------------------------------------------------------------------------
+# alignments
+# ---------------------------------------------------------------------------
+
+
+def test_alignment_hand_computed_costs():
+    spec = ModelSpec(
+        activities=("a", "b", "c"), edges=(("a", "b"), ("b", "c")),
+        starts=("a",), ends=("c",),
+    )
+    repo = EventRepository.from_traces(
+        [["a", "b", "c"], ["a", "c"], ["a", "x", "c"], ["b"]],
+        activity_vocab=["a", "b", "c", "x"],
+    )
+    res = align_repository(repo, spec)
+    # t1: perfect; t2: one model move (b); t3: skip x + model move;
+    # t4: model move a to sync b, then model move c to finish
+    np.testing.assert_array_equal(res.trace_cost, [0, 1, 2, 2])
+    assert res.empty_cost == 3  # START→a→b→c→END
+    np.testing.assert_allclose(
+        res.trace_fitness, [1.0, 1 - 1 / 5, 1 - 2 / 6, 1 - 2 / 4]
+    )
+    assert res.perfectly_fitting == 1
+    assert res.deviating_edges == {("a", "x"): 1, ("x", "c"): 1, ("a", "c"): 1}
+
+
+def test_alignment_model_path_through_unobserved_activity():
+    """D routes through model activities the log never executes — the DP
+    state space is the model ∪ log universe, not just the log vocab."""
+    spec = ModelSpec(
+        activities=("a", "m", "z"), edges=(("a", "m"), ("m", "z")),
+        starts=("a",), ends=("z",),
+    )
+    repo = EventRepository.from_traces([["a", "z"]], activity_vocab=["a", "z"])
+    res = align_repository(repo, spec)
+    # sync a, model-move m, sync z — cost 1 (not unalignable)
+    np.testing.assert_array_equal(res.trace_cost, [1])
+    assert res.empty_cost == 3  # START→a→m→z→END executes 3 activities
+
+
+def test_alignment_unalignable_model():
+    spec = ModelSpec(activities=("a",), edges=(), starts=(), ends=())
+    repo = EventRepository.from_traces([["a", "a"]])
+    res = align_repository(repo, spec)
+    assert res.empty_cost == -1
+    np.testing.assert_array_equal(res.trace_cost, [2])  # all log moves
+    assert res.trace_fitness[0] == 0.0
+
+
+def test_align_dp_pallas_interpret_matches_numpy():
+    rng = np.random.default_rng(17)
+    for _ in range(4):
+        a = int(rng.integers(3, 14))
+        names = [f"a{i}" for i in range(a)]
+        edges = tuple(
+            (names[i], names[j])
+            for i in range(a) for j in range(a) if rng.random() < 0.3
+        )
+        spec = ModelSpec(
+            activities=tuple(names), edges=edges,
+            starts=tuple(rng.choice(names, 2)),
+            ends=tuple(rng.choice(names, 2)),
+        )
+        m, d0, endc = alignment_cost_tables(spec, names)
+        v, l = int(rng.integers(1, 50)), int(rng.integers(1, 40))
+        seqs = rng.integers(0, a, (v, l)).astype(np.int32)
+        lens = rng.integers(1, l + 1, v).astype(np.int32)
+        c_np = align_dp(seqs, lens, m, d0, endc, backend="numpy")
+        c_pl = align_dp(
+            seqs, lens, m, d0, endc, backend="pallas", interpret=True
+        )
+        np.testing.assert_array_equal(c_np, c_pl)
+
+
+def test_alignments_through_engine_match_direct(mmlog):
+    repo = repository_from_memmap(mmlog)
+    model = _discover(repo, min_count=60, min_dependency=0.3)
+    want = align_repository(repo, model)
+    for backend in ("numpy", "graph"):
+        res = Q.log(mmlog).using(QueryEngine()).alignments(
+            model, backend=backend
+        )
+        np.testing.assert_array_equal(res.value.trace_cost, want.trace_cost)
+        np.testing.assert_array_equal(
+            res.value.trace_fitness, want.trace_fitness
+        )
+        assert res.value.deviating_edges == want.deviating_edges
+
+
+# ---------------------------------------------------------------------------
+# unions + compare
+# ---------------------------------------------------------------------------
+
+
+def test_union_fitness_concatenates_branches(mmlog, tmp_path):
+    other = generate_memmap_log(
+        str(tmp_path / "mm2"), 8_000,
+        ProcessSpec(num_activities=9, seed=21), seed=21, batch_traces=300,
+    )
+    repo_a = repository_from_memmap(mmlog)
+    repo_b = repository_from_memmap(other)
+    model = _discover(repo_a, min_count=40, min_dependency=0.3)
+    res = Q.logs((mmlog, "a"), (other, "b")).using(QueryEngine()).fitness(
+        model
+    )
+    fa = replay_fitness(repo_a, model)
+    fb = replay_fitness(repo_b, model)
+    np.testing.assert_array_equal(
+        res.value.trace_fitness,
+        np.concatenate([fa.trace_fitness, fb.trace_fitness]),
+    )
+    want_census = dict(fa.deviating_edges)
+    for k, v in fb.deviating_edges.items():
+        want_census[k] = want_census.get(k, 0) + v
+    assert res.value.deviating_edges == want_census
+
+
+def test_union_default_model_is_reference_branch(mmlog, tmp_path):
+    other = generate_memmap_log(
+        str(tmp_path / "mm3"), 6_000,
+        ProcessSpec(num_activities=9, seed=23), seed=23, batch_traces=300,
+    )
+    repo_a = repository_from_memmap(mmlog)
+    repo_b = repository_from_memmap(other)
+    res = Q.logs((mmlog, "a"), (other, "b")).using(QueryEngine()).fitness()
+    model = _discover(repo_a, min_dependency=0.5)
+    fa = replay_fitness(repo_a, model)
+    fb = replay_fitness(repo_b, model)
+    np.testing.assert_array_equal(
+        res.value.trace_fitness,
+        np.concatenate([fa.trace_fitness, fb.trace_fitness]),
+    )
+
+
+def test_union_fitness_append_is_suffix_only(mmlog, tmp_path):
+    other = generate_memmap_log(
+        str(tmp_path / "mm4"), 6_000,
+        ProcessSpec(num_activities=9, seed=25), seed=25, batch_traces=300,
+    )
+    model = _discover(repository_from_memmap(mmlog), min_count=40)
+    eng = QueryEngine(memory_budget_events=1_000, replay_crossover=1_000)
+    Q.logs((mmlog, "a"), (other, "b")).using(eng).fitness(model)
+    rows = eng.stats.rows_scanned
+    grown = _append_noise(other, 300, seed=25)
+    r2 = Q.logs((mmlog, "a"), (grown, "b")).using(eng).fitness(model)
+    # branch "a" is a cache hit, branch "b" delta-resumes its suffix
+    assert eng.stats.rows_scanned - rows == 300
+    assert eng.stats.delta_hits == 1
+    oracle = np.concatenate([
+        replay_fitness(repository_from_memmap(mmlog), model).trace_fitness,
+        replay_fitness(repository_from_memmap(grown), model).trace_fitness,
+    ])
+    np.testing.assert_array_equal(r2.value.trace_fitness, oracle)
+
+
+# ---------------------------------------------------------------------------
+# serving + policy
+# ---------------------------------------------------------------------------
+
+
+def test_service_fitness_census_floor():
+    from repro.core.views import AccessPolicy
+    from repro.serve.query_service import QueryService
+
+    svc = QueryService()
+    repo = EventRepository.from_traces(
+        [["a", "b", "c"]] * 40 + [["a", "c", "b"]] * 2
+    )
+    svc.register("bpi", repo, AccessPolicy(min_group_count=5))
+    svc.register("open", repo)
+    out = svc.query({"log": "bpi", "sink": "fitness"})
+    assert out["deviations"] == []  # counts of 2 fall below the floor of 5
+    assert out["total_traces"] == 42
+    raw = svc.query({"log": "open", "sink": "fitness"})
+    # the self-discovered model admits a→c (dependency 2/3 ≥ 0.5); the
+    # reversed c→b flow is the deviation the census reports un-floored
+    assert {tuple(d["edge"]) for d in raw["deviations"]} == {("c", "b")}
+
+
+def test_service_cross_log_model_and_policy_combination():
+    from repro.core.views import AccessDenied, AccessPolicy, ActivityView
+    from repro.serve.query_service import QueryService
+
+    svc = QueryService()
+    main = EventRepository.from_traces([["a", "b"], ["b", "a"]])
+    ref = EventRepository.from_traces([["a", "b"]] * 5)
+    svc.register("main", main)
+    svc.register("ref", ref)
+    out = svc.query({"log": "main", "sink": "fitness", "model_of": "ref"})
+    assert 0.0 < out["fitness"] < 1.0
+    ali = svc.query({"log": "main", "sink": "alignments", "model_of": "ref"})
+    assert ali["empty_cost"] == 2  # START→a→b→END executes two activities
+
+    # a view-protected reference cannot be combined with a bare log
+    svc.register(
+        "guarded", ref,
+        AccessPolicy(view=ActivityView(mapping={"a": "g", "b": "g"})),
+    )
+    with pytest.raises(AccessDenied):
+        svc.query({"log": "main", "sink": "fitness", "model_of": "guarded"})
+
+
+def test_model_memo_never_aliases_viewed_and_raw_models():
+    """Regression: a raw resolution (compare's whole-log signal) and a
+    view-governed resolution (serve model_of under a view policy) on the
+    same source must occupy distinct memo entries — sharing one would let
+    a tenant replay against (or warm the memo with) a model at a
+    resolution their policy forbids."""
+    from repro.core.views import AccessPolicy, ActivityView
+    from repro.serve.query_service import QueryService
+
+    ref = EventRepository.from_traces([["a", "b"]] * 5)
+    main = EventRepository.from_traces([["a", "b"], ["b", "a"]])
+    view = ActivityView(mapping={"a": "g", "b": "g"})
+
+    svc = QueryService()
+    svc.register("ref", ref)
+    svc.register("main", main)
+    # 1) raw resolution first (fills the memo with the un-viewed model)
+    raw = svc.query({"logs": ["main", "ref"], "sink": "compare"})
+    # 2) the same reference under a view policy must see the group model
+    svc.register("guardedmain", main, AccessPolicy(view=view))
+    svc.register("guardedref", ref, AccessPolicy(view=view))
+    out = svc.query({
+        "log": "guardedmain", "sink": "fitness", "model_of": "guardedref",
+    })
+    # under the coarsening view both logs collapse to g→g walks: the
+    # group-level model fits everything; the raw model would not
+    assert out["fitness"] == 1.0
+    assert raw["fitness"]["main"] < 1.0
+    assert len(svc.engine._model_memo) == 2  # distinct entries, no alias
+
+
+# ---------------------------------------------------------------------------
+# calibration (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_replay_crossover_calibration(tmp_path, monkeypatch):
+    monkeypatch.delenv("GRAPHPM_BENCH_CONFORMANCE", raising=False)
+    bench = tmp_path / "BENCH_conformance.json"
+    bench.write_text('{"calibration": {"replay_streaming_crossover": 999}}')
+    cal = load_calibration(conformance_path=str(bench))
+    assert cal["replay_streaming_crossover"] == 1 << 18  # clamped floor
+    bench.write_text(
+        '{"calibration": {"replay_streaming_crossover": 1048576}}'
+    )
+    cal = load_calibration(conformance_path=str(bench))
+    assert cal["replay_streaming_crossover"] == 1 << 20
+    # explicit engine arg wins over any calibration record
+    monkeypatch.setenv("GRAPHPM_BENCH_CONFORMANCE", str(bench))
+    eng = QueryEngine(replay_crossover=123)
+    assert eng.replay_crossover == 123
+    eng2 = QueryEngine()
+    assert eng2.replay_crossover == 1 << 20

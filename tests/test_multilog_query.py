@@ -326,10 +326,17 @@ def test_union_empty_window_short_circuits(two_mmlogs):
     assert q2.dfg().from_cache  # differently phrased, same entry
     r3 = q1.histogram()
     assert not r3.value.any() and eng.stats.rows_scanned == 0
-    # compare also short-circuits on the canonical empty window
+    # compare also short-circuits the Ψ matrices on the canonical empty
+    # window; its whole-log fitness signal pays its streaming replay scans
+    # exactly once (model discovery + per-branch replay), then the memo
+    # serves every later compare without touching the logs again
     rc = Q.logs((log_a, "a"), (log_b, "b")).using(eng).window(5.0, 3.0).compare()
     assert not any(p.any() for p in rc.value.psis)
-    assert eng.stats.rows_scanned == 0
+    after_fitness = eng.stats.rows_scanned
+    assert after_fitness > 0  # real fitness even with budget 0 (streaming)
+    rc2 = Q.logs((log_a, "a"), (log_b, "b")).using(eng).window(9.0, 2.0).compare()
+    assert rc2.value.fitness == rc.value.fitness
+    assert eng.stats.rows_scanned == after_fitness  # memo: no rescan
 
 
 def test_union_fingerprint_is_composite_and_prefix_preserving(two_mmlogs):
@@ -463,12 +470,27 @@ def test_concat_rejects_colliding_trace_namespaces():
         concat_repositories([("a", r1), ("a/x", r2)])
 
 
-def test_compare_fitness_none_beyond_budget(two_mmlogs):
+def test_compare_fitness_streams_beyond_budget(two_mmlogs):
+    """Out-of-budget branches no longer report None: model discovery and
+    replay both run as one-pass streaming scans (repro.conformance)."""
+    from repro.conformance import (
+        StreamingModelDiscoverer,
+        replay_fitness_streaming,
+    )
+
     eng = QueryEngine(memory_budget_events=0)  # nothing materializes
     cr = Q.logs((two_mmlogs[0], "a"), (two_mmlogs[1], "b")).using(
         eng
     ).compare().value
-    assert cr.fitness == (None, None)
+    ref = two_mmlogs[0]
+    disc = StreamingModelDiscoverer(ref.num_activities)
+    for a, c, t in ref.iter_chunks():
+        disc.update(a, c, t)
+    model = disc.finalize(ref.activity_labels())
+    want = tuple(
+        replay_fitness_streaming(log, model).fitness for log in two_mmlogs
+    )
+    assert cr.fitness == pytest.approx(want)
     # the Ψ matrices still compare exactly (streamed per branch)
     np.testing.assert_array_equal(
         cr.psis[0],
@@ -611,14 +633,20 @@ def test_calibration_fallback_and_load(tmp_path, monkeypatch):
         TINY_PAIRS,
     )
 
+    from repro.query.planner import REPLAY_STREAMING_CROSSOVER
+
     monkeypatch.delenv("GRAPHPM_BENCH_QUERY", raising=False)
     monkeypatch.delenv("GRAPHPM_BENCH_GRAPH", raising=False)
+    monkeypatch.delenv("GRAPHPM_BENCH_CONFORMANCE", raising=False)
     missing = str(tmp_path / "nope.json")
-    cal = load_calibration(missing, graph_path=missing)
+    cal = load_calibration(
+        missing, graph_path=missing, conformance_path=missing
+    )
     assert cal == {
         "tiny_pairs": TINY_PAIRS,
         "memory_budget_events": MEMORY_BUDGET_EVENTS,
         "graph_repeat_crossover": GRAPH_REPEAT_CROSSOVER,
+        "replay_streaming_crossover": REPLAY_STREAMING_CROSSOVER,
     }
 
     bench = tmp_path / "BENCH_query.json"
