@@ -34,6 +34,7 @@ def main() -> None:
         bench_kernels,
         bench_memory_scaling,
         bench_multilog,
+        bench_obs,
         bench_query_engine,
         roofline_table,
     )
@@ -48,6 +49,7 @@ def main() -> None:
         (bench_multilog, "multilog"),
         (bench_graph, "graph"),
         (bench_conformance, "conformance"),
+        (bench_obs, "obs"),
         (roofline_table, "roofline"),
     ):
         try:

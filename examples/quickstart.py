@@ -83,3 +83,28 @@ print(f"optimal alignments (batched per variant, kernels/align_dp): "
       f"mean fitness {ali.value.fitness:.4f}, "
       f"mean cost {float(ali.value.trace_cost.mean()):.2f}, "
       f"cheapest model walk = {ali.value.empty_cost} moves")
+
+# --- 7. observability: traces, metrics, and self-mining forensics -----------
+# every result carries a trace of timed spans plus the planner's prediction
+tr = again.trace
+print(f"\ntrace q{tr.query_id}: backend={tr.executed_backend} "
+      f"(planned={tr.planned_backend}) total={tr.total_s * 1e3:.3f}ms "
+      f"coverage={tr.coverage() * 100:.1f}%")
+print("  spans: " + ", ".join(
+    f"{s.name}={s.duration_s * 1e3:.3f}ms" for s in tr.spans))
+# explain(after=...) diffs the prediction against what actually ran
+print(Q.log(repo).window(t0, t1).explain(after=again))
+
+# the engine's counters/histograms export as dict, JSON lines, or Prometheus
+snap = default_engine().metrics_snapshot()
+lat = snap["query_latency_seconds{backend=cache,sink=dfg}"]
+print(f"\ncache-hit latency: p50={lat['p50'] * 1e6:.0f}us "
+      f"p99={lat['p99'] * 1e6:.0f}us over {lat['count']} hits "
+      f"(hit ratio {snap['engine_cache_hit_ratio']:.2f})")
+
+# self-mining: the engine's own spans are an event log — mine the miner
+own = default_engine().own_telemetry()
+forensics = Q.log(own).dfg()
+print(f"forensics DFG over {own.num_events} engine events "
+      f"({len(forensics.names)} phases): a full scan is the chain "
+      f"parse -> cache_probe -> plan -> scan -> sink; hits stop at the probe")

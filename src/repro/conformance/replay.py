@@ -23,7 +23,8 @@ so discovery never needs to materialize the log either.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple, Union
+from time import perf_counter
+from typing import Callable, Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -157,8 +158,13 @@ class StreamingReplayer:
         names: Sequence[str],
         model: Union[DiscoveredModel, ModelSpec],
         state: Optional[ReplayState] = None,
+        observer: Optional[Callable[[float, int], None]] = None,
     ):
         self.names = list(names)
+        # per-chunk timing hook, called as ``observer(seconds, rows)``
+        # after every non-empty update — the engine wires this to its
+        # ``replay_chunk_seconds`` histogram
+        self.observer = observer
         a = len(self.names)
         self.allowed, self.start_ok, self.end_ok = model_tables(
             model, self.names
@@ -199,8 +205,9 @@ class StreamingReplayer:
         state: ReplayState,
         names: Sequence[str],
         model: Union[DiscoveredModel, ModelSpec],
+        observer: Optional[Callable[[float, int], None]] = None,
     ) -> "StreamingReplayer":
-        return cls(names, model, state=state)
+        return cls(names, model, state=state, observer=observer)
 
     def _grow(self, max_case: int) -> None:
         c = self.last_act.shape[0]
@@ -222,6 +229,8 @@ class StreamingReplayer:
         n = activity.shape[0]
         if n == 0:
             return
+        obs = self.observer
+        t0 = perf_counter() if obs is not None else 0.0
         self.events_seen += int(n)
         order = np.lexsort((np.arange(n), time, case))
         a = np.asarray(activity)[order].astype(np.int64)
@@ -268,6 +277,9 @@ class StreamingReplayer:
         re_[:-1] = c[:-1] != c[1:]
         re_idx = np.nonzero(re_)[0]
         self.last_act[c[re_idx]] = a[re_idx].astype(np.int32)
+
+        if obs is not None:
+            obs(perf_counter() - t0, int(n))
 
     def finalize(self) -> ReplayResult:
         """Score the scanned stream (non-destructive: end contributions come

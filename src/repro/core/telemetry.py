@@ -13,7 +13,8 @@ from __future__ import annotations
 import contextlib
 import threading
 import time as _time
-from typing import Dict, List, Optional, Tuple
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -27,15 +28,24 @@ class EventCollector:
 
     ``case`` is typically ``step-<n>`` (each training step is one trace),
     ``activity`` a phase name.  ``record`` is O(1); conversion to a
-    repository is deferred."""
+    repository is deferred.
 
-    def __init__(self, log_name: str = "runtime"):
+    ``max_events`` turns the collector into a ring buffer: the oldest
+    events are evicted once the bound is reached and counted in
+    :attr:`dropped` (surfaced as a gauge in the engine's metrics
+    registry).  Default is unbounded — long-lived serving processes
+    should bound it (``ServeEngine`` and ``QueryEngine`` do)."""
+
+    def __init__(self, log_name: str = "runtime",
+                 max_events: Optional[int] = None):
         self.log_name = log_name
+        self.max_events = max_events
         self._lock = threading.Lock()
-        self._cases: List[str] = []
-        self._activities: List[str] = []
-        self._times: List[float] = []
-        self._durations: List[float] = []
+        self._cases: deque = deque(maxlen=max_events)
+        self._activities: deque = deque(maxlen=max_events)
+        self._times: deque = deque(maxlen=max_events)
+        self._durations: deque = deque(maxlen=max_events)
+        self._recorded = 0
 
     def record(
         self,
@@ -51,6 +61,35 @@ class EventCollector:
                 timestamp if timestamp is not None else _time.perf_counter()
             )
             self._durations.append(duration)
+            self._recorded += 1
+
+    def record_many(
+        self,
+        cases: Union[str, Sequence[str]],
+        activities: Sequence[str],
+        timestamps: Sequence[float],
+        durations: Optional[Sequence[float]] = None,
+    ) -> None:
+        """Batch append taking the lock once — the engine's forensics
+        hook records a whole query trace per call.  ``cases`` may be a
+        single case id broadcast over every event."""
+        n = len(activities)
+        if isinstance(cases, str):
+            cases = [cases] * n
+        if durations is None:
+            durations = [0.0] * n
+        with self._lock:
+            self._cases.extend(cases)
+            self._activities.extend(activities)
+            self._times.extend(timestamps)
+            self._durations.extend(durations)
+            self._recorded += n
+
+    @property
+    def dropped(self) -> int:
+        """Events evicted by the ring buffer since construction."""
+        with self._lock:
+            return self._recorded - len(self._cases)
 
     @contextlib.contextmanager
     def span(self, case: str, activity: str):

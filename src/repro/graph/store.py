@@ -34,6 +34,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core.streaming import MemmapLog, MinerState, StreamingDFGMiner
+from repro.obs import MetricsRegistry
 
 from .build import CSR, EventGraph, build_graph, csr_from_dense
 
@@ -228,6 +229,11 @@ def extend_graph(
 
 @dataclasses.dataclass
 class GraphStoreStats:
+    """Point-in-time snapshot; the live counters sit in the store's
+    :class:`repro.obs.MetricsRegistry` (shared with the engine's when the
+    engine constructed the store), so increments are lock-protected —
+    builds/extends used to bump bare ints outside the store lock."""
+
     builds: int = 0
     extends: int = 0  # append-proven CSR extensions (suffix-only scans)
     hits: int = 0
@@ -249,11 +255,15 @@ class GraphStore:
         max_graphs: int = 8,
         memory_budget_events: Optional[int] = None,
         backend: str = "auto",
+        metrics: Optional[MetricsRegistry] = None,
     ):
         self.max_graphs = max_graphs
         self.memory_budget_events = memory_budget_events
         self.backend = backend
-        self.stats = GraphStoreStats()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c_builds = self.metrics.counter("graph_store_builds_total")
+        self._c_extends = self.metrics.counter("graph_store_extends_total")
+        self._c_hits = self.metrics.counter("graph_store_hits_total")
         self._graphs: "OrderedDict[str, EventGraph]" = OrderedDict()
         self._hints: Dict[str, str] = {}  # memmap realpath → newest fp
         self._lock = threading.Lock()
@@ -262,6 +272,14 @@ class GraphStore:
         # work — and the registry lock is never held across a build, so
         # O(1) hits on other sources proceed during one
         self._building: Dict[str, threading.Event] = {}
+
+    @property
+    def stats(self) -> GraphStoreStats:
+        return GraphStoreStats(
+            builds=self._c_builds.value,
+            extends=self._c_extends.value,
+            hits=self._c_hits.value,
+        )
 
     def __len__(self) -> int:
         with self._lock:
@@ -285,7 +303,7 @@ class GraphStore:
             g = self._graphs.get(fp)
             if g is not None:
                 self._graphs.move_to_end(fp)
-                self.stats.hits += 1
+                self._c_hits.inc()
             return g
 
     def _register_locked(
@@ -339,7 +357,7 @@ class GraphStore:
                 g = self._graphs.get(fp)  # re-check: lost a build race
                 if g is not None:
                     self._graphs.move_to_end(fp)
-                    self.stats.hits += 1
+                    self._c_hits.inc()
                     return g
                 gate = self._building.get(fp)
                 if gate is None:
@@ -367,7 +385,7 @@ class GraphStore:
                         source_fp=fp,
                     )
                     old_fp = old.source_fp
-                    self.stats.extends += 1
+                    self._c_extends.inc()
                 else:
                     with self._lock:
                         self._hints.pop(hint, None)
@@ -378,7 +396,7 @@ class GraphStore:
                     memory_budget_events=self.memory_budget_events,
                     source_fp=fp,
                 )
-                self.stats.builds += 1
+                self._c_builds.inc()
             with self._lock:
                 self._register_locked(fp, g, hint, replaced_fp=old_fp)
             return g

@@ -137,3 +137,10 @@ def dfg_count_diced(
         window=window.astype(jnp.float32).reshape(1, 2),
     )
     return out[:num_activities, :num_activities].astype(jnp.int32)
+
+# Timing hook: every call lands in the process-global kernel registry as
+# kernel_seconds{kernel=...} (see repro.kernels.timing).
+from ..timing import timed_kernel
+
+dfg_count = timed_kernel("dfg_count", dfg_count)
+dfg_count_diced = timed_kernel("dfg_count_diced", dfg_count_diced)

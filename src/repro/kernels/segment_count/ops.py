@@ -72,3 +72,9 @@ def segment_count(
         interpret=interpret,
     )
     return out[:num_segments].astype(jnp.int32)
+
+# Timing hook: every call lands in the process-global kernel registry as
+# kernel_seconds{kernel=segment_count} (see repro.kernels.timing).
+from ..timing import timed_kernel
+
+segment_count = timed_kernel("segment_count", segment_count)

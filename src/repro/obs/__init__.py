@@ -1,0 +1,39 @@
+"""``repro.obs`` — observability for the process-query engine.
+
+Three pieces, all dependency-free (stdlib + numpy) so every engine tier can
+import them without cycles:
+
+* :mod:`repro.obs.trace` — :class:`QueryTrace`, a per-query execution trace
+  of timed spans (parse → cache-probe → plan → scan/resume → merge → sink)
+  attached to every :class:`repro.query.QueryResult` as ``result.trace``.
+  Always-on and near-zero overhead: preallocated span slabs, raw
+  ``perf_counter`` reads, no string formatting on the hot path.
+* :mod:`repro.obs.metrics` — a lock-protected :class:`MetricsRegistry` of
+  counters and streaming histograms (p50/p95/p99 from fixed log-scale
+  buckets, no sample retention), exported as a dict, JSON lines, or
+  Prometheus text.  A module-global :func:`kernel_registry` collects Pallas
+  kernel wall-times via :mod:`repro.kernels.timing`.
+* Self-mining forensics — the engine batches every finished trace into a
+  :class:`repro.core.telemetry.EventCollector`, so
+  ``Q.log(engine.own_telemetry())`` mines the engine's own process with the
+  engine itself (the paper's Algorithm 1 over the engine's spans).
+"""
+
+from .metrics import (
+    Counter,
+    Histogram,
+    MetricsRegistry,
+    kernel_registry,
+    prometheus_text,
+)
+from .trace import Span, QueryTrace
+
+__all__ = [
+    "Counter",
+    "Histogram",
+    "MetricsRegistry",
+    "kernel_registry",
+    "prometheus_text",
+    "Span",
+    "QueryTrace",
+]

@@ -1,0 +1,207 @@
+"""Per-query execution traces.
+
+A :class:`QueryTrace` is its own recorder: three preallocated parallel
+slabs (name / start / duration) grown by doubling, written with nothing
+but ``perf_counter`` reads and list stores.  The engine opens spans with
+``begin`` (returns a slot index) and closes them with ``end`` — no
+context-manager allocation, no string formatting, no dict churn on the
+hot path.  Everything derived (span objects, coverage, dicts, pretty
+text) is computed lazily at read time.
+
+Span vocabulary used by the engine (a query's trace is a chain, so the
+engine's own process mines as a DFG — see ``QueryEngine.own_telemetry``):
+
+``parse`` → ``cache_probe`` → [``delta``] → ``plan`` → ``scan`` |
+``merge`` → ``sink``
+"""
+
+from __future__ import annotations
+
+from time import perf_counter
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+__all__ = ["Span", "QueryTrace", "NullTrace"]
+
+_SLAB = 8
+
+
+class Span(NamedTuple):
+    name: str
+    start_s: float      # offset from trace start
+    duration_s: float
+
+
+class QueryTrace:
+    """Timed spans plus planner/cache/graph disposition for one query."""
+
+    #: class-level flag: NullTrace instances report False, letting the
+    #: engine skip publishing (metrics / forensics) without isinstance
+    enabled = True
+
+    __slots__ = (
+        "query_id", "sink", "source", "planned_backend",
+        "executed_backend", "from_cache", "predicted_cost_s",
+        "actual_cost_s", "rows_scanned", "delta_rows", "total_s",
+        "branches", "drift", "notes",
+        "_t_start", "_names", "_t0", "_dur", "_n",
+    )
+
+    def __init__(self, query_id: int, sink: str, source: str):
+        self.query_id = query_id
+        self.sink = sink
+        self.source = source
+        self.planned_backend: Optional[str] = None
+        self.executed_backend: Optional[str] = None
+        self.from_cache = False
+        self.predicted_cost_s: Optional[float] = None
+        self.actual_cost_s: Optional[float] = None
+        self.rows_scanned = 0
+        self.delta_rows: Optional[Tuple[int, int]] = None
+        self.total_s = 0.0
+        self.branches: List[Tuple[str, "QueryTrace"]] = []
+        self.drift: Optional[float] = None
+        self.notes: Dict[str, object] = {}
+        self._names: List[Optional[str]] = [None] * _SLAB
+        self._t0 = [0.0] * _SLAB
+        self._dur = [0.0] * _SLAB
+        self._n = 0
+        self._t_start = perf_counter()
+
+    # -- hot path ---------------------------------------------------------
+
+    def begin(self, name: str) -> int:
+        i = self._n
+        if i == len(self._names):
+            self._names.extend([None] * i)
+            self._t0.extend([0.0] * i)
+            self._dur.extend([0.0] * i)
+        self._names[i] = name
+        self._dur[i] = -1.0
+        self._n = i + 1
+        self._t0[i] = perf_counter()
+        return i
+
+    def end(self, idx: int) -> None:
+        self._dur[idx] = perf_counter() - self._t0[idx]
+
+    def finish(self) -> "QueryTrace":
+        t = perf_counter()
+        self.total_s = t - self._t_start
+        for i in range(self._n):        # close spans orphaned by errors
+            if self._dur[i] < 0.0:
+                self._dur[i] = t - self._t0[i]
+        return self
+
+    # -- read side --------------------------------------------------------
+
+    def raw_spans(self):
+        """``(names, start_stamps, durations)`` slab slices for batch
+        forensics recording — the stamps are absolute ``perf_counter``
+        values, so cross-query ordering survives in the collector."""
+        n = self._n
+        return self._names[:n], self._t0[:n], self._dur[:n]
+
+    @property
+    def spans(self) -> List[Span]:
+        t0 = self._t_start
+        return [
+            Span(self._names[i], self._t0[i] - t0, max(self._dur[i], 0.0))
+            for i in range(self._n)
+        ]
+
+    def span_seconds(self, name: str) -> float:
+        total = 0.0
+        for i in range(self._n):
+            if self._names[i] == name and self._dur[i] > 0.0:
+                total += self._dur[i]
+        return total
+
+    def coverage(self) -> float:
+        """Fraction of wall time covered by recorded spans (spans are
+        sequential and non-overlapping, so a plain sum is exact)."""
+        if self.total_s <= 0.0:
+            return 1.0
+        covered = sum(max(self._dur[i], 0.0) for i in range(self._n))
+        return min(covered / self.total_s, 1.0)
+
+    def add_branch(self, name: str, trace: "QueryTrace") -> None:
+        self.branches.append((name, trace))
+
+    def to_dict(self) -> Dict[str, object]:
+        d: Dict[str, object] = {
+            "query_id": self.query_id,
+            "sink": self.sink,
+            "source": self.source,
+            "planned_backend": self.planned_backend,
+            "executed_backend": self.executed_backend,
+            "from_cache": self.from_cache,
+            "predicted_cost_s": self.predicted_cost_s,
+            "actual_cost_s": self.actual_cost_s,
+            "rows_scanned": self.rows_scanned,
+            "total_s": self.total_s,
+            "coverage": self.coverage(),
+            "spans": [
+                {"name": s.name, "start_s": s.start_s,
+                 "duration_s": s.duration_s}
+                for s in self.spans
+            ],
+        }
+        if self.delta_rows is not None:
+            d["delta_rows"] = list(self.delta_rows)
+        if self.drift is not None:
+            d["drift"] = self.drift
+        if self.notes:
+            d["notes"] = dict(self.notes)
+        if self.branches:
+            d["branches"] = [
+                {"name": n, "trace": t.to_dict()} for n, t in self.branches
+            ]
+        return d
+
+    def describe(self) -> str:
+        head = (
+            f"trace q{self.query_id} sink={self.sink} "
+            f"backend={self.executed_backend}"
+        )
+        if self.planned_backend and self.planned_backend != self.executed_backend:
+            head += f" (planned={self.planned_backend})"
+        lines = [
+            head,
+            f"  total={self.total_s * 1e3:.3f}ms "
+            f"coverage={self.coverage() * 100.0:.1f}% "
+            f"rows={self.rows_scanned}",
+        ]
+        for s in self.spans:
+            lines.append(
+                f"  {s.name:<12s} +{s.start_s * 1e3:8.3f}ms  "
+                f"{s.duration_s * 1e3:8.3f}ms"
+            )
+        for name, sub in self.branches:
+            lines.append(
+                f"  branch {name}: backend={sub.executed_backend} "
+                f"cache={sub.from_cache} rows={sub.rows_scanned} "
+                f"total={sub.total_s * 1e3:.3f}ms"
+            )
+        return "\n".join(lines)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (
+            f"QueryTrace(q{self.query_id}, sink={self.sink!r}, "
+            f"backend={self.executed_backend!r}, spans={self._n}, "
+            f"total={self.total_s:.6f}s)"
+        )
+
+
+class NullTrace(QueryTrace):
+    """Recorder used when the engine runs with ``trace=False`` (e.g. the
+    overhead benchmark's baseline): span begin/end are no-ops and the
+    engine publishes nothing.  Disposition attributes still accept writes,
+    so the execution paths stay branch-free."""
+
+    enabled = False
+
+    def begin(self, name: str) -> int:
+        return 0
+
+    def end(self, idx: int) -> None:
+        return None

@@ -62,6 +62,8 @@ from .execute import (
     default_engine,
     set_default_engine,
 )
+from repro.obs import MetricsRegistry, QueryTrace
+
 from .optimize import canonicalize, distribute_over_union
 from .planner import (
     PhysicalPlan,
@@ -83,6 +85,7 @@ __all__ = [
     "prefix_digest", "parse_memmap_fingerprint",
     "MemmapFingerprint", "ResumableState",
     "QueryEngine", "QueryResult", "CompareResult", "EngineStats",
+    "MetricsRegistry", "QueryTrace",
     "default_engine", "set_default_engine",
     "canonicalize", "distribute_over_union",
     "plan_physical", "PhysicalPlan", "SourceInfo", "source_info",

@@ -606,11 +606,14 @@ class Query:
     def logical_plan(self, sink: Sink) -> LogicalPlan:
         return LogicalPlan(self._kind, self.ops, sink)
 
-    def explain(self, sink: Optional[Sink] = None) -> str:
+    def explain(self, sink: Optional[Sink] = None, after=None) -> str:
+        """Planner-side explanation; pass ``after=`` a prior
+        :class:`QueryResult` (or its trace) to diff prediction vs. what
+        actually ran."""
         from .execute import default_engine
 
         engine = self._engine or default_engine()
-        return engine.explain(self, sink or DFGSink())
+        return engine.explain(self, sink or DFGSink(), after=after)
 
 
 class Q:

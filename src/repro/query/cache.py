@@ -277,6 +277,11 @@ def _copy_result(result):
         out.value = copy.deepcopy(value)
     if result.names is not None:
         out.names = list(result.names)
+    # Traces describe one concrete execution; a stored entry must not leak
+    # the producing run's spans into later hits (the engine attaches a fresh
+    # cache-hit trace to each served copy).
+    if getattr(out, "trace", None) is not None:
+        out.trace = None
     return out
 
 

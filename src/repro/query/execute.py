@@ -26,6 +26,8 @@ Algorithm 1 oracle.
 from __future__ import annotations
 
 import dataclasses
+import json
+import logging
 import os
 import threading
 import time
@@ -48,6 +50,7 @@ from repro.core.discovery import DiscoveredModel, discover_dependency_graph
 from repro.core.distributed import distributed_dfg
 from repro.core.repository import EventRepository, concat_repositories
 from repro.core.streaming import MemmapLog, StreamingDFGMiner, memmap_log_name
+from repro.core.telemetry import EventCollector
 from repro.core.variants import trace_variants, variant_filtered_repository
 from repro.core.views import HIDDEN
 from repro.graph import (
@@ -57,6 +60,8 @@ from repro.graph import (
     derive_process_map,
 )
 from repro.graph.build import EventGraph
+from repro.obs import MetricsRegistry, QueryTrace, kernel_registry
+from repro.obs.trace import NullTrace
 
 from .ast import (
     CONFORMANCE_SINKS,
@@ -92,10 +97,13 @@ from .optimize import canonicalize, compose_views, distribute_over_union
 from .planner import (
     PhysicalPlan,
     SourceInfo,
+    estimate_cost_s,
     load_calibration,
     plan_physical,
     source_info,
 )
+
+_LOG = logging.getLogger("repro.obs")
 
 __all__ = [
     "QueryResult",
@@ -126,10 +134,23 @@ class QueryResult:
     from_cache: bool
     wall_s: float
     rewrites: Tuple[str, ...] = ()
+    # per-query execution trace (repro.obs) — always attached; None only
+    # when the engine was constructed with trace=False
+    trace: Optional[QueryTrace] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
 
 @dataclasses.dataclass
 class EngineStats:
+    """Point-in-time snapshot of the engine's counters.
+
+    The live counters sit in the engine's lock-protected
+    :class:`repro.obs.MetricsRegistry` (``engine.metrics``); every read of
+    ``engine.stats`` rebuilds this dataclass from them, so concurrent
+    ``run()`` calls can never lose increments the way the old bare-``int``
+    attributes could."""
+
     queries: int = 0
     executions: int = 0  # backend runs (cache misses, incl. delta scans)
     cache_hits: int = 0
@@ -289,6 +310,22 @@ def _collect(repo: Optional[EventRepository], logical: LogicalPlan) -> _Collecte
     return st
 
 
+_SINK_LABELS: Dict[type, str] = {}
+
+
+def _sink_label(sink: Sink) -> str:
+    """Short metric label for a sink type (``DFGSink`` → ``dfg``), memoized
+    per type so the hot path never formats strings."""
+    t = type(sink)
+    lbl = _SINK_LABELS.get(t)
+    if lbl is None:
+        lbl = t.__name__.lower()
+        if lbl.endswith("sink"):
+            lbl = lbl[:-4]
+        _SINK_LABELS[t] = lbl
+    return lbl
+
+
 def _zero_outside(psi: np.ndarray, keep_ids: np.ndarray) -> np.ndarray:
     mask = np.zeros(psi.shape[0], dtype=bool)
     mask[keep_ids] = True
@@ -319,6 +356,10 @@ class QueryEngine:
         graph_crossover: Optional[int] = None,
         replay_crossover: Optional[int] = None,
         max_graphs: int = 8,
+        metrics: Optional[MetricsRegistry] = None,
+        trace: bool = True,
+        telemetry_max_events: Optional[int] = 1 << 16,
+        drift_ratio: float = 16.0,
     ):
         self.mesh = mesh
         # thresholds left unset fall back to the measured calibration
@@ -349,11 +390,46 @@ class QueryEngine:
             if replay_crossover is None
             else replay_crossover
         )
+        # live counters sit in one lock-protected registry (the old
+        # bare-int EngineStats attributes raced under concurrent run());
+        # ``.stats`` rebuilds the dataclass as a point-in-time snapshot
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._c_queries = m.counter("engine_queries_total")
+        self._c_executions = m.counter("engine_executions_total")
+        self._c_cache_hits = m.counter("engine_cache_hits_total")
+        self._c_delta_hits = m.counter("engine_delta_hits_total")
+        self._c_delta_free_hits = m.counter("engine_delta_free_hits_total")
+        self._c_rows = m.counter("engine_rows_scanned_total")
+        self._c_union = m.counter("engine_union_queries_total")
+        self._c_graph = m.counter("engine_graph_queries_total")
+        self._c_conformance = m.counter("engine_conformance_queries_total")
+        self._h_replay_chunk = m.histogram("replay_chunk_seconds")
+        self._h_delta_fraction = m.histogram("delta_suffix_fraction")
+        m.gauge("engine_cache_hit_ratio", self._cache_hit_ratio)
+        # always-on per-query tracing + self-mining forensics: every
+        # finished trace batches its spans into a bounded collector, so
+        # ``Q.log(engine.own_telemetry())`` mines the engine's own process
+        self.trace_enabled = trace
+        self.drift_ratio = drift_ratio
+        self.drift_min_s = 0.005
+        self.telemetry = EventCollector(
+            "engine", max_events=telemetry_max_events
+        )
+        m.gauge("telemetry_events", lambda: float(len(self.telemetry)))
+        m.gauge(
+            "telemetry_dropped_events",
+            lambda: float(self.telemetry.dropped),
+        )
+        # hot-path memo of query_latency_seconds{sink,backend} histograms
+        self._lat_hists: Dict[Tuple[str, str], "Histogram"] = {}
+        self._tls = threading.local()
         # built graphs keyed by source fingerprint; appends extend the CSR
         # over the proven suffix instead of rebuilding
         self.graphs = GraphStore(
             max_graphs=max_graphs,
             memory_budget_events=self.memory_budget_events,
+            metrics=self.metrics,
         )
         # per-source topology-query (miss) counter feeding the crossover
         self._topo_seen: "OrderedDict[str, int]" = OrderedDict()
@@ -362,7 +438,6 @@ class QueryEngine:
         # unless your timestamps do not round-trip through f32
         self.fused_dicing = fused_dicing
         self.cache = cache if cache is not None else QueryCache()
-        self.stats = EngineStats()
         # physical plans depend only on (canonical plan, source shape), not
         # on data bytes — keying on SourceInfo instead of the fingerprint
         # avoids one stale entry per append; LRU-bounded like the cache
@@ -385,56 +460,215 @@ class QueryEngine:
         self._max_model_memo = 16
         self._lock = threading.Lock()
 
+    @property
+    def stats(self) -> EngineStats:
+        """Point-in-time snapshot of the registry counters (the live
+        values are in ``self.metrics``)."""
+        return EngineStats(
+            queries=self._c_queries.value,
+            executions=self._c_executions.value,
+            cache_hits=self._c_cache_hits.value,
+            delta_hits=self._c_delta_hits.value,
+            delta_free_hits=self._c_delta_free_hits.value,
+            rows_scanned=self._c_rows.value,
+            union_queries=self._c_union.value,
+            graph_queries=self._c_graph.value,
+            conformance_queries=self._c_conformance.value,
+        )
+
+    def _cache_hit_ratio(self) -> float:
+        q = self._c_queries.value
+        return self._c_cache_hits.value / q if q else 0.0
+
+    def metrics_snapshot(self, floor: int = 0) -> Dict[str, object]:
+        """Engine registry + process-wide Pallas kernel timings, one flat
+        dict.  ``floor`` applies the serving tier's k-anonymity floor
+        (counts below it read as zero)."""
+        snap = self.metrics.to_dict(floor=floor)
+        snap.update(kernel_registry().to_dict(floor=floor))
+        return snap
+
+    # -- tracing / self-mining forensics -------------------------------------
+    def _trace_begin(self, qid: int, sink: Sink, source) -> QueryTrace:
+        if isinstance(source, UnionSource):
+            kind = "union"
+        elif isinstance(source, MemmapLog):
+            kind = "memmap"
+        else:
+            kind = "repository"
+        cls = QueryTrace if self.trace_enabled else NullTrace
+        tr = cls(qid, _sink_label(sink), kind)
+        stack = getattr(self._tls, "stack", None)
+        if stack is None:
+            stack = self._tls.stack = []
+        stack.append(tr)
+        return tr
+
+    def _current_trace(self) -> Optional[QueryTrace]:
+        stack = getattr(self._tls, "stack", None)
+        return stack[-1] if stack else None
+
+    def _trace_abort(self, tr: QueryTrace) -> None:
+        stack = getattr(self._tls, "stack", None)
+        if stack and stack[-1] is tr:
+            stack.pop()
+
+    def _note_rows(self, n: int) -> None:
+        """Row-scan accounting: the global counter plus attribution to the
+        query currently executing on this thread (union branches attribute
+        to their own trace; helper scans to the enclosing query)."""
+        if n <= 0:
+            return
+        self._c_rows.inc(n)
+        tr = self._current_trace()
+        if tr is not None:
+            tr.rows_scanned += n
+
+    def _trace_finish(
+        self, tr: QueryTrace, result: Optional[QueryResult]
+    ) -> None:
+        self._trace_abort(tr)
+        tr.finish()
+        if result is not None:
+            result.trace = tr if tr.enabled else None
+        if not tr.enabled:
+            return
+        key = (tr.sink, tr.executed_backend or "unknown")
+        hist = self._lat_hists.get(key)
+        if hist is None:
+            # memoized: the registry's get-or-create sorts label tuples
+            # under its lock — too slow for the per-query hot path
+            hist = self._lat_hists[key] = self.metrics.histogram(
+                "query_latency_seconds", sink=key[0], backend=key[1]
+            )
+        hist.observe(tr.total_s)
+        names, t0s, durs = tr.raw_spans()
+        if names:
+            self.telemetry.record_many(f"q{tr.query_id}", names, t0s, durs)
+        self._check_drift(tr)
+
+    def _check_drift(self, tr: QueryTrace) -> None:
+        """Calibration drift: the recorded cost contradicts the planner's
+        prior for the chosen backend by more than ``drift_ratio`` — count
+        it and emit one structured warning (feeds the crossover-curve
+        recalibration)."""
+        pred, act = tr.predicted_cost_s, tr.actual_cost_s
+        if (
+            pred is None or act is None or pred <= 0.0
+            or max(pred, act) < self.drift_min_s
+        ):
+            return
+        ratio = act / pred
+        if 1.0 / self.drift_ratio < ratio < self.drift_ratio:
+            return
+        tr.drift = ratio
+        backend = tr.executed_backend or "unknown"
+        self.metrics.counter("planner_drift_total", backend=backend).inc()
+        _LOG.warning(
+            "planner_cost_drift %s",
+            json.dumps({
+                "query_id": tr.query_id,
+                "sink": tr.sink,
+                "backend": backend,
+                "planned_backend": tr.planned_backend,
+                "predicted_cost_s": pred,
+                "actual_cost_s": act,
+                "ratio": ratio,
+                "rows_scanned": tr.rows_scanned,
+            }, sort_keys=True),
+        )
+
+    def _observe_replay_chunk(self, seconds: float, rows: int) -> None:
+        self._h_replay_chunk.observe(seconds)
+
+    def own_telemetry(self) -> EventRepository:
+        """The engine's own spans as a canonical event repository: each
+        query is one case, each span one event.  Feed it back through
+        ``Q.log`` and the engine mines its own process — cache hits,
+        delta resumes, and full scans surface as distinct DFG variants."""
+        return self.telemetry.to_repository()
+
     # -- public --------------------------------------------------------------
     def run(self, query: Query, sink: Sink) -> QueryResult:
-        t_start = time.perf_counter()
         if isinstance(query.source, UnionSource):
-            return self._run_union(query, sink, t_start)
-        with self._lock:
-            self.stats.queries += 1
-            if isinstance(sink, CONFORMANCE_SINKS):
-                self.stats.conformance_queries += 1
-        info = source_info(query.source)
-        logical, rewrites = canonicalize(
-            query.logical_plan(sink), info.activity_names
-        )
-        key = (fingerprint(query.source), logical.key())
-        cached = self.cache.get(key)
-        if cached is not None:
-            cached.from_cache = True
-            # report this hit's own latency (fingerprint + canonicalize +
-            # lookup), not the wall time of the original execution
-            cached.wall_s = time.perf_counter() - t_start
-            with self._lock:
-                self.stats.cache_hits += 1
-            return cached
-
-        if logical.source == "memmap":
-            delta = self._try_delta(
-                query.source, logical, key, tuple(rewrites), t_start
+            return self._run_union(query, sink)
+        qid = self._c_queries.inc()
+        if isinstance(sink, CONFORMANCE_SINKS):
+            self._c_conformance.inc()
+        tr = self._trace_begin(qid, sink, query.source)
+        try:
+            s = tr.begin("parse")
+            info = source_info(query.source)
+            logical, rewrites = canonicalize(
+                query.logical_plan(sink), info.activity_names
             )
-            if delta is not None:
-                return delta
+            key = (fingerprint(query.source), logical.key())
+            tr.end(s)
+            s = tr.begin("cache_probe")
+            cached = self.cache.get(key)
+            tr.end(s)
+            if cached is not None:
+                cached.from_cache = True
+                self._c_cache_hits.inc()
+                tr.from_cache = True
+                tr.planned_backend = cached.physical.backend
+                tr.executed_backend = "cache"
+                self._trace_finish(tr, cached)
+                # report this hit's own latency (fingerprint + canonicalize
+                # + lookup), not the wall time of the original execution
+                cached.wall_s = tr.total_s
+                return cached
 
-        graph_available = self._graph_available(query.source, key[0], logical)
-        physical = self._plan_cached(logical, info, graph_available)
+            if logical.source == "memmap":
+                delta = self._try_delta(
+                    query.source, logical, key, tuple(rewrites), tr
+                )
+                if delta is not None:
+                    self._trace_finish(tr, delta)
+                    if delta.from_cache:  # free rewrite: hit-style latency
+                        delta.wall_s = tr.total_s
+                    return delta
 
-        t0 = time.perf_counter()
-        value, names, resume = self._execute(
-            query.source, logical, physical, source_fp=key[0]
-        )
-        wall = time.perf_counter() - t0
-        with self._lock:
-            self.stats.executions += 1
-        result = QueryResult(
-            value=value, names=names, logical=logical, physical=physical,
-            from_cache=False, wall_s=wall, rewrites=tuple(rewrites),
-        )
-        self.cache.put(
-            key, result, resume=resume,
-            source_hint=self._source_hint(query.source),
-        )
-        return result
+            s = tr.begin("plan")
+            graph_available = self._graph_available(
+                query.source, key[0], logical
+            )
+            physical = self._plan_cached(logical, info, graph_available)
+            tr.end(s)
+            tr.planned_backend = physical.backend
+            if not isinstance(sink, CONFORMANCE_SINKS):
+                # conformance cost scales with variants x model size, which
+                # a per-backend events/s prior cannot see — recording a
+                # prediction there would make every replay look like drift
+                tr.predicted_cost_s = estimate_cost_s(
+                    physical.backend, info.num_events
+                )
+
+            s = tr.begin("scan")
+            t0 = time.perf_counter()
+            value, names, resume = self._execute(
+                query.source, logical, physical, source_fp=key[0]
+            )
+            wall = time.perf_counter() - t0
+            tr.end(s)
+            self._c_executions.inc()
+            tr.executed_backend = physical.backend
+            tr.actual_cost_s = wall
+            result = QueryResult(
+                value=value, names=names, logical=logical, physical=physical,
+                from_cache=False, wall_s=wall, rewrites=tuple(rewrites),
+            )
+            s = tr.begin("sink")
+            self.cache.put(
+                key, result, resume=resume,
+                source_hint=self._source_hint(query.source),
+            )
+            tr.end(s)
+            self._trace_finish(tr, result)
+            return result
+        except BaseException:
+            self._trace_abort(tr)
+            raise
 
     def _conformance_graph_ok(self, source) -> bool:
         """Conformance can use the graph tier only when the graph carries
@@ -500,7 +734,18 @@ class QueryEngine:
                 self._plans.popitem(last=False)
         return physical
 
-    def explain(self, query: Query, sink: Sink) -> str:
+    def explain(
+        self,
+        query: Query,
+        sink: Optional[Sink] = None,
+        after: Optional[object] = None,
+    ) -> str:
+        """Predicted plan for ``query``; with ``after=`` (a
+        :class:`QueryResult` or :class:`repro.obs.QueryTrace` from a
+        recorded run) the prediction is diffed against what actually
+        executed — backend, cost, spans, rows."""
+        if sink is None:
+            sink = DFGSink()
         info = source_info(query.source)
         logical, rewrites = canonicalize(
             query.logical_plan(sink), info.activity_names
@@ -541,6 +786,39 @@ class QueryEngine:
             f"physical: {physical.describe()}",
             f"plan key: {logical.key()}",
         ]
+        if after is not None:
+            tr = after.trace if isinstance(after, QueryResult) else after
+            lines.append("-- after: recorded trace --")
+            if tr is None:
+                lines.append(
+                    "trace   : (none recorded — engine trace=False)"
+                )
+            else:
+                exe = tr.executed_backend or "?"
+                verdict = (
+                    "matched prediction" if exe == physical.backend
+                    else f"!= predicted {physical.backend}"
+                )
+                lines.append(f"executed: {exe} ({verdict})")
+                pred, act = tr.predicted_cost_s, tr.actual_cost_s
+                if pred is not None and act is not None and pred > 0:
+                    drift = " [drift]" if tr.drift is not None else ""
+                    lines.append(
+                        f"cost    : predicted={pred:.6f}s "
+                        f"actual={act:.6f}s ratio={act / pred:.2f}x{drift}"
+                    )
+                spans = ", ".join(
+                    f"{sp.name}={sp.duration_s * 1e3:.3f}ms"
+                    for sp in tr.spans
+                )
+                lines.append(
+                    f"spans   : {spans} "
+                    f"(coverage {tr.coverage() * 100:.1f}%)"
+                )
+                lines.append(
+                    f"rows    : {tr.rows_scanned} scanned; "
+                    f"cache={'hit' if tr.from_cache else 'miss'}"
+                )
         return "\n".join(lines)
 
     # -- union / compare (multi-source) --------------------------------------
@@ -556,7 +834,7 @@ class QueryEngine:
         uidx = {n: i for i, n in enumerate(union_names)}
         return np.asarray([uidx[n] for n in branch_names], dtype=np.int64)
 
-    def _run_union(self, query: Query, sink: Sink, t_start: float) -> QueryResult:
+    def _run_union(self, query: Query, sink: Sink) -> QueryResult:
         """Execute a :class:`UnionSource` plan.
 
         Distributive sinks (DFG / histogram / compare) run one sub-query per
@@ -573,62 +851,81 @@ class QueryEngine:
         planner) — bit-identical by construction.
         """
         union: UnionSource = query.source
-        with self._lock:
-            self.stats.queries += 1
-            self.stats.union_queries += 1
-            if isinstance(sink, CONFORMANCE_SINKS):
-                self.stats.conformance_queries += 1
-        # derived from unresolved branch metadata: a cache hit must not pay
-        # an O(E) FromLogs materialization
-        union_names = union_activity_names(union)
-        logical, rewrites = canonicalize(
-            query.logical_plan(sink), union_names
-        )
-        fp = fingerprint(union)
-        key = (fp, logical.key())
-        cached = self.cache.get(key)
-        if cached is not None:
-            cached.from_cache = True
-            cached.wall_s = time.perf_counter() - t_start
-            with self._lock:
-                self.stats.cache_hits += 1
-            return cached
+        qid = self._c_queries.inc()
+        self._c_union.inc()
+        if isinstance(sink, CONFORMANCE_SINKS):
+            self._c_conformance.inc()
+        tr = self._trace_begin(qid, sink, union)
+        try:
+            s = tr.begin("parse")
+            # derived from unresolved branch metadata: a cache hit must not
+            # pay an O(E) FromLogs materialization
+            union_names = union_activity_names(union)
+            logical, rewrites = canonicalize(
+                query.logical_plan(sink), union_names
+            )
+            fp = fingerprint(union)
+            key = (fp, logical.key())
+            tr.end(s)
+            s = tr.begin("cache_probe")
+            cached = self.cache.get(key)
+            tr.end(s)
+            if cached is not None:
+                cached.from_cache = True
+                self._c_cache_hits.inc()
+                tr.from_cache = True
+                tr.planned_backend = cached.physical.backend
+                tr.executed_backend = "cache"
+                self._trace_finish(tr, cached)
+                cached.wall_s = tr.total_s
+                return cached
 
-        # miss: now resolve the branches (FromLogs memoizes its L×T dice)
-        info = source_info(union)
-        physical = self._plan_cached(logical, info)
-        t0 = time.perf_counter()
+            # miss: resolve the branches (FromLogs memoizes its L×T dice)
+            s = tr.begin("plan")
+            info = source_info(union)
+            physical = self._plan_cached(logical, info)
+            tr.end(s)
+            tr.planned_backend = physical.backend
 
-        if physical.backend == "concat":
-            value, names = self._execute_concat(union, info, logical, fp)
-        else:
-            st = _collect(None, logical)  # planner guaranteed barrier-free
-            if st.keep is not None:
-                _validate_keep(st.keep, union_names)
-            empty = st.window is not None and st.window.empty
-            if isinstance(logical.sink, CompareSink):
-                value, names = self._execute_compare(
-                    union, logical, st, union_names, empty=empty,
-                    union_fp=fp,
-                )
-            elif isinstance(logical.sink, CONFORMANCE_SINKS):
-                value, names = self._execute_conformance_union(
-                    union, logical, st, union_names
-                )
+            s = tr.begin("merge")
+            t0 = time.perf_counter()
+            if physical.backend == "concat":
+                value, names = self._execute_concat(union, info, logical, fp)
             else:
-                value, names = self._execute_union_merge(
-                    union, logical, st, union_names, empty=empty
-                )
-
-        wall = time.perf_counter() - t0
-        with self._lock:
-            self.stats.executions += 1
-        result = QueryResult(
-            value=value, names=names, logical=logical, physical=physical,
-            from_cache=False, wall_s=wall, rewrites=tuple(rewrites),
-        )
-        self.cache.put(key, result)
-        return result
+                st = _collect(None, logical)  # planner-guaranteed barrier-free
+                if st.keep is not None:
+                    _validate_keep(st.keep, union_names)
+                empty = st.window is not None and st.window.empty
+                if isinstance(logical.sink, CompareSink):
+                    value, names = self._execute_compare(
+                        union, logical, st, union_names, empty=empty,
+                        union_fp=fp,
+                    )
+                elif isinstance(logical.sink, CONFORMANCE_SINKS):
+                    value, names = self._execute_conformance_union(
+                        union, logical, st, union_names
+                    )
+                else:
+                    value, names = self._execute_union_merge(
+                        union, logical, st, union_names, empty=empty
+                    )
+            wall = time.perf_counter() - t0
+            tr.end(s)
+            self._c_executions.inc()
+            tr.executed_backend = physical.backend
+            tr.actual_cost_s = wall
+            result = QueryResult(
+                value=value, names=names, logical=logical, physical=physical,
+                from_cache=False, wall_s=wall, rewrites=tuple(rewrites),
+            )
+            s = tr.begin("sink")
+            self.cache.put(key, result)
+            tr.end(s)
+            self._trace_finish(tr, result)
+            return result
+        except BaseException:
+            self._trace_abort(tr)
+            raise
 
     def _branch_raw(
         self,
@@ -645,9 +942,12 @@ class QueryEngine:
             else:  # DFG, compare, and topology sinks all count per-branch Ψ
                 branch_sink = DFGSink(backend=logical.sink.backend)
         out = []
+        cur = self._current_trace()
         for branch in union.branches:
             src = branch.resolve()
             sub = self.run(Query(src, branch_ops, self), branch_sink)
+            if cur is not None and cur.enabled and sub.trace is not None:
+                cur.add_branch(branch.name, sub.trace)
             out.append((branch, src, sub.value))
         return out
 
@@ -782,12 +1082,15 @@ class QueryEngine:
         )
         pinned = dataclasses.replace(sink, model=spec)
         results = []
+        cur = self._current_trace()
         for branch in union.branches:
             src = branch.resolve()
             ops = self._branch_conformance_ops(
                 logical.ops, self._branch_names_of(src)
             )
             sub = self.run(Query(src, ops, self), pinned)
+            if cur is not None and cur.enabled and sub.trace is not None:
+                cur.add_branch(branch.name, sub.trace)
             results.append(sub.value)
         _dest_u, out_names = self._transform_tables(st, union_names)
 
@@ -900,9 +1203,12 @@ class QueryEngine:
         )
         pinned = FitnessSink(model=spec)
         out = []
+        cur = self._current_trace()
         for branch in union.branches:
             src = branch.resolve()
             sub = self.run(Query(src, (), self), pinned)
+            if cur is not None and cur.enabled and sub.trace is not None:
+                cur.add_branch(branch.name, sub.trace)
             out.append(float(sub.value.fitness))
         return tuple(out)
 
@@ -959,7 +1265,7 @@ class QueryEngine:
         logical: LogicalPlan,
         key: Tuple[str, str],
         rewrites: Tuple[str, ...],
-        t_start: float,
+        tr: QueryTrace,
     ) -> Optional[QueryResult]:
         """Append-aware path for a cache miss on a memmap source.
 
@@ -992,68 +1298,98 @@ class QueryEngine:
         cand = self.cache.delta_candidate(hint, plan_key)
         if cand is None:
             return None
-        old_fp, old_result, resume = cand
-        old = parse_memmap_fingerprint(old_fp)
-        if old is None or not 0 < old.num_events < log.num_events:
-            return None
-        if old.num_activities > log.num_activities:
-            return None  # vocabulary shrank: not an append-only change
-        if prefix_digest(log, old.num_events) != old.prefix:
-            # rewritten / truncated-and-regrown: stop consulting this hint
-            self.cache.drop_hint(hint, plan_key)
-            return None
+        s = tr.begin("delta")
+        try:
+            old_fp, old_result, resume = cand
+            old = parse_memmap_fingerprint(old_fp)
+            if old is None or not 0 < old.num_events < log.num_events:
+                return None
+            if old.num_activities > log.num_activities:
+                return None  # vocabulary shrank: not an append-only change
+            if prefix_digest(log, old.num_events) != old.prefix:
+                # rewritten / truncated-and-regrown: stop consulting this
+                # hint
+                self.cache.drop_hint(hint, plan_key)
+                return None
 
-        st = _collect(None, logical)  # barrier-free: no repo needed
-        names = memmap_activity_names(log)
-        if st.keep is not None:
-            _validate_keep(st.keep, names)
-        if st.window is not None and st.window.empty:
-            return None  # the zero-result short-circuit is cheaper
-        lo, hi = (
-            log.rows_for_window(st.window.t0, st.window.t1)
-            if st.window is not None
-            else (0, log.num_events)
-        )
+            st = _collect(None, logical)  # barrier-free: no repo needed
+            names = memmap_activity_names(log)
+            if st.keep is not None:
+                _validate_keep(st.keep, names)
+            if st.window is not None and st.window.empty:
+                return None  # the zero-result short-circuit is cheaper
+            lo, hi = (
+                log.rows_for_window(st.window.t0, st.window.t1)
+                if st.window is not None
+                else (0, log.num_events)
+            )
 
-        if hi <= old.num_events and old.num_activities == log.num_activities:
-            # free rewrite: every row the plan can touch lies in the proven
-            # prefix, so the cached result *is* the recompute, bit for bit
-            old_result.from_cache = True
-            old_result.wall_s = time.perf_counter() - t_start
-            with self._lock:
-                self.stats.delta_free_hits += 1
-            # republish under the new fingerprint: the next run is a plain hit
-            self.cache.put(key, old_result, resume=resume, source_hint=hint)
-            return old_result
+            if (
+                hi <= old.num_events
+                and old.num_activities == log.num_activities
+            ):
+                # free rewrite: every row the plan can touch lies in the
+                # proven prefix, so the cached result *is* the recompute,
+                # bit for bit
+                old_result.from_cache = True
+                self._c_delta_free_hits.inc()
+                tr.from_cache = True
+                tr.planned_backend = "delta"
+                tr.executed_backend = "delta_free"
+                tr.delta_rows = (old.num_events, old.num_events)
+                # republish under the new fingerprint: the next run is a
+                # plain hit
+                self.cache.put(
+                    key, old_result, resume=resume, source_hint=hint
+                )
+                return old_result
 
-        if resume is None or resume.rows_end > old.num_events:
-            return None
-        if isinstance(logical.sink, FitnessSink) and resume.replay is None:
-            return None
-        start = max(resume.rows_end, lo)
-        t0 = time.perf_counter()
-        value, out_names, new_resume = self._execute_delta(
-            log, logical, st, resume, start, hi
-        )
-        wall = time.perf_counter() - t0
-        physical = PhysicalPlan(
-            backend="delta",
-            row_range_window=(
-                (st.window.t0, st.window.t1) if st.window is not None else None
-            ),
-            activities_as_output_mask=st.keep is not None,
-            delta_rows=(start, hi),
-            notes=(f"resume@{start}", f"suffix_rows={hi - start}"),
-        )
-        with self._lock:
-            self.stats.executions += 1
-            self.stats.delta_hits += 1
-        result = QueryResult(
-            value=value, names=out_names, logical=logical, physical=physical,
-            from_cache=False, wall_s=wall, rewrites=rewrites,
-        )
-        self.cache.put(key, result, resume=new_resume, source_hint=hint)
-        return result
+            if resume is None or resume.rows_end > old.num_events:
+                return None
+            if (
+                isinstance(logical.sink, FitnessSink)
+                and resume.replay is None
+            ):
+                return None
+            start = max(resume.rows_end, lo)
+            tr.planned_backend = "delta"
+            tr.delta_rows = (start, hi)
+            tr.predicted_cost_s = estimate_cost_s(
+                "delta", max(hi - start, 0)
+            )
+            if log.num_events:
+                self._h_delta_fraction.observe(
+                    max(hi - start, 0) / log.num_events
+                )
+            t0 = time.perf_counter()
+            value, out_names, new_resume = self._execute_delta(
+                log, logical, st, resume, start, hi
+            )
+            wall = time.perf_counter() - t0
+            tr.executed_backend = "delta"
+            tr.actual_cost_s = wall
+            physical = PhysicalPlan(
+                backend="delta",
+                row_range_window=(
+                    (st.window.t0, st.window.t1)
+                    if st.window is not None
+                    else None
+                ),
+                activities_as_output_mask=st.keep is not None,
+                delta_rows=(start, hi),
+                notes=(f"resume@{start}", f"suffix_rows={hi - start}"),
+            )
+            self._c_executions.inc()
+            self._c_delta_hits.inc()
+            result = QueryResult(
+                value=value, names=out_names, logical=logical,
+                physical=physical, from_cache=False, wall_s=wall,
+                rewrites=rewrites,
+            )
+            self.cache.put(key, result, resume=new_resume, source_hint=hint)
+            return result
+        finally:
+            tr.end(s)
 
     def _execute_delta(
         self,
@@ -1065,12 +1401,12 @@ class QueryEngine:
         hi: int,
     ):
         names = memmap_activity_names(log)
-        with self._lock:
-            self.stats.rows_scanned += max(hi - start, 0)
+        self._note_rows(max(hi - start, 0))
         if isinstance(logical.sink, FitnessSink):
             dest, out_names = self._transform_tables(st, names)
             rep = StreamingReplayer.restore(
-                resume.replay, out_names, logical.sink.model
+                resume.replay, out_names, logical.sink.model,
+                observer=self._observe_replay_chunk,
             )
             for a, c, t in log.iter_chunks(row_range=(start, hi)):
                 rep.update(*self._apply_stream_transform(dest, a, c, t))
@@ -1137,6 +1473,10 @@ class QueryEngine:
             else source
         )
         st = _collect(repo, logical)
+        # full-scan backends read every event of the materialized repo;
+        # chunked paths (streaming/delta) and the graph tier attribute
+        # their own rows (a graph hit reads the CSR, not the log)
+        self._note_rows(repo.num_events)
         if st.keep is not None:
             _validate_keep(st.keep, st.repo.activity_names)
         if isinstance(logical.sink, DFGSink):
@@ -1499,8 +1839,7 @@ class QueryEngine:
         """
         fp = source_fp if source_fp is not None else fingerprint(source)
         g = self.graphs.graph_for(source, fp)
-        with self._lock:
-            self.stats.graph_queries += 1
+        self._c_graph.inc()
         names = list(g.activity_names)
         st = _collect(None, logical)  # planner guarantees barrier-free
         if st.keep is not None:
@@ -1683,8 +2022,7 @@ class QueryEngine:
         for a, c, t in log.iter_chunks():
             rows += a.shape[0]
             disc.update(*self._apply_stream_transform(dest, a, c, t))
-        with self._lock:
-            self.stats.rows_scanned += rows
+        self._note_rows(rows)
         return disc.finalize(out_names)
 
     def _streaming_conformance(
@@ -1711,9 +2049,10 @@ class QueryEngine:
                 log.rows_for_window(*window) if window
                 else (0, log.num_events)
             )
-        with self._lock:
-            self.stats.rows_scanned += max(rng[1] - rng[0], 0)
-        rep = StreamingReplayer(out_names, model)
+        self._note_rows(max(rng[1] - rng[0], 0))
+        rep = StreamingReplayer(
+            out_names, model, observer=self._observe_replay_chunk
+        )
         for a, c, t in log.iter_chunks(row_range=rng):
             rep.update(*self._apply_stream_transform(dest, a, c, t))
         resume = None
@@ -1745,8 +2084,7 @@ class QueryEngine:
         # so describe()/explain() always reflect what actually runs
         window = physical.row_range_window
         rng = log.rows_for_window(*window) if window else (0, log.num_events)
-        with self._lock:
-            self.stats.rows_scanned += max(rng[1] - rng[0], 0)
+        self._note_rows(max(rng[1] - rng[0], 0))
         if isinstance(logical.sink, DFGSink):
             miner = StreamingDFGMiner(log.num_activities)
             for a, c, t in log.iter_chunks(row_range=rng):

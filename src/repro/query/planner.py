@@ -81,6 +81,7 @@ __all__ = [
     "source_info",
     "plan_physical",
     "load_calibration",
+    "estimate_cost_s",
 ]
 
 #: below this many pairs, numpy beats any device dispatch
@@ -96,6 +97,45 @@ GRAPH_REPEAT_CROSSOVER = 3
 #: it to the memory budget (identical behavior to the budget gate), the
 #: measured value comes from BENCH_conformance.json
 REPLAY_STREAMING_CROSSOVER = MEMORY_BUDGET_EVENTS
+
+# Order-of-magnitude cost priors for the observability drift check: fixed
+# per-backend dispatch overhead plus an events-per-second throughput.
+# These exist so a recorded trace (repro.obs.QueryTrace) can be contrasted
+# with the planner's choice — they never influence planning itself, which
+# uses the measured calibration crossovers above.
+_COST_DISPATCH_S = {
+    "numpy": 5e-5,
+    "scatter": 3e-4,      # jit-cache lookup
+    "onehot": 3e-4,
+    "pallas": 3e-4,       # jit-cache lookup + host↔device transfers
+    "distributed": 1e-3,  # mesh collective setup
+    "graph": 5e-5,        # CSR lookup / densify
+}
+# Conservative CPU-measured throughputs (events/s), cold-path inclusive:
+# a cold scan on a memmap source pays materialization + masking on top of
+# the kernel itself, and the drift band (±16x by default) absorbs warm-path
+# speedups and accelerator headroom.  These priors never influence planning
+# — they only give traces a prediction to contrast with the measured span.
+_COST_RATE_EVENTS_S = {
+    "numpy": 2e7,
+    "scatter": 2e6,
+    "onehot": 1e6,
+    "pallas": 5e6,
+    "distributed": 1e7,
+    "streaming": 5e6,
+    "delta": 5e6,
+    "graph": 4e8,
+    "concat": 5e6,
+}
+
+
+def estimate_cost_s(backend: str, num_events: int) -> float:
+    """Prior execution cost (seconds) of ``backend`` over ``num_events``
+    events — the prediction a trace records so ``explain(after=...)`` and
+    the ``planner_drift_total`` counter can contrast it with the measured
+    span."""
+    rate = _COST_RATE_EVENTS_S.get(backend, 5e6)
+    return _COST_DISPATCH_S.get(backend, 1e-4) + num_events / rate
 
 
 # ---------------------------------------------------------------------------

@@ -52,9 +52,14 @@ class ServeEngine:
         self.q_chunk = q_chunk
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
-        # explicit None check: an empty collector is falsy (len == 0)
+        # explicit None check: an empty collector is falsy (len == 0).
+        # The default is ring-buffered: a long-lived server keeps the most
+        # recent 64Ki spans for forensics instead of growing without bound
+        # (drops are counted — see EventCollector.dropped).
         self.collector = (
-            collector if collector is not None else EventCollector("server")
+            collector
+            if collector is not None
+            else EventCollector("server", max_events=1 << 16)
         )
 
         self._prefill = jax.jit(

@@ -119,8 +119,17 @@ def _combine_policies(
 
 
 class QueryService:
-    def __init__(self, engine: Optional[QueryEngine] = None):
+    def __init__(
+        self,
+        engine: Optional[QueryEngine] = None,
+        *,
+        forensics_floor: int = 0,
+    ):
         self.engine = engine or QueryEngine()
+        # k-anonymity floor for the engine-introspection sinks ("forensics"
+        # and "metrics") when the request names no logs; when it does, the
+        # strictest of this and the named logs' combined floor applies
+        self.forensics_floor = int(forensics_floor)
         self._logs: Dict[str, object] = {}
         self._policies: Dict[str, Optional[AccessPolicy]] = {}
         self._lock = threading.Lock()
@@ -296,13 +305,79 @@ class QueryService:
             "edges": [list(e) for e in edges],
         }
 
+    # -- engine introspection -------------------------------------------------
+    def _introspection_floor(self, request: Dict) -> int:
+        """Floor for introspection sinks: named logs' combined grant (if
+        any) joined with the service-level ``forensics_floor`` — whichever
+        is strictest.  Engine spans aggregate *every* tenant's activity, so
+        a tenant must not see below any floor they are subject to."""
+        multi = request.get("logs")
+        names = [str(n) for n in multi] if multi else (
+            [request["log"]] if request.get("log") is not None else []
+        )
+        floor = self.forensics_floor
+        if names:
+            _, grant = self._resolve(names)
+            floor = max(floor, grant.floor)
+        return floor
+
+    def _introspect(self, request: Dict, sink: str) -> Dict:
+        floor = self._introspection_floor(request)
+        if sink == "metrics":
+            payload = {
+                "sink": "metrics",
+                "floor": floor,
+                "metrics": self.engine.metrics_snapshot(floor=floor),
+            }
+            if request.get("format") == "prometheus":
+                from repro.obs import kernel_registry, prometheus_text
+
+                payload["prometheus"] = prometheus_text(
+                    self.engine.metrics, kernel_registry()
+                )
+            return payload
+        # forensics: mine the engine's own span telemetry through the
+        # engine itself (the forensics query then shows up in the next one)
+        telemetry = self.engine.telemetry
+        events = len(telemetry)
+        if events == 0:
+            return {
+                "sink": "forensics", "floor": floor, "events": 0,
+                "dropped_events": telemetry.dropped,
+                "psi": [], "names": [],
+            }
+        res = Q.log(self.engine.own_telemetry()).using(self.engine).dfg()
+        psi = res.value
+        if floor:
+            psi = np.where(psi >= floor, psi, 0)
+        return {
+            "sink": "forensics",
+            "floor": floor,
+            "events": events,
+            "dropped_events": telemetry.dropped,
+            "psi": psi.tolist(),
+            "names": res.names,
+            "from_cache": res.from_cache,
+            "backend": res.physical.backend,
+            "wall_s": res.wall_s,
+        }
+
     def query(self, request: Dict) -> Dict:
         """Execute one request dict; returns a JSON-shaped response dict.
 
         ``{"log": name}`` targets a single registered log; ``{"logs":
         [name, ...]}`` targets their union (sinks ``dfg`` / ``histogram`` /
         ``variants`` merge; sink ``compare`` keeps the logs apart and
-        reports drift)."""
+        reports drift).
+
+        Two introspection sinks need no log at all: ``{"sink":
+        "forensics"}`` mines the engine's own execution spans into a DFG of
+        the serving process, and ``{"sink": "metrics"}`` snapshots the
+        engine's counters/histograms (``"format": "prometheus"`` adds the
+        text exposition).  Any request may set ``"trace": true`` to attach
+        the per-query execution trace to the response."""
+        if request.get("sink") in ("forensics", "metrics"):
+            return self._introspect(request, request["sink"])
         multi = request.get("logs")
         if multi is not None:
             names = [str(n) for n in multi]
@@ -448,4 +523,8 @@ class QueryService:
             "backend": res.physical.backend,
             "wall_s": res.wall_s,
         })
+        if request.get("trace"):
+            payload["trace"] = (
+                res.trace.to_dict() if res.trace is not None else None
+            )
         return payload

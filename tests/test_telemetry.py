@@ -1,0 +1,105 @@
+"""repro.core.telemetry — collector thread-safety, the ring-buffer mode,
+batch recording, StepTimer, and repository conversion ordering."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.telemetry import EventCollector, StepTimer
+
+
+def test_record_and_convert_orders_by_case_then_time():
+    c = EventCollector("t")
+    # interleaved arrival across two cases, timestamps out of arrival order
+    c.record("b", "x", timestamp=2.0)
+    c.record("a", "q", timestamp=5.0)
+    c.record("a", "p", timestamp=1.0)
+    c.record("b", "y", timestamp=3.0)
+    repo = c.to_repository()
+    acts = [repo.activity_names[i] for i in repo.event_activity]
+    # from_event_table stably sorts by (case, timestamp)
+    assert acts == ["p", "q", "x", "y"]
+    assert repo.num_events == 4
+
+
+def test_concurrent_record_thread_safety():
+    c = EventCollector("t")
+    N, M = 8, 500
+
+    def work(tid):
+        for i in range(M):
+            with c.span(f"case-{tid}", "phase"):
+                pass
+            c.record(f"case-{tid}", "done", timestamp=float(i))
+
+    threads = [threading.Thread(target=work, args=(t,)) for t in range(N)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(c) == N * M * 2
+    assert c.dropped == 0
+    repo = c.to_repository()
+    assert repo.num_events == N * M * 2
+
+
+def test_ring_buffer_keeps_newest_and_counts_drops():
+    c = EventCollector("t", max_events=10)
+    for i in range(25):
+        c.record("case", f"a{i}", timestamp=float(i))
+    assert len(c) == 10
+    assert c.dropped == 15
+    repo = c.to_repository()
+    acts = [repo.activity_names[i] for i in repo.event_activity]
+    assert acts == [f"a{i}" for i in range(15, 25)]  # newest 10 retained
+
+
+def test_record_many_broadcasts_case_and_batches():
+    c = EventCollector("t", max_events=5)
+    c.record_many("q1", ["a", "b", "c"], [1.0, 2.0, 3.0])
+    c.record_many(["q2", "q3"], ["d", "e"], [4.0, 5.0], durations=[0.1, 0.2])
+    assert len(c) == 5 and c.dropped == 0
+    c.record_many("q4", ["f", "g"], [6.0, 7.0])
+    assert len(c) == 5 and c.dropped == 2
+    repo = c.to_repository()
+    acts = [repo.activity_names[i] for i in repo.event_activity]
+    assert acts == ["c", "d", "e", "f", "g"]
+
+
+def test_unbounded_by_default():
+    c = EventCollector("t")
+    for i in range(10_000):
+        c.record("case", "a", timestamp=float(i))
+    assert len(c) == 10_000 and c.dropped == 0
+
+
+def test_span_records_duration():
+    c = EventCollector("t")
+    with c.span("case", "work"):
+        pass
+    ds = c.durations_by_activity()
+    assert "work" in ds and ds["work"].shape == (1,)
+    assert ds["work"][0] >= 0.0
+
+
+def test_straggler_report_flags_outlier():
+    c = EventCollector("t")
+    for i in range(6):
+        c.record("case", "fast", timestamp=float(i), duration=0.01)
+    c.record("case", "fast", timestamp=99.0, duration=1.0)
+    rep = c.straggler_report(threshold=3.0)
+    assert "fast" in rep and rep["fast"]["ratio"] > 3.0
+
+
+def test_step_timer_totals_and_counts():
+    t = StepTimer()
+    for _ in range(3):
+        with t.phase("load"):
+            pass
+    with t.phase("fwd"):
+        pass
+    s = t.summary()
+    assert s["load"][1] == 3 and s["fwd"][1] == 1
+    assert s["load"][0] >= 0.0
+    assert set(t.counts) == {"load", "fwd"}
