@@ -108,3 +108,9 @@ forensics = Q.log(own).dfg()
 print(f"forensics DFG over {own.num_events} engine events "
       f"({len(forensics.names)} phases): a full scan is the chain "
       f"parse -> cache_probe -> plan -> scan -> sink; hits stop at the probe")
+
+# the invariants behind all of the above are machine-checked: run
+#   python -m repro.analysis --fail-on-new        (lint: sinks/keys/locks)
+#   REPRO_LOCKDEP=1 pytest tests/test_obs.py      (runtime lock-order sanitizer)
+#   python -m repro.analysis --kernel-report BENCH_analysis.json
+# see the "Static analysis" section of README.md

@@ -1,0 +1,43 @@
+"""repro.analysis — engine-invariant static analysis + runtime sanitizers.
+
+Three layers keep the engine's correctness contracts machine-checked:
+
+* the AST lint (:mod:`.framework` + :mod:`.rules`) — backend coverage,
+  cache-key completeness, lock discipline, RNG/time hygiene — run as
+  ``python -m repro.analysis`` (CI gates on ``--fail-on-new`` against the
+  committed ``analysis_baseline.json``);
+* the Pallas resource checker (:mod:`.kernels_check`) — symbolic VMEM
+  bounds and tile-alignment checks over the kernels' BlockSpecs, asserted
+  by every ``pick_blocks`` and reported into ``BENCH_analysis.json``;
+* the runtime lock-order sanitizer (:mod:`.lockdep`) — under
+  ``REPRO_LOCKDEP=1`` every engine lock records acquisition order and
+  inversions fail fast.
+
+This module keeps imports lazy: :mod:`.lockdep` and
+:mod:`.kernels_check` are stdlib-only so the engine (which imports them at
+module load) never pulls the lint framework in.
+"""
+
+from .lockdep import LockOrderError, make_lock  # stdlib-only, engine-facing
+
+__all__ = [
+    "LockOrderError",
+    "make_lock",
+    "Finding",
+    "Project",
+    "run_rules",
+    "KernelResourceError",
+    "validate_blocks",
+]
+
+
+def __getattr__(name):  # lazy: the lint stack is CLI/test-facing
+    if name in ("Finding", "Project", "run_rules"):
+        from . import framework
+
+        return getattr(framework, name)
+    if name in ("KernelResourceError", "validate_blocks"):
+        from . import kernels_check
+
+        return getattr(kernels_check, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

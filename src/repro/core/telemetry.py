@@ -19,6 +19,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from .repository import EventRepository
+from ..analysis.lockdep import make_lock
 
 __all__ = ["EventCollector", "StepTimer"]
 
@@ -40,7 +41,7 @@ class EventCollector:
                  max_events: Optional[int] = None):
         self.log_name = log_name
         self.max_events = max_events
-        self._lock = threading.Lock()
+        self._lock = make_lock("EventCollector")
         self._cases: deque = deque(maxlen=max_events)
         self._activities: deque = deque(maxlen=max_events)
         self._times: deque = deque(maxlen=max_events)

@@ -33,6 +33,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.analysis.lockdep import make_lock
 from repro.core.streaming import MemmapLog, MinerState, StreamingDFGMiner
 from repro.obs import MetricsRegistry
 
@@ -266,7 +267,7 @@ class GraphStore:
         self._c_hits = self.metrics.counter("graph_store_hits_total")
         self._graphs: "OrderedDict[str, EventGraph]" = OrderedDict()
         self._hints: Dict[str, str] = {}  # memmap realpath → newest fp
-        self._lock = threading.Lock()
+        self._lock = make_lock("GraphStore")
         # per-fingerprint build gates: concurrent requests for the same
         # graph wait for the first builder instead of duplicating the O(E)
         # work — and the registry lock is never held across a build, so

@@ -15,6 +15,8 @@ import functools
 
 import numpy as np
 
+from repro.analysis.kernels_check import validate_blocks
+
 from .kernel import BIG_COST
 
 __all__ = ["align_dp", "align_dp_numpy", "pick_blocks", "BIG_COST"]
@@ -112,6 +114,9 @@ def align_dp(
     bv = block_v or pick_blocks(v)
     vp = max(bv, -(-v // bv) * bv)
     lp = _pad_lane(l)
+    # static resource check on the concrete block assignment (pick_blocks
+    # alone cannot: the VMEM bound also depends on the padded L / S axes)
+    validate_blocks("align_dp", block_v=bv, lp=lp, s=sp)
     seqs_p = np.zeros((vp, lp), dtype=np.int32)
     seqs_p[:v, :l] = seqs
     lens_p = np.zeros((vp,), dtype=np.int32)

@@ -12,6 +12,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.kernels_check import validate_blocks
+
 from .kernel import dfg_count_pallas
 
 __all__ = ["dfg_count", "dfg_count_diced", "pick_blocks"]
@@ -33,6 +35,8 @@ def pick_blocks(
     # 2 one-hot tiles of (BE, BA) f32 + out (BA, BA) f32 within budget
     be = (vmem_budget_bytes - 4 * block_a * block_a) // (2 * 4 * block_a)
     block_e = max(512, min(4096, int(be) // 512 * 512))
+    # static resource check: BlockSpec VMEM bound + MXU/VPU tile alignment
+    validate_blocks("dfg_count", block_e=block_e, block_a=block_a)
     return block_e, block_a
 
 

@@ -12,6 +12,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.kernels_check import validate_blocks
+
 from .kernel import segment_count_pallas
 
 __all__ = ["segment_count", "pick_blocks"]
@@ -28,6 +30,8 @@ def pick_blocks(
     block_s = min(block_s, 512)
     bn = (vmem_budget_bytes - 4 * block_s) // (4 * block_s)
     block_n = max(512, min(4096, int(bn) // 512 * 512))
+    # static resource check: BlockSpec VMEM bound + MXU/VPU tile alignment
+    validate_blocks("segment_count", block_n=block_n, block_s=block_s)
     return block_n, block_s
 
 

@@ -28,6 +28,8 @@ import threading
 from bisect import bisect_left
 from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
+from repro.analysis.lockdep import make_lock
+
 __all__ = [
     "Counter",
     "Histogram",
@@ -179,7 +181,7 @@ class MetricsRegistry:
     """
 
     def __init__(self):
-        self._lock = threading.Lock()
+        self._lock = make_lock("MetricsRegistry")
         self._counters: Dict[Tuple[str, LabelItems], Counter] = {}
         self._histograms: Dict[Tuple[str, LabelItems], Histogram] = {}
         self._gauges: Dict[Tuple[str, LabelItems], Callable[[], float]] = {}

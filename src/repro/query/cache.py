@@ -41,6 +41,7 @@ from urllib.parse import quote, unquote
 
 import numpy as np
 
+from repro.analysis.lockdep import make_lock
 from repro.core.repository import EventRepository
 from repro.core.streaming import MemmapLog, MinerState
 
@@ -297,7 +298,7 @@ class QueryCache:
         # lets the engine find a resume candidate after the source changed
         self._hints: dict = {}
         self.stats = CacheStats()
-        self._lock = threading.Lock()
+        self._lock = make_lock("QueryCache")
 
     def __len__(self) -> int:
         with self._lock:
@@ -332,7 +333,7 @@ class QueryCache:
             while len(self._entries) > self.max_entries:
                 dead_key, _ = self._entries.popitem(last=False)
                 self.stats.evictions += 1
-                self._drop_hints_for(dead_key)
+                self._drop_hints_locked(dead_key)
 
     # -- delta support -------------------------------------------------------
     def delta_candidate(self, source_hint: Optional[str], plan_key: str):
@@ -359,7 +360,7 @@ class QueryCache:
         with self._lock:
             self._hints.pop((source_hint, plan_key), None)
 
-    def _drop_hints_for(self, key: Tuple[str, str]) -> None:
+    def _drop_hints_locked(self, key: Tuple[str, str]) -> None:
         fp, plan_key = key
         dead = [
             hk for hk, hfp in self._hints.items()
@@ -375,7 +376,7 @@ class QueryCache:
             dead = [k for k in self._entries if k[0] == fp]
             for k in dead:
                 del self._entries[k]
-                self._drop_hints_for(k)
+                self._drop_hints_locked(k)
             self.stats.invalidations += len(dead)
             return len(dead)
 

@@ -60,6 +60,7 @@ from repro.graph import (
     derive_process_map,
 )
 from repro.graph.build import EventGraph
+from repro.analysis.lockdep import make_lock
 from repro.obs import MetricsRegistry, QueryTrace, kernel_registry
 from repro.obs.trace import NullTrace
 
@@ -422,7 +423,7 @@ class QueryEngine:
             lambda: float(self.telemetry.dropped),
         )
         # hot-path memo of query_latency_seconds{sink,backend} histograms
-        self._lat_hists: Dict[Tuple[str, str], "Histogram"] = {}
+        self._lat_hists: Dict[Tuple[str, str], "Histogram"] = {}  # guarded by _lock
         self._tls = threading.local()
         # built graphs keyed by source fingerprint; appends extend the CSR
         # over the proven suffix instead of rebuilding
@@ -432,7 +433,7 @@ class QueryEngine:
             metrics=self.metrics,
         )
         # per-source topology-query (miss) counter feeding the crossover
-        self._topo_seen: "OrderedDict[str, int]" = OrderedDict()
+        self._topo_seen: "OrderedDict[str, int]" = OrderedDict()  # guarded by _lock
         self._max_topo_seen = 512
         # the fused Pallas WHERE clause compares f32 timestamps; leave it on
         # unless your timestamps do not round-trip through f32
@@ -443,22 +444,22 @@ class QueryEngine:
         # avoids one stale entry per append; LRU-bounded like the cache
         self._plans: "OrderedDict[Tuple[str, SourceInfo], PhysicalPlan]" = (
             OrderedDict()
-        )
+        )  # guarded by _lock
         self._max_plans = 512
         # materialized memmap repos keyed by source fingerprint: tenants
         # alternating over several in-budget logs each keep their load
         self.repo_memo_size = repo_memo_size
-        self._repo_memo: "OrderedDict[str, EventRepository]" = OrderedDict()
+        self._repo_memo: "OrderedDict[str, EventRepository]" = OrderedDict()  # guarded by _lock
         # compare() fitness per composite union fingerprint (whole-log
         # signal: one entry serves every window/filter/view over the union)
-        self._fitness_memo: "OrderedDict[str, Tuple]" = OrderedDict()
+        self._fitness_memo: "OrderedDict[str, Tuple]" = OrderedDict()  # guarded by _lock
         self._max_fitness_memo = 16
         # discovered default models per (source fp, non-window ops):
         # sliding-window conformance dashboards (and compare()'s reference
         # model) stop re-running discovery on unchanged data
-        self._model_memo: "OrderedDict[Tuple, ModelSpec]" = OrderedDict()
+        self._model_memo: "OrderedDict[Tuple, ModelSpec]" = OrderedDict()  # guarded by _lock
         self._max_model_memo = 16
-        self._lock = threading.Lock()
+        self._lock = make_lock("QueryEngine")
 
     @property
     def stats(self) -> EngineStats:
@@ -537,10 +538,16 @@ class QueryEngine:
         hist = self._lat_hists.get(key)
         if hist is None:
             # memoized: the registry's get-or-create sorts label tuples
-            # under its lock — too slow for the per-query hot path
-            hist = self._lat_hists[key] = self.metrics.histogram(
-                "query_latency_seconds", sink=key[0], backend=key[1]
-            )
+            # under its lock — too slow for the per-query hot path.  The
+            # unlocked read above is the fast path; the insert is
+            # double-checked under the engine lock so two racing threads
+            # converge on one Histogram instead of leaking a divergent memo
+            with self._lock:
+                hist = self._lat_hists.get(key)
+                if hist is None:
+                    hist = self._lat_hists[key] = self.metrics.histogram(
+                        "query_latency_seconds", sink=key[0], backend=key[1]
+                    )
         hist.observe(tr.total_s)
         names, t0s, durs = tr.raw_spans()
         if names:

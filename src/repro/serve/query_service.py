@@ -60,6 +60,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.analysis.lockdep import make_lock
 from repro.core.streaming import MemmapLog, MemmapLogWriter
 from repro.core.views import AccessDenied, AccessPolicy, ActivityView
 from repro.query import ApplyView, Q, Query, QueryEngine, QueryPlanError
@@ -132,7 +133,7 @@ class QueryService:
         self.forensics_floor = int(forensics_floor)
         self._logs: Dict[str, object] = {}
         self._policies: Dict[str, Optional[AccessPolicy]] = {}
-        self._lock = threading.Lock()
+        self._lock = make_lock("QueryService")
         # one lock per registered name: appends write three column files +
         # meta.json and must never interleave on the same log
         self._append_locks: Dict[str, threading.Lock] = {}
@@ -174,7 +175,9 @@ class QueryService:
             if name not in self._logs:
                 raise KeyError(f"unknown log {name!r}")
             source = self._logs[name]
-            append_lock = self._append_locks.setdefault(name, threading.Lock())
+            append_lock = self._append_locks.setdefault(
+                name, make_lock("QueryService.append")
+            )
         if not isinstance(source, MemmapLog):
             raise QueryPlanError(
                 f"log {name!r} is an in-memory repository; only memmap logs "

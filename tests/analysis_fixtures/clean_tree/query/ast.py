@@ -1,0 +1,25 @@
+"""Fixture: a miniature tree every rule must pass."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DFGSink:
+    backend: str = "auto"
+
+
+@dataclasses.dataclass(frozen=True)
+class HistogramSink:
+    pass
+
+
+SINKS = (DFGSink, HistogramSink)
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalPlan:
+    source: str
+    sink: object
+
+    def _payload(self):
+        return [self.source, dataclasses.asdict(self.sink)]

@@ -1,0 +1,16 @@
+import threading
+
+from .ast import SINKS
+
+
+class Engine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.memo = {}  # guarded by _lock
+
+    def run(self, sink):
+        if not isinstance(sink, SINKS):
+            raise TypeError(sink)
+        with self._lock:
+            self.memo[type(sink).__name__] = sink
+        return "ok"

@@ -1,0 +1,9 @@
+from .ast import DFGSink, HistogramSink
+
+
+def plan(sink):
+    if isinstance(sink, DFGSink):
+        return "dfg"
+    if isinstance(sink, HistogramSink):
+        return "hist"
+    raise TypeError(sink)

@@ -1,0 +1,14 @@
+"""Fixture: ambient state inside a kernel body."""
+
+import time
+
+import numpy as np
+
+
+def fake_kernel(x):
+    jitter = np.random.uniform()  # VIOLATION: RNG in a kernel path
+    return x + time.time() + jitter  # VIOLATION: wall clock in a kernel
+
+
+def fake_seed():
+    return time.perf_counter_ns()  # VIOLATION

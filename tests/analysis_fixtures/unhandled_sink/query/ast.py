@@ -1,0 +1,16 @@
+"""Fixture: two sinks, one of which the planner forgets."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DFGSink:
+    backend: str = "auto"
+
+
+@dataclasses.dataclass(frozen=True)
+class OrphanSink:
+    depth: int = 1
+
+
+SINKS = (DFGSink, OrphanSink)

@@ -1,0 +1,9 @@
+"""Fixture: handles DFGSink only — OrphanSink silently falls through."""
+
+from .ast import DFGSink
+
+
+def plan(sink):
+    if isinstance(sink, DFGSink):
+        return "dfg"
+    return "??"  # no decision about OrphanSink: the violation

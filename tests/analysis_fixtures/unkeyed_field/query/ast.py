@@ -1,0 +1,31 @@
+"""Fixture: three cache-key violations — an unkeyed post-init attribute, a
+non-frozen plan dataclass, and an explicit payload that forgets a field."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowSink:
+    t0: float
+    t1: float
+
+    def __post_init__(self):
+        # not a dataclass field: invisible to asdict, never keyed
+        object.__setattr__(self, "span", self.t1 - self.t0)
+
+
+@dataclasses.dataclass
+class MutableSink:
+    k: int
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalPlan:
+    source: str
+    sink: WindowSink
+
+    def _payload(self):
+        return [self.source]  # forgets self.sink
+
+    def key(self):
+        return str(self._payload())

@@ -1,0 +1,61 @@
+"""Fixture: lock-discipline violations — an unlocked mutation of inferred
+protected state, an unlocked mutation of annotated state, a blocking call
+under a lock, and an inverted acquisition order."""
+
+import threading
+
+
+class StatsRegistry:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.counts = {}
+
+    def inc(self, key):
+        with self._lock:
+            self.counts[key] = self.counts.get(key, 0) + 1
+
+    def reset(self):
+        self.counts = {}  # VIOLATION: protected attr mutated outside lock
+
+    def _wipe_locked(self):
+        self.counts = {}  # caller holds the lock: exempt by convention
+
+
+class AnnotatedRegistry:
+    """The only mutation site is the buggy one — inference alone cannot see
+    it; the ``# guarded by`` annotation declares the contract."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.hists = {}  # guarded by _lock
+
+    def observe(self, key, value):
+        self.hists[key] = value  # VIOLATION
+
+
+class BlockingUnderLock:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.data = {}
+
+    def load(self, path):
+        with self._lock:
+            with open(path) as fh:  # VIOLATION: I/O while holding the lock
+                self.data = {"raw": fh.read()}
+
+
+class InvertedOrder:
+    def __init__(self):
+        self._a_lock = threading.Lock()
+        self._b_lock = threading.Lock()
+        self.x = 0
+
+    def forward(self):
+        with self._a_lock:
+            with self._b_lock:
+                self.x = 1
+
+    def backward(self):
+        with self._b_lock:
+            with self._a_lock:  # VIOLATION: opposite nesting order
+                self.x = 2
