@@ -22,10 +22,19 @@ from __future__ import annotations
 
 import json
 import os
+import sys
 import tempfile
 import time
 
 import numpy as np
+
+# runnable directly (`python benchmarks/bench_query_engine.py`) without
+# PYTHONPATH
+_SRC = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+)
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
 
 EVENTS = int(os.environ.get("BENCH_EVENTS", 2_000_000))
 REPEAT = 5
@@ -40,7 +49,10 @@ def _best(fn, n=REPEAT) -> float:
     return best * 1e6
 
 
-def run() -> list:
+def run(write_json: bool = False) -> list:
+    """CSV rows; ``write_json=True`` (direct invocation only) also rewrites
+    the committed ``BENCH_query.json`` record — the aggregator's reduced
+    ``--fast`` runs must not clobber it (same guard as bench_delta)."""
     from repro.core import dfg_from_repository, streaming_dfg
     from repro.data import ProcessSpec, generate_memmap_log, generate_repository
     from repro.query import Q, QueryEngine
@@ -125,22 +137,34 @@ def run() -> list:
     from repro.core.dfg import dfg_numpy
 
     rng = np.random.default_rng(3)
-    a_count = 32
-    crossover = None
-    for n in (512, 1024, 2048, 4096, 8192):
-        src = rng.integers(0, a_count, n).astype(np.int32)
-        dst = rng.integers(0, a_count, n).astype(np.int32)
-        valid = np.ones(n, dtype=bool)
-        np_us = _best(lambda: dfg_numpy(src, dst, valid, a_count), n=3)
-        dev_us = _best(
-            lambda: dfg_device(src, dst, valid, a_count, backend="scatter"),
-            n=3,
-        )
-        if dev_us <= np_us:
-            crossover = n
-            break
-    if crossover is None:
-        crossover = 8192  # device never won in the measured range
+
+    def measure_crossover(a_count: int) -> int:
+        for n in (512, 1024, 2048, 4096, 8192):
+            src = rng.integers(0, a_count, n).astype(np.int32)
+            dst = rng.integers(0, a_count, n).astype(np.int32)
+            valid = np.ones(n, dtype=bool)
+            np_us = _best(lambda: dfg_numpy(src, dst, valid, a_count), n=3)
+            dev_us = _best(
+                lambda: dfg_device(
+                    src, dst, valid, a_count, backend="scatter"
+                ),
+                n=3,
+            )
+            if dev_us <= np_us:
+                return n
+        return 8192  # device never won in the measured range
+
+    # the crossover moves with the activity count (the device pays a fixed
+    # (A, A) output cost): measure it at several sizes and emit both the
+    # mid-size scalar (back-compat) and the fitted curve over
+    # work = pairs × activities that resolve_threshold() interpolates
+    curve_pts = []
+    by_a = {}
+    for a in (8, 32, 128):
+        cx = measure_crossover(a)
+        by_a[a] = cx
+        curve_pts.append([cx * a, cx])
+    crossover = by_a[32]
     # budget: a quarter of physical RAM at ~24 B/event (three columns +
     # canonicalization slack), inside the planner's sanity rails
     try:
@@ -151,17 +175,25 @@ def run() -> list:
     results["calibration"] = {
         "tiny_pairs": int(crossover),
         "memory_budget_events": int(budget),
+        # fitted per-backend crossover curve: tiny_pairs measured at
+        # several problem sizes, keyed by work = pairs × activities, so the
+        # planner interpolates instead of applying one scalar everywhere
+        "curves": {
+            "tiny_pairs": curve_pts,
+        },
     }
     rows.append((
         "query_calibration", float(crossover),
         f"tiny_pairs={crossover};memory_budget_events={budget}",
     ))
 
+    if not write_json:
+        return rows
     with open("BENCH_query.json", "w") as f:
         json.dump(results, f, indent=1)
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    for r in run(write_json=True):
         print(",".join(str(x) for x in r))

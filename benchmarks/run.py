@@ -36,6 +36,7 @@ def main() -> None:
         bench_multilog,
         bench_obs,
         bench_query_engine,
+        bench_shard,
         roofline_table,
     )
 
@@ -50,6 +51,7 @@ def main() -> None:
         (bench_graph, "graph"),
         (bench_conformance, "conformance"),
         (bench_obs, "obs"),
+        (bench_shard, "shard"),
         (roofline_table, "roofline"),
     ):
         try:

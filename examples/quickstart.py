@@ -109,6 +109,44 @@ print(f"forensics DFG over {own.num_events} engine events "
       f"({len(forensics.names)} phases): a full scan is the chain "
       f"parse -> cache_probe -> plan -> scan -> sink; hits stop at the probe")
 
+# --- 8. the sharded graph tier: case-partitioned scale-out ------------------
+# cases are assigned whole to K shards (case % K), so the global Ψ is a
+# pure sum of per-shard counts; each shard keeps its own CSR snapshot,
+# fingerprint slot, and delta path
+import tempfile
+
+from repro.data import generate_memmap_log
+from repro.graph import partition_memmap_log
+from repro.query import QueryEngine
+
+tmp = tempfile.mkdtemp(prefix="quickstart_shard_")
+log = generate_memmap_log(
+    f"{tmp}/log", 60_000,
+    ProcessSpec(num_activities=12, seed=8, horizon_days=90), seed=8,
+)
+sharded = partition_memmap_log(log, 4, f"{tmp}/shards")
+eng = QueryEngine()
+w0 = float(np.quantile(log.time, 0.25))
+w1 = float(np.quantile(log.time, 0.75))
+cold = Q.log(sharded).using(eng).window(w0, w1).dfg(backend="sharded-graph")
+print(f"\nsharded DFG over K={sharded.num_shards} shards: "
+      f"{int(cold.value.sum())} pairs, per-shard branches: "
+      f"{[name for name, _ in cold.trace.branches]}")
+
+# appends land on the owning shard only: the re-query extends one shard's
+# graph over the 3-row suffix while the other shards' graphs are pure hits
+grown = sharded.append(
+    np.array([1, 2, 3], dtype=np.int32),       # activities
+    np.array([6, 6, 6], dtype=np.int32),       # one case → one owning shard
+    log.time[-1] + np.arange(1.0, 4.0),        # appends stay time-ordered
+)
+rows_before = eng.stats.rows_scanned
+warm = Q.log(grown).using(eng).dfg(backend="sharded-graph")
+print(f"after a 3-event append: rescanned "
+      f"{eng.stats.rows_scanned - rows_before} rows "
+      f"(owning shard's suffix only: {eng.graphs.stats.extends} extend, "
+      f"{eng.graphs.stats.hits} warm shard hits)")
+
 # the invariants behind all of the above are machine-checked: run
 #   python -m repro.analysis --fail-on-new        (lint: sinks/keys/locks)
 #   REPRO_LOCKDEP=1 pytest tests/test_obs.py      (runtime lock-order sanitizer)

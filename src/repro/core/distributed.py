@@ -32,6 +32,8 @@ __all__ = [
     "distributed_dfg",
     "shard_pairs",
     "local_dfg_fn",
+    "merge_shard_psis",
+    "merge_shard_counts",
 ]
 
 
@@ -140,6 +142,80 @@ def distributed_dfg(
     ]
     psi = jax.jit(mapped)(*args)
     return np.asarray(psi, dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Sharded-graph merge (case-partitioned shards → global sinks)
+# ---------------------------------------------------------------------------
+
+
+def _align_dense(mat: np.ndarray, ids, num_activities: int) -> np.ndarray:
+    """Embed a shard-local (a, a) matrix into the (A, A) union frame.
+    ``ids[i]`` is the union id of shard-local activity ``i`` (unique), so
+    plain assignment places every cell — no accumulation inside one shard."""
+    out = np.zeros((num_activities, num_activities), dtype=np.int64)
+    idx = np.asarray(ids, dtype=np.int64)
+    out[np.ix_(idx, idx)] = mat
+    return out
+
+
+def merge_shard_psis(
+    psis,
+    id_maps,
+    num_activities: int,
+    *,
+    mesh: Optional[Mesh] = None,
+) -> np.ndarray:
+    """Merge per-shard (a_k, a_k) Ψ matrices into the global (A, A) Ψ.
+
+    Cases never span shards under the ``case % K`` partition, so every
+    directly-follows pair is counted by exactly one shard and the merge is a
+    *pure sum* on the aligned union vocabulary — no reconciliation, the same
+    psum contract as :func:`distributed_dfg`.  With a ``mesh`` the aligned
+    stack is sharded over the flattened device axis and reduced with an
+    on-device ``psum`` (int32 lanes — exact, unlike a float accumulate);
+    host-side the sum is a K·A² numpy reduction.
+    """
+    aligned = [
+        _align_dense(psi, ids, num_activities)
+        for psi, ids in zip(psis, id_maps)
+    ]
+    if not aligned:
+        return np.zeros((num_activities, num_activities), dtype=np.int64)
+    if mesh is None or _n_devices(mesh) <= 1:
+        return np.sum(aligned, axis=0, dtype=np.int64)
+
+    axes = tuple(mesh.axis_names)
+    n_dev = _n_devices(mesh)
+    stack = np.stack(aligned).astype(np.int32)
+    pad = (-stack.shape[0]) % n_dev
+    if pad:
+        stack = np.concatenate(
+            [stack, np.zeros((pad, *stack.shape[1:]), dtype=np.int32)]
+        )
+
+    def shard_fn(x):
+        acc = jnp.sum(x, axis=0)
+        for ax in reversed(axes):
+            acc = jax.lax.psum(acc, axis_name=ax)
+        return acc
+
+    mapped = shard_map(
+        shard_fn, mesh=mesh, in_specs=(P(axes),), out_specs=P(),
+    )
+    arg = jax.device_put(stack, NamedSharding(mesh, P(axes)))
+    return np.asarray(jax.jit(mapped)(arg), dtype=np.int64)
+
+
+def merge_shard_counts(counts, id_maps, num_activities: int) -> np.ndarray:
+    """Merge per-shard activity-count vectors (histogram / process-map node
+    weights) onto the union vocabulary.  Each event lives on exactly one
+    shard, so this too is a pure aligned sum."""
+    out = np.zeros(num_activities, dtype=np.int64)
+    for vec, ids in zip(counts, id_maps):
+        idx = np.asarray(ids, dtype=np.int64)
+        out[idx] += np.asarray(vec, dtype=np.int64)
+    return out
 
 
 def lower_distributed_dfg(

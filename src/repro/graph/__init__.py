@@ -17,9 +17,29 @@ The query engine exposes the same store as the ``graph`` physical backend
 ``.dfg(backend="graph")``); :class:`~repro.graph.store.GraphStore` keeps
 built graphs keyed by source fingerprint and extends them in place over
 proven append-only suffixes.
+
+The **sharded graph tier** (:mod:`repro.graph.shard`) scales the same
+store case-wise: :func:`partition_memmap_log` splits a memmap log into K
+case-partitioned shards (``case % K`` — cases never span shards), each an
+independently fingerprinted CSR snapshot, and the engine's
+``sharded-graph`` backend merges per-shard Ψ with a pure aligned sum.
 """
 
-from .build import CSR, EventGraph, build_graph, csr_from_dense, dense_from_csr
+from .build import (
+    CSR,
+    EventGraph,
+    WindowIndex,
+    build_graph,
+    build_window_index,
+    csr_from_dense,
+    dense_from_csr,
+)
+from .shard import (
+    ShardedLog,
+    open_sharded_log,
+    partition_memmap_log,
+    sharded_log_name,
+)
 from .store import (
     GraphStore,
     GraphStoreStats,
@@ -40,9 +60,12 @@ from .traverse import (
 
 __all__ = [
     "CSR", "EventGraph", "build_graph", "csr_from_dense", "dense_from_csr",
+    "WindowIndex", "build_window_index",
     "GraphStore", "GraphStoreStats", "save_graph", "load_graph",
     "extend_graph",
     "Neighborhood", "ProcessMap", "dfg_from_graph", "neighborhood",
     "derive_neighborhood", "path_frequencies", "process_map",
     "derive_process_map",
+    "ShardedLog", "open_sharded_log", "partition_memmap_log",
+    "sharded_log_name",
 ]

@@ -105,6 +105,89 @@ def dense_from_csr(csr: CSR) -> np.ndarray:
     return psi
 
 
+@dataclasses.dataclass(frozen=True)
+class WindowIndex:
+    """Time-sorted index over a full graph's event tables.
+
+    A windowed query against the canonical (trace-major) tables costs
+    O(E) in masking passes however narrow the window.  This index sorts
+    the *event* side by time and the *pair* side by source-endpoint time
+    once, so a window [t0, t1) resolves to two binary searches plus work
+    proportional to the rows actually inside the window — the resident
+    shard graphs of the sharded tier answer repeated dashboard windows
+    without rescanning their whole tables.
+
+    Correctness leans on canonical order being time-nondecreasing
+    *within* each trace (so ``t_dst >= t_src`` for every :DF pair, making
+    ``t_dst >= t0`` implied and ``t_src < t1`` part of the sorted range).
+    The builder verifies that invariant and callers must fall back to the
+    masked path when :func:`build_window_index` returns None.
+    """
+
+    num_events: int  # staleness check: extends grow the tables
+    etimes: np.ndarray  # (E,) float64, sorted
+    eacts: np.ndarray  # (E,) int32, activity ids in time order
+    pt_src: np.ndarray  # (P,) float64 source-endpoint times, sorted
+    pt_dst: np.ndarray  # (P,) float64 dst-endpoint times, pair order
+    psrc: np.ndarray  # (P,) int32
+    pdst: np.ndarray  # (P,) int32
+
+    def counts(self, t0: float, t1: float, a: int) -> np.ndarray:
+        """Per-activity event counts under [t0, t1)."""
+        lo, hi = np.searchsorted(self.etimes, (t0, t1))
+        return np.bincount(self.eacts[lo:hi], minlength=a).astype(np.int64)
+
+    def psi(self, t0: float, t1: float, a: int) -> np.ndarray:
+        """Ψ under [t0, t1) — bit-identical to the pair-endpoint mask over
+        the full tables."""
+        from repro.core.dfg import dfg_numpy
+
+        plo, phi = np.searchsorted(self.pt_src, (t0, t1))
+        valid = self.pt_dst[plo:phi] < t1
+        return dfg_numpy(self.psrc[plo:phi], self.pdst[plo:phi], valid, a)
+
+    def query(self, t0: float, t1: float, a: int):
+        """(Ψ, node counts) under [t0, t1)."""
+        return self.psi(t0, t1, a), self.counts(t0, t1, a)
+
+
+def build_window_index(
+    event_activity: np.ndarray,
+    event_trace: np.ndarray,
+    event_time: np.ndarray,
+) -> Optional[WindowIndex]:
+    """Build a :class:`WindowIndex`, or None when the tables violate the
+    within-trace time order the O(window) query plan depends on."""
+    acts = np.asarray(event_activity)
+    traces = np.asarray(event_trace)
+    times = np.asarray(event_time)
+    n = acts.shape[0]
+    eorder = np.argsort(times, kind="stable")
+    if n < 2:
+        empty_f = np.zeros((0,), dtype=np.float64)
+        empty_i = np.zeros((0,), dtype=np.int32)
+        return WindowIndex(
+            num_events=n,
+            etimes=np.ascontiguousarray(times[eorder]),
+            eacts=np.ascontiguousarray(acts[eorder], dtype=np.int32),
+            pt_src=empty_f, pt_dst=empty_f, psrc=empty_i, pdst=empty_i,
+        )
+    pair = np.flatnonzero(traces[:-1] == traces[1:])
+    t_src, t_dst = times[pair], times[pair + 1]
+    if not bool(np.all(t_dst >= t_src)):
+        return None
+    porder = np.argsort(t_src, kind="stable")
+    return WindowIndex(
+        num_events=n,
+        etimes=np.ascontiguousarray(times[eorder]),
+        eacts=np.ascontiguousarray(acts[eorder], dtype=np.int32),
+        pt_src=np.ascontiguousarray(t_src[porder]),
+        pt_dst=np.ascontiguousarray(t_dst[porder]),
+        psrc=np.ascontiguousarray(acts[pair][porder], dtype=np.int32),
+        pdst=np.ascontiguousarray(acts[pair + 1][porder], dtype=np.int32),
+    )
+
+
 @dataclasses.dataclass
 class EventGraph:
     """In-process event-knowledge graph (see module docstring).
@@ -137,6 +220,11 @@ class EventGraph:
     source_fp: Optional[str] = None  # fingerprint of the source at build time
     rows_end: int = 0  # memmap rows consumed (0 for repositories)
     miner: Optional[MinerState] = None  # memmap-sourced: resumable Ψ state
+    # lazily built time index for O(window) windowed queries; False marks a
+    # graph whose tables can't support it (non-monotone trace times)
+    _window_index: object = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def num_activities(self) -> int:
@@ -168,6 +256,27 @@ class EventGraph:
         if self.case_indptr is None:
             raise ValueError("topology-only graph has no event tables")
         return int(self.case_indptr[t]), int(self.case_indptr[t + 1])
+
+    def window_index(self) -> Optional[WindowIndex]:
+        """The lazily built :class:`WindowIndex` over this graph's event
+        tables (None when unsupported: topology-only graphs, or tables
+        whose within-trace times are not sorted).  Appends invalidate via
+        the row count — an extend grows the tables, so the stale index is
+        rebuilt on the next windowed query."""
+        if self.event_time is None:
+            return None
+        idx = self._window_index
+        if isinstance(idx, WindowIndex) and idx.num_events == self.num_events:
+            return idx
+        if idx == ("unsupported", self.num_events):
+            return None
+        idx = build_window_index(
+            self.event_activity, self.event_trace, self.event_time
+        )
+        self._window_index = (
+            idx if idx is not None else ("unsupported", self.num_events)
+        )
+        return idx
 
 
 # ---------------------------------------------------------------------------

@@ -20,16 +20,27 @@ Snapshots carry the same prefix-preserving source fingerprint
 (``memmap:<prefix_digest>:<rows>:<A>``), so a snapshot saved before an
 append still proves and extends after reload — the round-trip the tests
 pin: build → save → load → append → extend ≡ fresh build, array for array.
+
+With a ``spill_dir`` the registry becomes **two-tier** (the sharded graph
+tier's shape: a local LRU of materialized shard snapshots over a
+shard-remote manifest).  Evicted graphs are spilled to fingerprint-addressed
+snapshot directories recorded in ``spill_dir/manifest.json``; a later miss
+on that fingerprint *pages the snapshot in* (O(metadata), arrays mmap'd
+read-only) instead of rebuilding, and a proven append can extend a paged-in
+snapshot — suffix-only, never O(E).  Snapshots are immutable once written
+(a fingerprint names exact bytes), so spilling an already-manifested
+fingerprint is a no-op and concurrent spills of the same graph are benign.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import threading
 from collections import OrderedDict
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -238,6 +249,8 @@ class GraphStoreStats:
     builds: int = 0
     extends: int = 0  # append-proven CSR extensions (suffix-only scans)
     hits: int = 0
+    spills: int = 0  # LRU evictions persisted to the disk tier
+    pageins: int = 0  # misses served from the disk tier instead of a build
 
 
 class GraphStore:
@@ -248,6 +261,13 @@ class GraphStore:
     via the prefix-digest proof (suffix-only scan); anything else builds
     fresh.  Thread-safe; builds serialize on the store lock so concurrent
     tenants cannot duplicate the construction work.
+
+    With ``spill_dir`` the LRU sits over a disk tier: evictions spill to
+    fingerprint-addressed snapshots listed in a manifest, and misses check
+    the manifest before building (see module docstring).  ``max_graphs``
+    then bounds *materialized* graphs only — the working set a host keeps
+    hot — while the manifest can hold every shard of a log far larger than
+    one host's memory.
     """
 
     def __init__(
@@ -257,22 +277,33 @@ class GraphStore:
         memory_budget_events: Optional[int] = None,
         backend: str = "auto",
         metrics: Optional[MetricsRegistry] = None,
+        spill_dir: Optional[str] = None,
     ):
         self.max_graphs = max_graphs
         self.memory_budget_events = memory_budget_events
         self.backend = backend
+        self.spill_dir = spill_dir
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._c_builds = self.metrics.counter("graph_store_builds_total")
         self._c_extends = self.metrics.counter("graph_store_extends_total")
         self._c_hits = self.metrics.counter("graph_store_hits_total")
+        self._c_spills = self.metrics.counter("graph_store_spills_total")
+        self._c_pageins = self.metrics.counter("graph_store_pageins_total")
         self._graphs: "OrderedDict[str, EventGraph]" = OrderedDict()
         self._hints: Dict[str, str] = {}  # memmap realpath → newest fp
+        self._disk: Dict[str, str] = {}  # fp → snapshot dir (guarded by _lock)
         self._lock = make_lock("GraphStore")
         # per-fingerprint build gates: concurrent requests for the same
         # graph wait for the first builder instead of duplicating the O(E)
         # work — and the registry lock is never held across a build, so
         # O(1) hits on other sources proceed during one
         self._building: Dict[str, threading.Event] = {}
+        if spill_dir is not None:
+            os.makedirs(spill_dir, exist_ok=True)
+            manifest = os.path.join(spill_dir, "manifest.json")
+            if os.path.exists(manifest):
+                with open(manifest) as f:
+                    self._disk = dict(json.load(f).get("graphs", {}))
 
     @property
     def stats(self) -> GraphStoreStats:
@@ -280,6 +311,8 @@ class GraphStore:
             builds=self._c_builds.value,
             extends=self._c_extends.value,
             hits=self._c_hits.value,
+            spills=self._c_spills.value,
+            pageins=self._c_pageins.value,
         )
 
     def __len__(self) -> int:
@@ -293,11 +326,13 @@ class GraphStore:
 
     def has_extendable(self, source) -> bool:
         """True when a graph built from an earlier state of this memmap
-        path is registered — an append-proof candidate, so serving the
-        grown log from the graph tier costs only a suffix scan."""
+        path is registered (either tier) — an append-proof candidate, so
+        serving the grown log from the graph tier costs only a suffix scan
+        (plus an O(metadata) page-in when the candidate was spilled)."""
         hint = self._hint(source)
         with self._lock:
-            return hint is not None and self._hints.get(hint) in self._graphs
+            fp = self._hints.get(hint) if hint is not None else None
+            return fp is not None and (fp in self._graphs or fp in self._disk)
 
     def get(self, fp: str) -> Optional[EventGraph]:
         with self._lock:
@@ -313,27 +348,91 @@ class GraphStore:
         g: EventGraph,
         hint: Optional[str],
         replaced_fp: Optional[str] = None,
-    ) -> None:
+    ) -> List[Tuple[str, EventGraph]]:
         """Insert + LRU-evict + hint bookkeeping; caller holds the lock.
         ``replaced_fp`` drops the superseded generation an extension grew
         out of — it can never be queried again (its fingerprint names the
         pre-append bytes) and would otherwise pin its event tables until
-        LRU eviction."""
+        LRU eviction.  Returns the LRU-evicted graphs so the caller can
+        spill them to the disk tier *outside* the lock (an O(nnz) snapshot
+        write must not block O(1) hits)."""
         if replaced_fp is not None and replaced_fp != fp:
             self._graphs.pop(replaced_fp, None)
+            if self._disk.pop(replaced_fp, None) is not None:
+                # the pre-append bytes no longer exist anywhere, so the
+                # superseded snapshot can never satisfy a query; unmanifest
+                # it (files stay — another handle may still mmap them)
+                self._write_manifest_locked()
         self._graphs[fp] = g
         self._graphs.move_to_end(fp)
         if hint is not None:
             self._hints[hint] = fp
+        evicted: List[Tuple[str, EventGraph]] = []
         while len(self._graphs) > self.max_graphs:
-            dead_fp, _ = self._graphs.popitem(last=False)
-            for h, hfp in list(self._hints.items()):
-                if hfp == dead_fp:
-                    del self._hints[h]
+            dead_fp, dead_g = self._graphs.popitem(last=False)
+            evicted.append((dead_fp, dead_g))
+            if self.spill_dir is None:
+                # no disk tier: the fingerprint becomes unreachable, so any
+                # hint naming it is dead too.  With a disk tier the hint
+                # stays — the spilled snapshot still extends after page-in.
+                for h, hfp in list(self._hints.items()):
+                    if hfp == dead_fp:
+                        del self._hints[h]
+        return evicted
 
     def put(self, fp: str, g: EventGraph, hint: Optional[str] = None) -> None:
         with self._lock:
-            self._register_locked(fp, g, hint)
+            evicted = self._register_locked(fp, g, hint)
+        self._spill(evicted)
+
+    # -- disk tier ----------------------------------------------------------
+    def _write_manifest_locked(self) -> None:
+        tmp = os.path.join(self.spill_dir, "manifest.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump({"format": _FORMAT_VERSION, "graphs": self._disk}, f)
+        os.replace(tmp, os.path.join(self.spill_dir, "manifest.json"))
+
+    def _spill(self, evicted: List[Tuple[str, EventGraph]]) -> None:
+        """Persist evicted graphs to fingerprint-addressed snapshots.
+
+        Runs outside the registry lock.  A fingerprint already manifested is
+        skipped — it names exact source bytes, so the existing snapshot is
+        already the right one (which also makes a concurrent double-spill of
+        the same fingerprint an idempotent overwrite)."""
+        if self.spill_dir is None or not evicted:
+            return
+        for fp, g in evicted:
+            with self._lock:
+                if fp in self._disk:
+                    continue
+            d = os.path.join(
+                self.spill_dir, hashlib.sha256(fp.encode()).hexdigest()[:24]
+            )
+            save_graph(g, d)
+            self._c_spills.inc()
+            with self._lock:
+                self._disk[fp] = d
+                self._write_manifest_locked()
+
+    def _page_in(self, fp: str) -> Optional[EventGraph]:
+        """Load a manifested snapshot for ``fp`` (caller is the elected
+        builder for this fingerprint, so nobody else is loading it)."""
+        with self._lock:
+            d = self._disk.get(fp)
+        if d is None:
+            return None
+        try:
+            g = load_graph(d)
+        except (OSError, ValueError):
+            # stale manifest entry (snapshot dir removed / unreadable):
+            # drop it and fall through to a rebuild
+            with self._lock:
+                if self._disk.get(fp) == d:
+                    del self._disk[fp]
+                    self._write_manifest_locked()
+            return None
+        self._c_pageins.inc()
+        return g
 
     @staticmethod
     def _hint(source) -> Optional[str]:
@@ -341,13 +440,20 @@ class GraphStore:
             return os.path.realpath(source.path)
         return None
 
-    def graph_for(self, source, fp: str) -> EventGraph:
+    def graph_for(self, source, fp: str, on_rows=None) -> EventGraph:
         """The graph of ``source`` (whose fingerprint is ``fp``): registry
-        hit, proven append extension, or fresh build — in that order.
+        hit, disk-tier page-in, proven append extension, or fresh build —
+        in that order.
 
         Construction runs *outside* the registry lock (an O(E) build must
         not block O(1) hits on other sources); a per-fingerprint gate makes
         concurrent requests for the same graph wait for the first builder.
+
+        ``on_rows`` (when given) is called with the number of source rows
+        this call actually scanned: 0 for hits and page-ins, the appended
+        suffix length for extensions, the full row count for builds — the
+        engine's ``rows_scanned`` accounting, which is how the tests prove
+        that an append rescans only the owning shards.
         """
         while True:
             g = self.get(fp)
@@ -364,9 +470,12 @@ class GraphStore:
                 if gate is None:
                     gate = threading.Event()
                     self._building[fp] = gate
+                    old_fp_hint = (
+                        self._hints.get(hint) if hint is not None else None
+                    )
                     old = (
-                        self._graphs.get(self._hints[hint])
-                        if hint is not None and hint in self._hints
+                        self._graphs.get(old_fp_hint)
+                        if old_fp_hint is not None
                         else None
                     )
                     break  # we are the builder
@@ -377,29 +486,44 @@ class GraphStore:
 
         old_fp = None
         try:
-            g = None
-            if old is not None and isinstance(source, MemmapLog):
-                if _proves_append_only(old, source):
-                    g = extend_graph(
-                        old, source,
+            g = self._page_in(fp)
+            if g is None:
+                if old is None and old_fp_hint is not None \
+                        and old_fp_hint != fp:
+                    # the extension candidate was LRU-evicted to the disk
+                    # tier: page it in — a suffix scan over a loaded
+                    # snapshot still beats an O(E) rebuild
+                    old = self._page_in(old_fp_hint)
+                if old is not None and isinstance(source, MemmapLog):
+                    if _proves_append_only(old, source):
+                        suffix = source.num_events - old.rows_end
+                        g = extend_graph(
+                            old, source,
+                            memory_budget_events=self.memory_budget_events,
+                            source_fp=fp,
+                        )
+                        old_fp = old.source_fp
+                        self._c_extends.inc()
+                        if on_rows is not None:
+                            on_rows(suffix)
+                    else:
+                        with self._lock:
+                            self._hints.pop(hint, None)
+                if g is None:
+                    g = build_graph(
+                        source,
+                        backend=self.backend,
                         memory_budget_events=self.memory_budget_events,
                         source_fp=fp,
                     )
-                    old_fp = old.source_fp
-                    self._c_extends.inc()
-                else:
-                    with self._lock:
-                        self._hints.pop(hint, None)
-            if g is None:
-                g = build_graph(
-                    source,
-                    backend=self.backend,
-                    memory_budget_events=self.memory_budget_events,
-                    source_fp=fp,
-                )
-                self._c_builds.inc()
+                    self._c_builds.inc()
+                    if on_rows is not None:
+                        on_rows(int(source.num_events))
             with self._lock:
-                self._register_locked(fp, g, hint, replaced_fp=old_fp)
+                evicted = self._register_locked(
+                    fp, g, hint, replaced_fp=old_fp
+                )
+            self._spill(evicted)
             return g
         finally:
             with self._lock:

@@ -158,31 +158,39 @@ class QueryTrace:
             ]
         return d
 
-    def describe(self) -> str:
+    def describe(self, *, max_depth: int = 2) -> str:
+        """Pretty text.  Branch sub-traces (union branches, sharded-graph
+        ``shard<k>`` sub-queries) recurse up to ``max_depth`` levels with
+        indentation; deeper levels collapse to one summary line each."""
+        return "\n".join(self._describe_lines("", max_depth))
+
+    def _describe_lines(self, indent: str, depth: int) -> List[str]:
         head = (
-            f"trace q{self.query_id} sink={self.sink} "
+            f"{indent}trace q{self.query_id} sink={self.sink} "
             f"backend={self.executed_backend}"
         )
         if self.planned_backend and self.planned_backend != self.executed_backend:
             head += f" (planned={self.planned_backend})"
         lines = [
             head,
-            f"  total={self.total_s * 1e3:.3f}ms "
+            f"{indent}  total={self.total_s * 1e3:.3f}ms "
             f"coverage={self.coverage() * 100.0:.1f}% "
             f"rows={self.rows_scanned}",
         ]
         for s in self.spans:
             lines.append(
-                f"  {s.name:<12s} +{s.start_s * 1e3:8.3f}ms  "
+                f"{indent}  {s.name:<12s} +{s.start_s * 1e3:8.3f}ms  "
                 f"{s.duration_s * 1e3:8.3f}ms"
             )
         for name, sub in self.branches:
             lines.append(
-                f"  branch {name}: backend={sub.executed_backend} "
+                f"{indent}  branch {name}: backend={sub.executed_backend} "
                 f"cache={sub.from_cache} rows={sub.rows_scanned} "
                 f"total={sub.total_s * 1e3:.3f}ms"
             )
-        return "\n".join(lines)
+            if depth > 1:
+                lines.extend(sub._describe_lines(indent + "    ", depth - 1))
+        return lines
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return (

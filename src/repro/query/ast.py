@@ -206,7 +206,12 @@ class CompareSink:
 
 @dataclasses.dataclass(frozen=True)
 class HistogramSink:
-    """Per-activity event counts (the aggregate-only histogram endpoint)."""
+    """Per-activity event counts (the aggregate-only histogram endpoint).
+    ``backend`` pins the physical operator like :class:`DFGSink`:
+    ``"graph"`` serves the counts from the stored ``:OF_TYPE`` in-degrees
+    (windowed: from the graph's time index) instead of rescanning."""
+
+    backend: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -298,7 +303,9 @@ class LogRef:
     underlying store the engine executes on."""
 
     def __init__(self, source, name: str):
-        if not isinstance(source, (EventRepository, MemmapLog)):
+        from repro.graph.shard import ShardedLog
+
+        if not isinstance(source, (EventRepository, MemmapLog, ShardedLog)):
             raise QueryPlanError(
                 f"LogRef wraps a leaf source, got {type(source).__name__}"
             )
@@ -427,9 +434,13 @@ def union_activity_names(union: UnionSource) -> List[str]:
 
 
 def _default_branch_name(source, index: int) -> str:
+    from repro.graph.shard import ShardedLog, sharded_log_name
+
     if isinstance(source, MemmapLog):
         # same rule as repository_from_memmap provenance (core.streaming)
         return memmap_log_name(source)
+    if isinstance(source, ShardedLog):
+        return sharded_log_name(source)
     if isinstance(source, EventRepository):
         if len(source.log_names) == 1:
             return source.log_names[0]
@@ -443,17 +454,23 @@ def _default_branch_name(source, index: int) -> str:
 
 
 def source_kind(source) -> str:
+    # local import: graph.shard depends on core + sharding only — no cycle
+    from repro.graph.shard import ShardedLog
+
     if isinstance(source, EventRepository):
         return "repository"
     if isinstance(source, MemmapLog):
         return "memmap"
+    if isinstance(source, ShardedLog):
+        return "sharded"
     if isinstance(source, UnionSource):
         return "union(" + ",".join(b.kind for b in source.branches) + ")"
     if isinstance(source, (LogRef, FromLogs)):
         return source.kind
     raise QueryPlanError(
         f"unsupported query source {type(source).__name__}; "
-        "expected EventRepository, MemmapLog, or a source-algebra node"
+        "expected EventRepository, MemmapLog, ShardedLog, or a "
+        "source-algebra node"
     )
 
 
@@ -539,8 +556,8 @@ class Query:
     def dfg(self, backend: str = "auto"):
         return self._run(DFGSink(backend=backend))
 
-    def histogram(self):
-        return self._run(HistogramSink())
+    def histogram(self, backend: str = "auto"):
+        return self._run(HistogramSink(backend=backend))
 
     def variants(self, k: Optional[int] = None):
         return self._run(VariantsSink(k=k))

@@ -34,6 +34,7 @@ import copy
 import dataclasses
 import hashlib
 import json
+import os
 import threading
 from collections import OrderedDict
 from typing import Optional, Tuple
@@ -51,6 +52,8 @@ __all__ = [
     "fingerprint_memmap",
     "fingerprint_union",
     "split_union_fingerprint",
+    "fingerprint_sharded",
+    "split_sharded_fingerprint",
     "prefix_digest",
     "MemmapFingerprint",
     "parse_memmap_fingerprint",
@@ -147,16 +150,77 @@ class MemmapFingerprint:
     num_activities: int
 
 
+#: stat-validated fingerprint memo — the sharded tier fingerprints every
+#: shard on every query (once in the composite, once per sub-query), and
+#: at K=8 that sampling dominated the warm windowed path.  The memo key
+#: carries (size, mtime_ns) of each column file, so an append (writer uses
+#: append-mode file handles) or an in-place rewrite both recompute; a hit
+#: costs three ``stat()`` calls instead of O(sample) hashing.
+_FP_MEMO_MAX = 4096
+_FP_COLUMNS = ("activity.i32", "case.i32", "time.f64")
+_fp_memo: "OrderedDict[tuple, str]" = OrderedDict()
+_fp_memo_lock = make_lock("FingerprintMemo")
+
+
+def realpath_of(source) -> Optional[str]:
+    """``os.path.realpath(source.path)``, cached on the source object —
+    resolving symlinks costs one ``lstat`` per path component and the
+    sharded tier asks per shard per query."""
+    path = getattr(source, "path", None)
+    if not path:
+        return None
+    cached = getattr(source, "_realpath_cache", None)
+    if cached is not None and cached[0] == path:
+        return cached[1]
+    real = os.path.realpath(path)
+    try:
+        source._realpath_cache = (path, real)
+    except AttributeError:  # __slots__ sources: resolve every time
+        pass
+    return real
+
+
+def _memmap_stat_key(log: MemmapLog, sample_rows: int):
+    """Validator key for the fingerprint memo, or None (no backing files →
+    always hash)."""
+    real = realpath_of(log)
+    if real is None:
+        return None
+    stats = []
+    try:
+        for name in _FP_COLUMNS:
+            st = os.stat(os.path.join(real, name))
+            stats.append((st.st_size, st.st_mtime_ns))
+    except OSError:
+        return None
+    return (real, tuple(stats), log.num_events, log.num_activities,
+            sample_rows)
+
+
 def fingerprint_memmap(log: MemmapLog, sample_rows: int = 4096) -> str:
     """Prefix-preserving fingerprint: ``memmap:<prefix_digest>:<rows>:<A>``.
     Appending rows changes the row count (and usually the digest); editing
     in place is caught for the sampled ranges (full-file hashing would
     defeat the out-of-core design)."""
-    return "memmap:{}:{}:{}".format(
+    key = _memmap_stat_key(log, sample_rows)
+    if key is not None:
+        with _fp_memo_lock:
+            hit = _fp_memo.get(key)
+            if hit is not None:
+                _fp_memo.move_to_end(key)
+                return hit
+    fp = "memmap:{}:{}:{}".format(
         prefix_digest(log, sample_rows=sample_rows),
         log.num_events,
         log.num_activities,
     )
+    if key is not None:
+        with _fp_memo_lock:
+            _fp_memo[key] = fp
+            _fp_memo.move_to_end(key)
+            while len(_fp_memo) > _FP_MEMO_MAX:
+                _fp_memo.popitem(last=False)
+    return fp
 
 
 def parse_memmap_fingerprint(fp: str) -> Optional[MemmapFingerprint]:
@@ -197,14 +261,43 @@ def split_union_fingerprint(fp: str):
     return out
 
 
+def fingerprint_sharded(sharded) -> str:
+    """Composite fingerprint ``sharded(fp0|fp1|...)``, one slot per residue
+    class in shard order (``-`` marks a residue with no shard yet, so the
+    slot count pins K).  Each present slot is the shard's own
+    **prefix-preserving** ``memmap:<digest>:<rows>:<A>`` fingerprint: an
+    append changes only the owning shards' slots, which is exactly what lets
+    the engine keep per-shard cache entries (and delta resume) alive for
+    every untouched shard while any change still invalidates sharded-level
+    entries."""
+    return "sharded(" + "|".join(
+        "-" if s is None else fingerprint_memmap(s) for s in sharded.shards
+    ) + ")"
+
+
+def split_sharded_fingerprint(fp: str):
+    """``sharded(fp0|fp1|...)`` → ``[fp0_or_None, fp1_or_None, ...]`` (None
+    for absent shards; returns None if not a sharded fingerprint)."""
+    if not (fp.startswith("sharded(") and fp.endswith(")")):
+        return None
+    return [
+        None if part == "-" else part
+        for part in fp[len("sharded("):-1].split("|")
+    ]
+
+
 def fingerprint(source) -> str:
-    # local import: ast.py depends on core only, so this cannot cycle
+    # local imports: ast.py / graph.shard depend on core only, so no cycle
+    from repro.graph.shard import ShardedLog
+
     from .ast import FromLogs, LogRef, UnionSource
 
     if isinstance(source, EventRepository):
         return fingerprint_repository(source)
     if isinstance(source, MemmapLog):
         return fingerprint_memmap(source)
+    if isinstance(source, ShardedLog):
+        return fingerprint_sharded(source)
     if isinstance(source, UnionSource):
         return fingerprint_union(source)
     if isinstance(source, LogRef):

@@ -47,7 +47,11 @@ from repro.core.conformance import ModelSpec, ReplayResult
 from repro.core.dfg import dfg, dfg_numpy
 from repro.core.dicing import dice_repository, pair_mask_for_window
 from repro.core.discovery import DiscoveredModel, discover_dependency_graph
-from repro.core.distributed import distributed_dfg
+from repro.core.distributed import (
+    distributed_dfg,
+    merge_shard_counts,
+    merge_shard_psis,
+)
 from repro.core.repository import EventRepository, concat_repositories
 from repro.core.streaming import MemmapLog, StreamingDFGMiner, memmap_log_name
 from repro.core.telemetry import EventCollector
@@ -60,6 +64,7 @@ from repro.graph import (
     derive_process_map,
 )
 from repro.graph.build import EventGraph
+from repro.graph.shard import ShardedLog, sharded_log_name
 from repro.analysis.lockdep import make_lock
 from repro.obs import MetricsRegistry, QueryTrace, kernel_registry
 from repro.obs.trace import NullTrace
@@ -93,6 +98,7 @@ from .cache import (
     fingerprint,
     parse_memmap_fingerprint,
     prefix_digest,
+    realpath_of,
 )
 from .optimize import canonicalize, compose_views, distribute_over_union
 from .planner import (
@@ -161,6 +167,7 @@ class EngineStats:
     union_queries: int = 0  # multi-source (Q.logs) queries, incl. compare
     graph_queries: int = 0  # answered from the CSR event-knowledge graph
     conformance_queries: int = 0  # fitness / alignments sinks
+    shard_queries: int = 0  # answered by the sharded-graph merge backend
 
 
 @dataclasses.dataclass
@@ -217,12 +224,23 @@ def repository_from_memmap(
     repository's single ``log_names`` entry, so cross-log provenance
     survives materialization — unions/compares over several materialized
     memmaps keep telling their branches apart.
+
+    A :class:`ShardedLog` materializes as the concatenation of its shards;
+    the canonical lexsort restores the global trace-contiguous, time-sorted
+    order (cases never span shards, so no case is ever split by it).
     """
+    if isinstance(log, ShardedLog):
+        parts = [s for _, s in log.present_shards()]
+        default_name = sharded_log_name(log)
+    else:
+        parts = [log]
+        default_name = memmap_log_name(log)
     acts, cases, times = [], [], []
-    for a, c, t in log.iter_chunks():
-        acts.append(a)
-        cases.append(c)
-        times.append(t)
+    for part in parts:
+        for a, c, t in part.iter_chunks():
+            acts.append(a)
+            cases.append(c)
+            times.append(t)
     a = np.concatenate(acts) if acts else np.zeros((0,), np.int32)
     c = np.concatenate(cases) if cases else np.zeros((0,), np.int32)
     t = np.concatenate(times) if times else np.zeros((0,), np.float64)
@@ -236,9 +254,9 @@ def repository_from_memmap(
         event_trace=trace_col.astype(np.int32),
         event_time=t,
         trace_log=np.zeros(uniq_cases.shape[0], dtype=np.int32),
-        activity_names=memmap_activity_names(log),
+        activity_names=list(log.activity_labels()),
         trace_names=[f"case_{int(x)}" for x in uniq_cases],
-        log_names=[log_name or memmap_log_name(log)],
+        log_names=[log_name or default_name],
     )
 
 
@@ -356,7 +374,9 @@ class QueryEngine:
         calibration_path: Optional[str] = None,
         graph_crossover: Optional[int] = None,
         replay_crossover: Optional[int] = None,
+        sharded_crossover: Optional[int] = None,
         max_graphs: int = 8,
+        graph_spill_dir: Optional[str] = None,
         metrics: Optional[MetricsRegistry] = None,
         trace: bool = True,
         telemetry_max_events: Optional[int] = 1 << 16,
@@ -391,6 +411,16 @@ class QueryEngine:
             if replay_crossover is None
             else replay_crossover
         )
+        # sharded log size below which a one-host concat-and-count beats
+        # the K-way shard merge (measured from BENCH_shard.json when
+        # available); fitted crossover *curves* from any committed bench
+        # calibration upgrade the scalars at plan time
+        self.sharded_crossover = (
+            cal["sharded_single_crossover"]
+            if sharded_crossover is None
+            else sharded_crossover
+        )
+        self.calibration_curves = cal.get("curves") or {}
         # live counters sit in one lock-protected registry (the old
         # bare-int EngineStats attributes raced under concurrent run());
         # ``.stats`` rebuilds the dataclass as a point-in-time snapshot
@@ -405,6 +435,7 @@ class QueryEngine:
         self._c_union = m.counter("engine_union_queries_total")
         self._c_graph = m.counter("engine_graph_queries_total")
         self._c_conformance = m.counter("engine_conformance_queries_total")
+        self._c_shard = m.counter("engine_shard_queries_total")
         self._h_replay_chunk = m.histogram("replay_chunk_seconds")
         self._h_delta_fraction = m.histogram("delta_suffix_fraction")
         m.gauge("engine_cache_hit_ratio", self._cache_hit_ratio)
@@ -431,6 +462,7 @@ class QueryEngine:
             max_graphs=max_graphs,
             memory_budget_events=self.memory_budget_events,
             metrics=self.metrics,
+            spill_dir=graph_spill_dir,
         )
         # per-source topology-query (miss) counter feeding the crossover
         self._topo_seen: "OrderedDict[str, int]" = OrderedDict()  # guarded by _lock
@@ -475,6 +507,7 @@ class QueryEngine:
             union_queries=self._c_union.value,
             graph_queries=self._c_graph.value,
             conformance_queries=self._c_conformance.value,
+            shard_queries=self._c_shard.value,
         )
 
     def _cache_hit_ratio(self) -> float:
@@ -493,6 +526,8 @@ class QueryEngine:
     def _trace_begin(self, qid: int, sink: Sink, source) -> QueryTrace:
         if isinstance(source, UnionSource):
             kind = "union"
+        elif isinstance(source, ShardedLog):
+            kind = "sharded"
         elif isinstance(source, MemmapLog):
             kind = "memmap"
         else:
@@ -702,7 +737,13 @@ class QueryEngine:
         if isinstance(logical.sink, CONFORMANCE_SINKS):
             if not self._conformance_graph_ok(source):
                 return False
-        if self.graphs.peek(fp) or self.graphs.has_extendable(source):
+        if isinstance(source, ShardedLog):
+            # warm when every present shard's CSR is registered (either
+            # tier) — then the K-way merge serves without any shard scan,
+            # so even a below-crossover log should stay on sharded-graph
+            if self._shards_warm(source):
+                return True
+        elif self.graphs.peek(fp) or self.graphs.has_extendable(source):
             return True
         with self._lock:
             n = self._topo_seen.get(fp, 0) + 1
@@ -711,6 +752,15 @@ class QueryEngine:
             while len(self._topo_seen) > self._max_topo_seen:
                 self._topo_seen.popitem(last=False)
         return n >= self.graph_crossover
+
+    def _shards_warm(self, sharded: ShardedLog) -> bool:
+        """Every present shard has a registered graph (memory or disk
+        tier) built from the shard's current — or an appendable earlier —
+        state."""
+        shards = sharded.present_shards()
+        return bool(shards) and all(
+            self.graphs.has_extendable(s) for _, s in shards
+        )
 
     def _plan_cached(
         self,
@@ -734,6 +784,8 @@ class QueryEngine:
             fused_dicing=self.fused_dicing,
             graph_available=graph_available,
             replay_crossover=self.replay_crossover,
+            sharded_crossover=self.sharded_crossover,
+            curves=self.calibration_curves,
         )
         with self._lock:
             self._plans[plan_key] = physical
@@ -769,14 +821,18 @@ class QueryEngine:
                 isinstance(logical.sink, CONFORMANCE_SINKS)
                 and self._conformance_graph_ok(query.source)
             )
+            warm = (
+                self._shards_warm(query.source)
+                if isinstance(query.source, ShardedLog)
+                else (
+                    self.graphs.peek(fp)
+                    or self.graphs.has_extendable(query.source)
+                )
+            )
             graph_available = (
                 sink_ok
                 and not logical.has_barrier()
-                and (
-                    self.graphs.peek(fp)
-                    or self.graphs.has_extendable(query.source)
-                    or seen + 1 >= self.graph_crossover
-                )
+                and (warm or seen + 1 >= self.graph_crossover)
             )
         physical = plan_physical(
             logical, info,
@@ -786,6 +842,8 @@ class QueryEngine:
             fused_dicing=self.fused_dicing,
             graph_available=graph_available,
             replay_crossover=self.replay_crossover,
+            sharded_crossover=self.sharded_crossover,
+            curves=self.calibration_curves,
         )
         lines = [
             f"logical : {logical.describe()}",
@@ -1262,8 +1320,8 @@ class QueryEngine:
         """Stable identity for delta-candidate lookup.  Only a hint: a path
         reused for unrelated data fails the prefix-digest proof and falls
         back to a full execution."""
-        if isinstance(source, MemmapLog):
-            return os.path.realpath(source.path)
+        if isinstance(source, (MemmapLog, ShardedLog)):
+            return realpath_of(source)
         return None
 
     def _try_delta(
@@ -1468,6 +1526,8 @@ class QueryEngine:
                 # right shape, without materializing or scanning anything
                 value, names = self._empty_result(source, logical, pre)
                 return value, names, None
+        if physical.backend == "sharded-graph":
+            return self._execute_sharded(source, logical, physical)
         if physical.backend == "graph":
             return self._execute_graph(source, logical, physical, source_fp)
         if physical.backend == "streaming":
@@ -1476,7 +1536,7 @@ class QueryEngine:
             )
         repo = (
             self._materialize(source, source_fp)
-            if logical.source == "memmap"
+            if logical.source in ("memmap", "sharded")
             else source
         )
         st = _collect(repo, logical)
@@ -1502,8 +1562,8 @@ class QueryEngine:
 
     def _empty_result(self, source, logical: LogicalPlan, st: _Collected):
         names = (
-            memmap_activity_names(source)
-            if logical.source == "memmap"
+            list(source.activity_labels())
+            if logical.source in ("memmap", "sharded")
             else list(source.activity_names)
         )
         if st.keep is not None:
@@ -1826,6 +1886,97 @@ class QueryEngine:
             repo.num_traces, list(repo.activity_names),
         )
 
+    # -- sharded graph (case-partitioned shard merge) ------------------------
+    def _shard_raw(
+        self,
+        sharded: ShardedLog,
+        branch_ops: Tuple,
+        sub_sink: Sink,
+        union_names: List[str],
+    ):
+        """Per-shard raw sink values + alignment maps, each through a full
+        :meth:`run` — so every shard keeps its own cache entry, its own
+        CSR snapshot in the graph store, and its own append-aware delta
+        path (an append touches only the owning shards' fingerprints; the
+        other shards answer as plain cache hits with zero rows scanned).
+        Sub-traces ride the enclosing trace as ``shard<k>`` branches, like
+        union branches."""
+        vals, maps = [], []
+        cur = self._current_trace()
+        for k, shard in sharded.present_shards():
+            sub = self.run(Query(shard, branch_ops, self), sub_sink)
+            if cur is not None and cur.enabled and sub.trace is not None:
+                cur.add_branch(f"shard{k}", sub.trace)
+            vals.append(sub.value)
+            maps.append(
+                self._align_ids(memmap_activity_names(shard), union_names)
+            )
+        return vals, maps
+
+    def _execute_sharded(
+        self, sharded: ShardedLog, logical: LogicalPlan,
+        physical: PhysicalPlan,
+    ):
+        """Topology/histogram sinks over a case-partitioned sharded log.
+
+        Cases never span shards under the ``case % K`` partition, so every
+        DF pair is counted by exactly one shard and the global Ψ is a *pure
+        sum* of the per-shard Ψ matrices on the aligned union vocabulary
+        (:func:`repro.core.distributed.merge_shard_psis` — the same psum
+        contract as the distributed backend; with a mesh the reduction runs
+        on-device).  Each shard answers through the graph tier (pinned
+        ``backend="graph"`` sub-query), so repeated queries hit resident
+        CSR snapshots and never rescan the log; masks and views run once at
+        the merge, exactly like union branches.
+        """
+        self._c_shard.inc()
+        names = list(sharded.activity_labels())
+        st = _collect(None, logical)  # planner guarantees barrier-free
+        if st.keep is not None:
+            _validate_keep(st.keep, names)
+        branch_ops, _merge = distribute_over_union(logical)
+        tr = self._current_trace()
+        sink = logical.sink
+
+        if isinstance(sink, HistogramSink):
+            vals, maps = self._shard_raw(
+                sharded, branch_ops, HistogramSink(backend="graph"), names
+            )
+            s = tr.begin("shard_merge") if tr is not None else None
+            counts = merge_shard_counts(vals, maps, len(names))
+            value, out_names = self._finish_streaming_hist(counts, names, st)
+            if s is not None:
+                tr.end(s)
+            return value, out_names, None
+
+        psis, maps = self._shard_raw(
+            sharded, branch_ops, DFGSink(backend="graph"), names
+        )
+        counts_vals = cmaps = None
+        if isinstance(sink, ProcessMapSink):
+            # node weights need a second, histogram sub-query per shard —
+            # same deliberate trade as the union merge: both sub-results
+            # stay plain single-log cache entries every sink type reuses
+            counts_vals, cmaps = self._shard_raw(
+                sharded, branch_ops, HistogramSink(backend="graph"), names
+            )
+        s = tr.begin("shard_merge") if tr is not None else None
+        psi = merge_shard_psis(psis, maps, len(names), mesh=self.mesh)
+        if isinstance(sink, DFGSink):
+            value, out_names = self._finish_streaming_dfg(psi, names, st)
+        else:
+            counts = (
+                merge_shard_counts(counts_vals, cmaps, len(names))
+                if counts_vals is not None
+                else np.zeros(len(names), dtype=np.int64)
+            )
+            value, out_names = self._finish_topology(
+                psi, counts, names, st, sink
+            )
+        if s is not None:
+            tr.end(s)
+        return value, out_names, None
+
     # -- graph (event-knowledge-graph store) ---------------------------------
     def _execute_graph(
         self, source, logical: LogicalPlan, physical: PhysicalPlan,
@@ -1845,7 +1996,7 @@ class QueryEngine:
           columnar, kept only for pinned-backend correctness.
         """
         fp = source_fp if source_fp is not None else fingerprint(source)
-        g = self.graphs.graph_for(source, fp)
+        g = self.graphs.graph_for(source, fp, on_rows=self._note_rows)
         self._c_graph.inc()
         names = list(g.activity_names)
         st = _collect(None, logical)  # planner guarantees barrier-free
@@ -1869,6 +2020,33 @@ class QueryEngine:
         windowed = st.window is not None and not st.window.empty
         plain = st.window is None and st.keep is None and st.view is None
 
+        if isinstance(logical.sink, HistogramSink):
+            # counts straight from the store: the :OF_TYPE in-degrees
+            # un-windowed, the time index (or a table mask) under a window
+            if windowed:
+                if not g.has_event_tables:
+                    raise QueryPlanError(
+                        "windowed graph histograms need event tables; this "
+                        "graph is topology-only (built out-of-core) — use "
+                        "streaming/auto"
+                    )
+                idx = g.window_index()
+                if idx is not None:
+                    counts = idx.counts(
+                        st.window.t0, st.window.t1, g.num_activities
+                    )
+                else:
+                    times = np.asarray(g.event_time)
+                    m = (times >= st.window.t0) & (times < st.window.t1)
+                    counts = np.bincount(
+                        np.asarray(g.event_activity)[m],
+                        minlength=g.num_activities,
+                    ).astype(np.int64)
+            else:
+                counts = np.asarray(g.node_counts)
+            value, out_names = self._finish_streaming_hist(counts, names, st)
+            return value, out_names, None
+
         if plain and isinstance(logical.sink, NeighborhoodSink):
             self._check_center(logical.sink, names)
             value = derive_neighborhood(
@@ -1890,7 +2068,10 @@ class QueryEngine:
                     "is topology-only (built out-of-core) — use "
                     "streaming/auto"
                 )
-            psi, counts = self._windowed_from_tables(g, st.window)
+            psi, counts = self._windowed_from_tables(
+                g, st.window,
+                need_counts=not isinstance(logical.sink, DFGSink),
+            )
         else:
             psi = g.psi()
             counts = np.asarray(g.node_counts)
@@ -1903,15 +2084,33 @@ class QueryEngine:
         return value, out_names, None
 
     @staticmethod
-    def _windowed_from_tables(g: EventGraph, window: Window):
+    def _windowed_from_tables(
+        g: EventGraph, window: Window, need_counts: bool = True
+    ):
         """(Ψ, node counts) under a time window, from the graph's canonical
-        event tables — identical to the columnar pair-endpoint mask."""
+        event tables — identical to the columnar pair-endpoint mask.
+        ``need_counts=False`` (DFG sinks) skips the per-activity bincount.
+
+        Resident graphs answer through their lazily built
+        :class:`~repro.graph.build.WindowIndex` (two binary searches +
+        O(window rows)); the masked O(E) path below is the fallback for
+        tables the index can't represent."""
+        a = g.num_activities
+        idx = g.window_index()
+        if idx is not None:
+            psi = idx.psi(window.t0, window.t1, a)
+            counts = (
+                idx.counts(window.t0, window.t1, a) if need_counts else None
+            )
+            return psi, counts
         acts = np.asarray(g.event_activity)
         traces = np.asarray(g.event_trace)
         times = np.asarray(g.event_time)
         m = (times >= window.t0) & (times < window.t1)
-        a = g.num_activities
-        counts = np.bincount(acts[m], minlength=a).astype(np.int64)
+        counts = (
+            np.bincount(acts[m], minlength=a).astype(np.int64)
+            if need_counts else None
+        )
         if acts.shape[0] < 2:
             return np.zeros((a, a), dtype=np.int64), counts
         valid = (traces[:-1] == traces[1:]) & m[:-1] & m[1:]

@@ -45,13 +45,16 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 from typing import Dict, Optional, Tuple
 
 import jax
+import numpy as np
 
 from repro.core.repository import EventRepository
 from repro.core.streaming import MemmapLog
+from repro.graph.shard import ShardedLog
 
 from .ast import (
     CONFORMANCE_SINKS,
@@ -78,11 +81,15 @@ from .ast import (
 __all__ = [
     "SourceInfo",
     "PhysicalPlan",
+    "CrossoverCurve",
     "source_info",
     "plan_physical",
     "load_calibration",
+    "resolve_threshold",
     "estimate_cost_s",
 ]
+
+_LOG = logging.getLogger(__name__)
 
 #: below this many pairs, numpy beats any device dispatch
 TINY_PAIRS = 2048
@@ -97,6 +104,10 @@ GRAPH_REPEAT_CROSSOVER = 3
 #: it to the memory budget (identical behavior to the budget gate), the
 #: measured value comes from BENCH_conformance.json
 REPLAY_STREAMING_CROSSOVER = MEMORY_BUDGET_EVENTS
+#: sharded-log events above which the sharded-graph backend (per-shard CSR
+#: snapshots + aligned psum merge) beats concatenate-and-materialize on a
+#: single host; the measured value comes from BENCH_shard.json
+SHARDED_SINGLE_CROSSOVER = 1 << 18
 
 # Order-of-magnitude cost priors for the observability drift check: fixed
 # per-backend dispatch overhead plus an events-per-second throughput.
@@ -110,6 +121,7 @@ _COST_DISPATCH_S = {
     "pallas": 3e-4,       # jit-cache lookup + host↔device transfers
     "distributed": 1e-3,  # mesh collective setup
     "graph": 5e-5,        # CSR lookup / densify
+    "sharded-graph": 5e-4,  # K store lookups + K·A² aligned merge
 }
 # Conservative CPU-measured throughputs (events/s), cold-path inclusive:
 # a cold scan on a memmap source pays materialization + masking on top of
@@ -126,6 +138,7 @@ _COST_RATE_EVENTS_S = {
     "delta": 5e6,
     "graph": 4e8,
     "concat": 5e6,
+    "sharded-graph": 2e8,  # per-shard CSR serves, minus the merge constant
 }
 
 
@@ -154,16 +167,72 @@ _GRAPH_CLAMPS = {
 _CONFORMANCE_CLAMPS = {
     "replay_streaming_crossover": (1 << 18, 1 << 26),
 }
+_SHARD_CLAMPS = {
+    "sharded_single_crossover": (1 << 14, 1 << 24),
+}
 _REPO_ROOT = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "..", "..")
 )
+
+#: calibration basenames already warned about this process — a planner that
+#: runs on static fallbacks should say so exactly once, not on every query
+_warned_missing: set = set()
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossoverCurve:
+    """A crossover threshold as a *function of problem size* instead of one
+    scalar.  Benches emit ``calibration.curves.<key>`` as measured
+    ``[work, threshold]`` points where ``work = events × activities``; the
+    curve interpolates them piecewise-linearly (clamped to the endpoint
+    thresholds outside the measured range), so the same mechanism serves
+    every backend crossover — tiny_pairs, replay, graph repeats, and the
+    sharded-vs-single-host decision."""
+
+    key: str
+    xs: Tuple[float, ...]  # sorted work coordinates (events × activities)
+    ys: Tuple[float, ...]  # measured thresholds at those sizes
+
+    def value_at(self, work: float) -> int:
+        return int(round(float(np.interp(float(work), self.xs, self.ys))))
+
+
+def _parse_curves(
+    cal: dict, clamps: Dict[str, Tuple[int, int]], out: Dict
+) -> None:
+    """Fit clamp-railed :class:`CrossoverCurve` objects from a record's
+    ``curves`` section.  Only keys this record is allowed to calibrate (its
+    scalar clamp keys) are accepted, and every threshold passes the same
+    sanity rails as the scalar — one corrupt record still cannot flip plans
+    outside the measured regime."""
+    curves = cal.get("curves")
+    if not isinstance(curves, dict):
+        return
+    for key, (lo, hi) in clamps.items():
+        pts = curves.get(key)
+        if not isinstance(pts, list) or not pts:
+            continue
+        try:
+            parsed = sorted(
+                (float(x), float(min(max(float(y), lo), hi)))
+                for x, y in pts
+                if float(x) >= 0 and float(y) > 0
+            )
+        except (TypeError, ValueError):
+            continue
+        if parsed:
+            out.setdefault("curves", {})[key] = CrossoverCurve(
+                key=key,
+                xs=tuple(x for x, _ in parsed),
+                ys=tuple(y for _, y in parsed),
+            )
 
 
 def _read_calibration(
     explicit: Optional[str],
     basename: str,
     clamps: Dict[str, Tuple[int, int]],
-    out: Dict[str, int],
+    out: Dict,
 ) -> None:
     """Merge one bench record's ``calibration`` section into ``out``,
     clamped.  An explicitly named record is authoritative: if it is missing
@@ -188,14 +257,23 @@ def _read_calibration(
             v = cal.get(key)
             if isinstance(v, (int, float)) and not isinstance(v, bool) and v > 0:
                 out[key] = int(min(max(int(v), lo), hi))
+        _parse_curves(cal, clamps, out)
         return
+    if basename not in _warned_missing:
+        _warned_missing.add(basename)
+        _LOG.warning(
+            "calibration record %s not found (searched explicit path, cwd, "
+            "repo root); the planner falls back to static thresholds for %s",
+            basename, sorted(clamps),
+        )
 
 
 def load_calibration(
     path: Optional[str] = None,
     graph_path: Optional[str] = None,
     conformance_path: Optional[str] = None,
-) -> Dict[str, int]:
+    shard_path: Optional[str] = None,
+) -> Dict:
     """Cost-model thresholds, measured when available.
 
     ``benchmarks/bench_query_engine.py`` writes a ``calibration`` section
@@ -207,19 +285,27 @@ def load_calibration(
     ``BENCH_graph.json``, and ``benchmarks/bench_conformance.py`` the
     streaming↔materialize replay crossover
     (``replay_streaming_crossover`` events) into
-    ``BENCH_conformance.json``.  When such records exist — searched as:
+    ``BENCH_conformance.json``, and ``benchmarks/bench_shard.py`` the
+    sharded-vs-single-host crossover (``sharded_single_crossover`` events)
+    into ``BENCH_shard.json``.  When such records exist — searched as:
     explicit path argument, ``$GRAPHPM_BENCH_QUERY`` /
-    ``$GRAPHPM_BENCH_GRAPH`` / ``$GRAPHPM_BENCH_CONFORMANCE``,
-    ``./BENCH_*.json``, ``<repo root>/BENCH_*.json`` — their values replace
-    the static constants, clamped to sanity rails.  The constants are
-    always the fallback, so a machine that never benchmarked plans exactly
-    as before.
+    ``$GRAPHPM_BENCH_GRAPH`` / ``$GRAPHPM_BENCH_CONFORMANCE`` /
+    ``$GRAPHPM_BENCH_SHARD``, ``./BENCH_*.json``, ``<repo
+    root>/BENCH_*.json`` — their values replace the static constants,
+    clamped to sanity rails, and any ``curves`` section becomes a
+    :class:`CrossoverCurve` under ``out["curves"]`` (threshold as a function
+    of events × activities — used in preference to the scalar when
+    present).  The constants are always the fallback, so a machine that
+    never benchmarked plans exactly as before; a missing record logs a
+    one-time warning so silent static-fallback runs are visible.
     """
-    out = {
+    out: Dict = {
         "tiny_pairs": TINY_PAIRS,
         "memory_budget_events": MEMORY_BUDGET_EVENTS,
         "graph_repeat_crossover": GRAPH_REPEAT_CROSSOVER,
         "replay_streaming_crossover": REPLAY_STREAMING_CROSSOVER,
+        "sharded_single_crossover": SHARDED_SINGLE_CROSSOVER,
+        "curves": {},
     }
     _read_calibration(
         path or os.environ.get("GRAPHPM_BENCH_QUERY"),
@@ -233,11 +319,25 @@ def load_calibration(
         conformance_path or os.environ.get("GRAPHPM_BENCH_CONFORMANCE"),
         "BENCH_conformance.json", _CONFORMANCE_CLAMPS, out,
     )
+    _read_calibration(
+        shard_path or os.environ.get("GRAPHPM_BENCH_SHARD"),
+        "BENCH_shard.json", _SHARD_CLAMPS, out,
+    )
     return out
+
+
+def resolve_threshold(calibration: Dict, key: str, work: float) -> int:
+    """The effective crossover for ``key`` at problem size ``work``
+    (events × activities): the fitted curve when the calibration carries
+    one, else the (possibly bench-measured) scalar."""
+    curve = calibration.get("curves", {}).get(key)
+    if curve is not None:
+        return curve.value_at(work)
+    return int(calibration[key])
 
 _DFG_BACKENDS = {
     "auto", "numpy", "scatter", "onehot", "pallas", "streaming", "distributed",
-    "graph",
+    "graph", "sharded-graph",
 }
 #: conformance sinks replay/align sequences — device counting backends do
 #: not apply; "numpy" is the columnar replay, "streaming" the one-pass
@@ -247,7 +347,7 @@ _CONFORMANCE_BACKENDS = {"auto", "numpy", "streaming", "graph"}
 
 @dataclasses.dataclass(frozen=True)
 class SourceInfo:
-    kind: str  # "repository" | "memmap" | "union(...)"
+    kind: str  # "repository" | "memmap" | "sharded" | "union(...)"
     num_events: int
     num_pairs: int
     num_activities: int
@@ -256,6 +356,10 @@ class SourceInfo:
     # union may mix an out-of-core memmap branch with in-memory ones)
     branches: Optional[Tuple["SourceInfo", ...]] = None
     branch_names: Optional[Tuple[str, ...]] = None
+    # sharded sources only: per-shard shapes (each shard is costed as an
+    # independent memmap — windowed serves need every shard in budget)
+    shards: Optional[Tuple["SourceInfo", ...]] = None
+    shard_names: Optional[Tuple[str, ...]] = None
 
 
 def source_info(source) -> SourceInfo:
@@ -274,6 +378,18 @@ def source_info(source) -> SourceInfo:
             num_pairs=max(source.num_events - 1, 0),
             num_activities=source.num_activities,
             activity_names=None,
+        )
+    if isinstance(source, ShardedLog):
+        present = source.present_shards()
+        infos = tuple(source_info(s) for _, s in present)
+        return SourceInfo(
+            kind="sharded",
+            num_events=sum(i.num_events for i in infos),
+            num_pairs=sum(i.num_pairs for i in infos),
+            num_activities=source.num_activities,
+            activity_names=tuple(source.activity_labels()),
+            shards=infos,
+            shard_names=tuple(f"shard{k}" for k, _ in present),
         )
     if isinstance(source, UnionSource):
         infos = tuple(source_info(b.resolve()) for b in source.branches)
@@ -532,6 +648,129 @@ def _plan_union(
     )
 
 
+def _plan_sharded(
+    plan: LogicalPlan,
+    info: SourceInfo,
+    *,
+    mesh,
+    tiny_pairs: int,
+    memory_budget_events: int,
+    fused_dicing: bool,
+    graph_available: bool,
+    sharded_crossover: int,
+) -> PhysicalPlan:
+    """Physical plan for a case-partitioned :class:`ShardedLog`.
+
+    The ``sharded-graph`` backend serves topology/histogram sinks from K
+    per-shard CSR snapshots merged by an aligned pure sum (cases never span
+    shards).  Below the measured sharded-vs-single-host crossover — and when
+    the shard graphs are not already warm — a one-host
+    concatenate-and-materialize count wins (the K-way merge constant
+    dominates tiny logs), so ``auto`` falls back to it; the crossover joins
+    the same calibration-curve mechanism as every other threshold.
+    """
+    has_barrier, window, acts, view = _segment_features(plan)
+    windowed = window is not None and not window.empty
+    notes = []
+    if window is not None and window.empty:
+        notes.append("empty_window=zeros")
+
+    if isinstance(plan.sink, CompareSink):
+        raise QueryPlanError(
+            "compare() requires a multi-log source — build one with "
+            "Q.logs(a, b, ...)"
+        )
+    if isinstance(plan.sink, CONFORMANCE_SINKS):
+        raise QueryPlanError(
+            "conformance sinks are not implemented for sharded logs; "
+            "query one shard directly or materialize a dicing first"
+        )
+    requested = getattr(plan.sink, "backend", "auto")
+    if requested not in ("auto", "sharded-graph"):
+        raise QueryPlanError(
+            f"backend {requested!r} is not available on a sharded log; "
+            "use 'sharded-graph' or 'auto'"
+        )
+
+    if has_barrier or isinstance(plan.sink, VariantsSink):
+        if requested == "sharded-graph":
+            raise QueryPlanError(
+                "sharded-graph cannot evaluate variants / materializing ops "
+                "(top_variants / relink): they need the global trace table; "
+                "drop them or use auto"
+            )
+        if info.num_events > memory_budget_events:
+            raise QueryPlanError(
+                "variants / materializing ops on a sharded log concatenate "
+                "the shards in memory; the log exceeds the memory budget"
+            )
+        return PhysicalPlan(
+            backend="numpy",
+            materialize=True,
+            notes=("sharded=materialize_concatenation",) + tuple(notes),
+        )
+
+    single_host = (
+        requested == "auto"
+        and not graph_available
+        and info.num_events <= min(sharded_crossover, memory_budget_events)
+    )
+    if single_host:
+        notes.append(
+            f"sharded=single_host_below_crossover"
+            f"({info.num_events}≤{sharded_crossover})"
+        )
+        if isinstance(plan.sink, HistogramSink):
+            return PhysicalPlan(
+                backend="numpy", materialize=True, notes=tuple(notes)
+            )
+        backend = _device_backend(
+            info.num_pairs, mesh=mesh, tiny_pairs=tiny_pairs,
+            requested="auto",
+        )
+        view_pushdown = False
+        if view is not None and info.activity_names is not None:
+            labels = view.to_view().visible_labels(info.activity_names)
+            if len(labels) < info.num_activities:
+                view_pushdown = True
+                notes.append(
+                    f"count_space=G×G ({len(labels)}<{info.num_activities})"
+                )
+        return PhysicalPlan(
+            backend=backend,
+            materialize=True,
+            fused_dicing=fused_dicing and backend == "pallas" and windowed,
+            view_pushdown=view_pushdown,
+            activities_as_output_mask=acts is not None and not view_pushdown,
+            notes=tuple(notes),
+        )
+
+    if windowed:
+        for name, sinfo in zip(info.shard_names, info.shards):
+            if sinfo.num_events > memory_budget_events:
+                raise QueryPlanError(
+                    "windowed sharded-graph queries serve from per-shard "
+                    f"event tables; {name} exceeds the memory budget — "
+                    "repartition into more shards"
+                )
+    notes.append(
+        "sharded=tables_window_merge" if windowed
+        else "sharded=csr_psum_merge"
+    )
+    # per-shard cost estimates: each shard is an independent graph serve
+    for name, sinfo in zip(info.shard_names, info.shards):
+        notes.append(
+            f"shard[{name}]=graph "
+            f"cost≈{estimate_cost_s('graph', sinfo.num_events):.1e}s"
+        )
+    return PhysicalPlan(
+        backend="sharded-graph",
+        row_range_window=(window.t0, window.t1) if windowed else None,
+        activities_as_output_mask=acts is not None,
+        notes=tuple(notes),
+    )
+
+
 def plan_physical(
     plan: LogicalPlan,
     info: SourceInfo,
@@ -542,6 +781,8 @@ def plan_physical(
     fused_dicing: bool = True,
     graph_available: bool = False,
     replay_crossover: int = REPLAY_STREAMING_CROSSOVER,
+    sharded_crossover: int = SHARDED_SINGLE_CROSSOVER,
+    curves: Optional[Dict[str, CrossoverCurve]] = None,
 ) -> PhysicalPlan:
     """Map a canonical logical plan to a physical one.  ``plan`` must be the
     output of :func:`repro.query.optimize.canonicalize`.
@@ -552,11 +793,40 @@ def plan_physical(
     With it, un-windowed topology sinks route to the ``graph`` backend —
     CSR lookups instead of an O(E) recount — and conformance sinks replay
     the graph's stored event tables.
+
+    ``curves`` (from ``load_calibration()["curves"]``) upgrades the scalar
+    crossovers to fitted per-backend curves evaluated at this source's
+    problem size (events × activities).
     """
+    if curves:
+        work = float(info.num_events) * float(max(info.num_activities, 1))
+        for key, cur in (
+            ("tiny_pairs", "tiny_pairs"),
+            ("replay_streaming_crossover", "replay"),
+            ("sharded_single_crossover", "sharded"),
+        ):
+            curve = curves.get(key)
+            if curve is None:
+                continue
+            v = curve.value_at(work)
+            if cur == "tiny_pairs":
+                tiny_pairs = v
+            elif cur == "replay":
+                replay_crossover = v
+            else:
+                sharded_crossover = v
     if isinstance(plan.sink, (DFGSink, CompareSink, ProcessMapSink,
-                              NeighborhoodSink)):
+                              NeighborhoodSink, HistogramSink)):
         if plan.sink.backend not in _DFG_BACKENDS:
             raise QueryPlanError(f"unknown DFG backend {plan.sink.backend!r}")
+        if (
+            plan.sink.backend == "sharded-graph"
+            and info.shards is None
+        ):
+            raise QueryPlanError(
+                "backend 'sharded-graph' requires a ShardedLog source — "
+                "partition one with repro.graph.partition_memmap_log"
+            )
     if info.branches is not None:
         return _plan_union(
             plan, info,
@@ -564,6 +834,15 @@ def plan_physical(
             memory_budget_events=memory_budget_events,
             fused_dicing=fused_dicing,
             replay_crossover=replay_crossover,
+        )
+    if info.shards is not None:
+        return _plan_sharded(
+            plan, info,
+            mesh=mesh, tiny_pairs=tiny_pairs,
+            memory_budget_events=memory_budget_events,
+            fused_dicing=fused_dicing,
+            graph_available=graph_available,
+            sharded_crossover=sharded_crossover,
         )
     if isinstance(plan.sink, CompareSink):
         raise QueryPlanError(
@@ -585,7 +864,37 @@ def plan_physical(
 
     if isinstance(plan.sink, (HistogramSink, VariantsSink)):
         needs_repo = isinstance(plan.sink, VariantsSink) or has_barrier
+        requested = getattr(plan.sink, "backend", "auto")
         if info.kind == "memmap":
+            # graph histograms: the stored :OF_TYPE in-degrees answer the
+            # un-windowed counts as a lookup; a window reads the graph's
+            # time index (event tables required, so out-of-core logs whose
+            # graphs are topology-only can't serve windowed counts)
+            windowed = window is not None and not window.empty
+            graph_ok = not needs_repo and not (
+                windowed and info.num_events > memory_budget_events
+            )
+            if requested == "graph":
+                if not graph_ok:
+                    raise QueryPlanError(
+                        "graph histograms cannot evaluate materializing ops "
+                        "or windows over out-of-core logs (topology-only "
+                        "graph) — use streaming/auto"
+                    )
+                return PhysicalPlan(
+                    backend="graph",
+                    activities_as_output_mask=acts is not None,
+                    notes=("graph=of_type_counts",) + tuple(notes),
+                )
+            if (
+                requested == "auto" and graph_available and graph_ok
+                and not windowed
+            ):
+                return PhysicalPlan(
+                    backend="graph",
+                    activities_as_output_mask=acts is not None,
+                    notes=("graph=of_type_counts",) + tuple(notes),
+                )
             if not needs_repo:  # chunked bincount, window → row range
                 return PhysicalPlan(
                     backend="streaming",
@@ -598,6 +907,12 @@ def plan_physical(
                     "or pre-dice the log"
                 )
             return PhysicalPlan(backend="numpy", materialize=True)
+        if requested == "graph" and not needs_repo:
+            return PhysicalPlan(
+                backend="graph",
+                activities_as_output_mask=acts is not None,
+                notes=("graph=of_type_counts",) + tuple(notes),
+            )
         return PhysicalPlan(backend="numpy")
 
     # -- topology sinks (DFG / process map / neighborhood) -------------------

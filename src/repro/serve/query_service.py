@@ -63,6 +63,7 @@ import numpy as np
 from repro.analysis.lockdep import make_lock
 from repro.core.streaming import MemmapLog, MemmapLogWriter
 from repro.core.views import AccessDenied, AccessPolicy, ActivityView
+from repro.graph.shard import ShardedLog
 from repro.query import ApplyView, Q, Query, QueryEngine, QueryPlanError
 
 __all__ = ["QueryService"]
@@ -169,6 +170,11 @@ class QueryService:
         is served unchanged when its window predates the append) instead of
         a full rescan.  Union dashboards over several logs stay warm the
         same way — only the appended branch is rescanned.
+
+        A registered :class:`ShardedLog` routes the batch to its owning
+        shards (``case % K``): only those shards' fingerprints change, so
+        the next sharded-graph query rescans just the owning shards'
+        suffixes and serves every other shard from cache.
         """
         name = request.get("log")
         with self._lock:
@@ -178,10 +184,10 @@ class QueryService:
             append_lock = self._append_locks.setdefault(
                 name, make_lock("QueryService.append")
             )
-        if not isinstance(source, MemmapLog):
+        if not isinstance(source, (MemmapLog, ShardedLog)):
             raise QueryPlanError(
-                f"log {name!r} is an in-memory repository; only memmap logs "
-                "support live appends"
+                f"log {name!r} is an in-memory repository; only memmap and "
+                "sharded logs support live appends"
             )
         activity = np.asarray(request["activity"], dtype=np.int32)
         case = np.asarray(request["case"], dtype=np.int32)
@@ -191,9 +197,12 @@ class QueryService:
         with append_lock:  # serialize writers: column files must not interleave
             with self._lock:
                 source = self._logs.get(name, source)  # newest handle
-            writer = MemmapLogWriter.open_append(source.path)
-            writer.append(activity, case, time)
-            grown = writer.close()
+            if isinstance(source, ShardedLog):
+                grown = source.append(activity, case, time)
+            else:
+                writer = MemmapLogWriter.open_append(source.path)
+                writer.append(activity, case, time)
+                grown = writer.close()
             with self._lock:
                 if name in self._logs:  # unless unregistered mid-append
                     self._logs[name] = grown

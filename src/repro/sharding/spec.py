@@ -32,7 +32,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 
 __all__ = [
     "ShardingRules", "make_rules", "param_shardings", "batch_shardings",
-    "cache_shardings",
+    "cache_shardings", "GraphShardSpec", "shard_of_cases", "graph_mesh",
 ]
 
 
@@ -213,3 +213,57 @@ def cache_shardings(r: ShardingRules, cache_shape) -> Dict:
         return r.nd(P(*([None] * nd)))
 
     return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+# ---------------------------------------------------------------------------
+# Graph-tier shard assignment (case-partitioned event-log shards)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphShardSpec:
+    """Static description of a case-partitioned log sharding.
+
+    Cases are assigned whole to shards (``assignment="case_mod"`` maps case
+    ``c`` to shard ``c % num_shards``), so every directly-follows pair is
+    shard-local and the global Ψ is a pure sum of per-shard (A, A) counts on
+    the aligned union vocabulary — the psum contract of
+    :func:`repro.core.distributed.distributed_dfg`.
+    """
+
+    num_shards: int
+    assignment: str = "case_mod"
+
+    def __post_init__(self):
+        if self.num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        if self.assignment != "case_mod":
+            raise ValueError(f"unknown shard assignment {self.assignment!r}")
+
+    def shard_of(self, case_ids: np.ndarray) -> np.ndarray:
+        return shard_of_cases(case_ids, self.num_shards)
+
+
+def shard_of_cases(case_ids, num_shards: int) -> np.ndarray:
+    """Owning shard per case id under the stable ``case % K`` rule.
+
+    Stability across appends is the load-bearing property: new events for an
+    existing case always land on the shard that already holds that case, so
+    an append touches only the owning shards and every other shard's
+    prefix-preserving fingerprint (and therefore its cached graph) survives.
+    """
+    ids = np.asarray(case_ids, dtype=np.int64)
+    if num_shards < 1:
+        raise ValueError("num_shards must be >= 1")
+    return ids % np.int64(num_shards)
+
+
+def graph_mesh(num_shards: int) -> Optional[Mesh]:
+    """1-D ``("shard",)`` mesh over up to ``num_shards`` local devices, for
+    running the shard merge as an on-device psum; ``None`` when only a single
+    device is visible (the numpy aligned-sum merge path needs no mesh)."""
+    devices = jax.devices()
+    n = min(num_shards, len(devices))
+    if n <= 1:
+        return None
+    return Mesh(np.asarray(devices[:n]), ("shard",))

@@ -10,10 +10,22 @@ class DFGSink:
 
 @dataclasses.dataclass(frozen=True)
 class HistogramSink:
-    pass
+    backend: str = "auto"
 
 
-SINKS = (DFGSink, HistogramSink)
+@dataclasses.dataclass(frozen=True)
+class ShardedDFGSink:
+    """Sharded-tier shape: a pinned backend plus a private resolution memo
+    (underscore attributes are fingerprint-keyed, not payload-keyed)."""
+
+    backend: str = "sharded-graph"
+
+    def resolve(self):
+        object.__setattr__(self, "_shard_memo", ())
+        return self
+
+
+SINKS = (DFGSink, HistogramSink, ShardedDFGSink)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,4 +1,4 @@
-from .ast import DFGSink, HistogramSink
+from .ast import DFGSink, HistogramSink, ShardedDFGSink
 
 
 def plan(sink):
@@ -6,4 +6,6 @@ def plan(sink):
         return "dfg"
     if isinstance(sink, HistogramSink):
         return "hist"
+    if isinstance(sink, ShardedDFGSink):
+        return "sharded-graph"
     raise TypeError(sink)

@@ -20,6 +20,17 @@ class MutableSink:
 
 
 @dataclasses.dataclass(frozen=True)
+class ShardedDFGSink:
+    backend: str = "sharded-graph"
+
+    def bind(self, k):
+        # public (non-underscore) grown attribute on a sharded plan node:
+        # two plans with different shard counts would collide on one key
+        object.__setattr__(self, "num_shards", k)
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
 class LogicalPlan:
     source: str
     sink: WindowSink

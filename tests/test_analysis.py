@@ -59,6 +59,9 @@ def test_unkeyed_plan_field_is_flagged():
     assert any("unkeyed plan field: WindowSink.span" in m for m in msgs)
     assert any("MutableSink is not frozen=True" in m for m in msgs)
     assert any(
+        "unkeyed plan field: ShardedDFGSink.num_shards" in m for m in msgs
+    )
+    assert any(
         "LogicalPlan.sink does not flow into the canonical payload" in m
         for m in msgs
     )
@@ -135,6 +138,20 @@ def test_unkeyed_field_in_real_tree_is_caught(tmp_path):
                for f in found)
 
 
+def test_new_sharded_sink_in_real_tree_is_caught(tmp_path):
+    # the sharded-graph dispatch tables (planner _DFG_BACKENDS + executor
+    # _execute_sharded) must not satisfy coverage for a sink they never saw
+    root = _copy_query_tree(tmp_path)
+    with open(root / "query" / "ast.py", "a") as fh:
+        fh.write(
+            "\n\n@dataclasses.dataclass(frozen=True)\n"
+            "class ShardMergeSink:\n    backend: str = 'sharded-graph'\n"
+        )
+    found = run_rules(Project(root), ["backend-coverage"])
+    assert {f.path for f in found} == {"query/planner.py", "query/execute.py"}
+    assert all("ShardMergeSink" in f.message for f in found)
+
+
 def test_unpatched_real_tree_is_clean(tmp_path):
     root = _copy_query_tree(tmp_path)
     assert run_rules(
@@ -153,6 +170,19 @@ def test_real_tree_has_no_new_findings():
     new, _known, stale = split_findings(findings, baseline)
     assert new == [], [f.format() for f in new]
     assert stale == [], f"stale baseline entries: {stale}"
+
+
+def test_cli_fail_on_new_is_clean_on_real_repo(capsys):
+    # the exact CI gate, end to end: the sharded tier's plan dataclasses
+    # (HistogramSink.backend, the sharded dispatch tables, shard/store
+    # locks) must not introduce findings over the committed baseline
+    rc = analysis_main(
+        ["--root", str(REPO_ROOT),
+         "--baseline", str(REPO_ROOT / "analysis_baseline.json"),
+         "--fail-on-new"]
+    )
+    capsys.readouterr()
+    assert rc == 0
 
 
 # ---------------------------------------------------------------------------

@@ -635,18 +635,24 @@ def test_calibration_fallback_and_load(tmp_path, monkeypatch):
 
     from repro.query.planner import REPLAY_STREAMING_CROSSOVER
 
+    from repro.query.planner import SHARDED_SINGLE_CROSSOVER
+
     monkeypatch.delenv("GRAPHPM_BENCH_QUERY", raising=False)
     monkeypatch.delenv("GRAPHPM_BENCH_GRAPH", raising=False)
     monkeypatch.delenv("GRAPHPM_BENCH_CONFORMANCE", raising=False)
+    monkeypatch.delenv("GRAPHPM_BENCH_SHARD", raising=False)
     missing = str(tmp_path / "nope.json")
     cal = load_calibration(
-        missing, graph_path=missing, conformance_path=missing
+        missing, graph_path=missing, conformance_path=missing,
+        shard_path=missing,
     )
     assert cal == {
         "tiny_pairs": TINY_PAIRS,
         "memory_budget_events": MEMORY_BUDGET_EVENTS,
         "graph_repeat_crossover": GRAPH_REPEAT_CROSSOVER,
         "replay_streaming_crossover": REPLAY_STREAMING_CROSSOVER,
+        "sharded_single_crossover": SHARDED_SINGLE_CROSSOVER,
+        "curves": {},
     }
 
     bench = tmp_path / "BENCH_query.json"

@@ -1,0 +1,290 @@
+"""Sharded graph tier — case-partitioned CSR shards behind the
+``sharded-graph`` backend.
+
+Pins: the psum-merge equivalence (sharded-graph ≡ the single-host engine ≡
+the Algorithm 1 streaming oracle) across window / activity-filter / view /
+union combinations and K ∈ {1, 2, 8}; per-shard delta resume (an append
+rescans only the owning shard's suffix, asserted through
+``EngineStats.rows_scanned``); the composite fingerprint's per-slot
+invalidation; the two-tier graph store's spill/page-in path; the graph
+histogram backend; and the planner's sharded rejections.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.streaming import streaming_dfg
+from repro.core.views import ActivityView
+from repro.data import ProcessSpec, generate_memmap_log
+from repro.graph import open_sharded_log, partition_memmap_log
+from repro.query import Q, QueryEngine, QueryPlanError
+from repro.query.cache import fingerprint, split_sharded_fingerprint
+
+EVENTS = 12_000
+
+
+def _span(log):
+    times = np.concatenate([t for _, _, t in log.iter_chunks()])
+    return float(times[0]), float(times[-1])
+
+
+def _assert_same_value(a, b):
+    if isinstance(a, np.ndarray):
+        np.testing.assert_array_equal(a, b)
+        return
+    if dataclasses.is_dataclass(a):
+        assert type(a) is type(b)
+        for f in dataclasses.fields(a):
+            _assert_same_value(getattr(a, f.name), getattr(b, f.name))
+        return
+    assert a == b
+
+
+@pytest.fixture(scope="module")
+def base_log(tmp_path_factory):
+    p = tmp_path_factory.mktemp("shard_base")
+    return generate_memmap_log(
+        str(p / "log"), EVENTS,
+        ProcessSpec(num_activities=12, seed=31, horizon_days=90), seed=31,
+    )
+
+
+@pytest.fixture(scope="module")
+def sharded_by_k(base_log, tmp_path_factory):
+    p = tmp_path_factory.mktemp("shard_parts")
+    return {
+        k: partition_memmap_log(base_log, k, str(p / f"k{k}"))
+        for k in (1, 2, 8)
+    }
+
+
+def _ops_cases(names, t_lo, t_hi):
+    span = t_hi - t_lo
+    w = (t_lo + 0.2 * span, t_lo + 0.7 * span)
+    keep = names[2:9]
+    view = ActivityView({n: f"g{i % 3}" for i, n in enumerate(names[:8])})
+    return [
+        {},
+        {"window": w},
+        {"keep": keep},
+        {"view": view},
+        {"window": w, "keep": keep},
+        {"window": w, "keep": keep, "view": view},
+    ]
+
+
+def _apply(q, ops):
+    if "window" in ops:
+        q = q.window(*ops["window"])
+    if "keep" in ops:
+        q = q.activities(ops["keep"])
+    if "view" in ops:
+        q = q.view(ops["view"])
+    return q
+
+
+# ---------------------------------------------------------------------------
+# psum-merge equivalence sweep
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 2, 8])
+def test_sharded_dfg_equals_single_host_and_oracle(
+    base_log, sharded_by_k, k
+):
+    sh = sharded_by_k[k]
+    names = sh.activity_labels()
+    t_lo, t_hi = _span(base_log)
+    eng, ref = QueryEngine(), QueryEngine()
+    for ops in _ops_cases(names, t_lo, t_hi):
+        rs = _apply(Q.log(sh).using(eng), ops).dfg(backend="sharded-graph")
+        rr = _apply(Q.log(base_log).using(ref), ops).dfg()
+        assert rs.physical.backend == "sharded-graph"
+        np.testing.assert_array_equal(rs.value, rr.value)
+        assert rs.names == rr.names
+        if not ops:
+            np.testing.assert_array_equal(rs.value, streaming_dfg(base_log))
+        elif set(ops) == {"window"}:
+            np.testing.assert_array_equal(
+                rs.value,
+                streaming_dfg(base_log, time_window=ops["window"]),
+            )
+
+
+@pytest.mark.parametrize("k", [1, 8])
+def test_sharded_histogram_and_topology_sinks(base_log, sharded_by_k, k):
+    sh = sharded_by_k[k]
+    t_lo, t_hi = _span(base_log)
+    w = (t_lo + 0.25 * (t_hi - t_lo), t_lo + 0.8 * (t_hi - t_lo))
+    eng, ref = QueryEngine(), QueryEngine()
+
+    hs = Q.log(sh).using(eng).window(*w).histogram(backend="sharded-graph")
+    hr = Q.log(base_log).using(ref).window(*w).histogram()
+    np.testing.assert_array_equal(hs.value, hr.value)
+
+    ps = Q.log(sh).using(eng).window(*w).process_map(
+        backend="sharded-graph"
+    )
+    pr = Q.log(base_log).using(ref).window(*w).process_map()
+    _assert_same_value(ps.value, pr.value)
+
+    ns = Q.log(sh).using(eng).neighborhood(
+        sh.activity_labels()[3], k=2, backend="sharded-graph"
+    )
+    nr = Q.log(base_log).using(ref).neighborhood(
+        sh.activity_labels()[3], k=2
+    )
+    _assert_same_value(ns.value, nr.value)
+
+
+def test_sharded_union_branch_equals_plain_union(
+    base_log, sharded_by_k, tmp_path
+):
+    other = generate_memmap_log(
+        str(tmp_path / "other"), 4_000,
+        ProcessSpec(num_activities=12, seed=7, horizon_days=90), seed=7,
+    )
+    ru = Q.logs((sharded_by_k[2], "s"), (other, "m")).using(
+        QueryEngine()
+    ).dfg()
+    rr = Q.logs((base_log, "s"), (other, "m")).using(QueryEngine()).dfg()
+    assert ru.physical.backend == "union"
+    np.testing.assert_array_equal(ru.value, rr.value)
+    assert ru.names == rr.names
+
+
+# ---------------------------------------------------------------------------
+# per-shard delta resume
+# ---------------------------------------------------------------------------
+
+
+def _fresh_shards(tmp_path, k=4, events=6_000):
+    log = generate_memmap_log(
+        str(tmp_path / "log"), events,
+        ProcessSpec(num_activities=10, seed=13, horizon_days=60), seed=13,
+    )
+    return log, partition_memmap_log(log, k, str(tmp_path / "shards"))
+
+
+def test_append_rescans_only_owning_shard(tmp_path):
+    log, sh = _fresh_shards(tmp_path)
+    eng = QueryEngine()
+    cold = Q.log(sh).using(eng).dfg(backend="sharded-graph")
+    assert not cold.from_cache
+    assert eng.stats.rows_scanned == sh.num_events
+
+    _, t_max = _span(log)
+    batch = 5
+    grown = sh.append(
+        np.arange(batch, dtype=np.int32) % sh.num_activities,
+        np.full(batch, 6, dtype=np.int32),  # one owning shard: 6 % 4 == 2
+        t_max + 1.0 + np.arange(batch, dtype=np.float64),
+    )
+    before = eng.stats.rows_scanned
+    warm = Q.log(grown).using(eng).dfg(backend="sharded-graph")
+    assert not warm.from_cache
+    # only the owning shard's graph extends, and only over the suffix
+    assert eng.stats.rows_scanned - before == batch
+
+    oracle = Q.log(grown).using(QueryEngine()).dfg()  # independent cold path
+    np.testing.assert_array_equal(warm.value, oracle.value)
+
+    again = Q.log(grown).using(eng).dfg(backend="sharded-graph")
+    assert again.from_cache
+    assert eng.stats.rows_scanned - before == batch  # no further scans
+
+
+def test_append_moves_only_owning_fingerprint_slot(tmp_path):
+    _, sh = _fresh_shards(tmp_path)
+    slots0 = split_sharded_fingerprint(fingerprint(sh))
+    _, t_max = _span(sh.shards[2])
+    grown = sh.append(
+        np.zeros(3, dtype=np.int32),
+        np.full(3, 6, dtype=np.int32),  # 6 % 4 == 2
+        t_max + 1.0 + np.arange(3, dtype=np.float64),
+    )
+    slots1 = split_sharded_fingerprint(fingerprint(grown))
+    assert len(slots0) == len(slots1) == 4
+    assert slots0[2] != slots1[2]
+    for k in (0, 1, 3):
+        assert slots0[k] == slots1[k]
+
+
+# ---------------------------------------------------------------------------
+# two-tier graph store
+# ---------------------------------------------------------------------------
+
+
+def test_two_tier_store_spills_and_pages_in(tmp_path):
+    log, sh = _fresh_shards(tmp_path)
+    eng = QueryEngine(max_graphs=2, graph_spill_dir=str(tmp_path / "spill"))
+    t_lo, t_hi = _span(log)
+    w = (t_lo + 0.3 * (t_hi - t_lo), t_lo + 0.9 * (t_hi - t_lo))
+
+    r1 = Q.log(sh).using(eng).dfg(backend="sharded-graph")
+    assert eng.graphs.stats.spills > 0  # 4 shard graphs, room for 2
+    r2 = Q.log(sh).using(eng).window(*w).dfg(backend="sharded-graph")
+    assert eng.graphs.stats.pageins > 0  # evicted shards came off disk
+
+    ref = QueryEngine()
+    np.testing.assert_array_equal(
+        r1.value, Q.log(log).using(ref).dfg().value
+    )
+    np.testing.assert_array_equal(
+        r2.value, Q.log(log).using(ref).window(*w).dfg().value
+    )
+
+
+def test_reopened_sharded_log_hits_same_cache_keys(tmp_path):
+    _, sh = _fresh_shards(tmp_path)
+    eng = QueryEngine()
+    r1 = Q.log(sh).using(eng).dfg(backend="sharded-graph")
+    reopened = open_sharded_log(sh.path)
+    r2 = Q.log(reopened).using(eng).dfg(backend="sharded-graph")
+    assert not r1.from_cache and r2.from_cache
+    np.testing.assert_array_equal(r1.value, r2.value)
+
+
+# ---------------------------------------------------------------------------
+# graph histograms (the sub-query backend the sharded merge pins)
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_graph_backend_equals_streaming(tmp_path):
+    log, _ = _fresh_shards(tmp_path)
+    t_lo, t_hi = _span(log)
+    w = (t_lo + 0.2 * (t_hi - t_lo), t_lo + 0.6 * (t_hi - t_lo))
+    eng, ref = QueryEngine(), QueryEngine()
+    for ops in ({}, {"window": w}):
+        hg = _apply(Q.log(log).using(eng), ops).histogram(backend="graph")
+        hs = _apply(Q.log(log).using(ref), ops).histogram()
+        assert hg.physical.backend == "graph"
+        np.testing.assert_array_equal(hg.value, hs.value)
+
+
+def test_windowed_graph_histogram_needs_event_tables(tmp_path):
+    log, _ = _fresh_shards(tmp_path)
+    t_lo, t_hi = _span(log)
+    ooc = QueryEngine(memory_budget_events=100)  # topology-only graphs
+    with pytest.raises(QueryPlanError, match="graph histograms"):
+        Q.log(log).using(ooc).window(t_lo, t_hi).histogram(backend="graph")
+
+
+# ---------------------------------------------------------------------------
+# planner rejections
+# ---------------------------------------------------------------------------
+
+
+def test_planner_rejections(tmp_path):
+    log, sh = _fresh_shards(tmp_path)
+    eng = QueryEngine()
+    with pytest.raises(QueryPlanError, match="requires a ShardedLog"):
+        Q.log(log).using(eng).dfg(backend="sharded-graph")
+    with pytest.raises(QueryPlanError, match="not available on a sharded"):
+        Q.log(sh).using(eng).dfg(backend="graph")
+    with pytest.raises(QueryPlanError, match="conformance"):
+        Q.log(sh).using(eng).fitness()
+    with pytest.raises(QueryPlanError, match="variants"):
+        Q.log(sh).using(eng).top_variants(3).dfg(backend="sharded-graph")
