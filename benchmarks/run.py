@@ -36,6 +36,7 @@ def main() -> None:
         bench_multilog,
         bench_obs,
         bench_query_engine,
+        bench_serve,
         bench_shard,
         roofline_table,
     )
@@ -52,6 +53,7 @@ def main() -> None:
         (bench_conformance, "conformance"),
         (bench_obs, "obs"),
         (bench_shard, "shard"),
+        (bench_serve, "serve"),
         (roofline_table, "roofline"),
     ):
         try:

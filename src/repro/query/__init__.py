@@ -57,6 +57,7 @@ from .cache import (
 from .execute import (
     CompareResult,
     EngineStats,
+    PlanProbe,
     QueryEngine,
     QueryResult,
     default_engine,
@@ -85,6 +86,7 @@ __all__ = [
     "prefix_digest", "parse_memmap_fingerprint",
     "MemmapFingerprint", "ResumableState",
     "QueryEngine", "QueryResult", "CompareResult", "EngineStats",
+    "PlanProbe",
     "MetricsRegistry", "QueryTrace",
     "default_engine", "set_default_engine",
     "canonicalize", "distribute_over_union",

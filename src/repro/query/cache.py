@@ -407,6 +407,23 @@ class QueryCache:
             self.stats.hits += 1
             return _copy_result(entry.result)
 
+    def probe(self, key: Tuple[str, str]) -> bool:
+        """Non-mutating presence check: no stats, no LRU touch, no copy.
+        The serving tier's SLO classifier probes before enqueueing and must
+        not skew hit/miss accounting or recency."""
+        with self._lock:
+            return key in self._entries
+
+    def has_delta_hint(self, source_hint: Optional[str], plan_key: str) -> bool:
+        """Non-mutating: is there a live resume candidate for this
+        (source, plan)?  Like :meth:`probe`, a classification signal only —
+        the engine still proves prefix preservation before trusting it."""
+        if source_hint is None:
+            return False
+        with self._lock:
+            fp = self._hints.get((source_hint, plan_key))
+            return fp is not None and (fp, plan_key) in self._entries
+
     def put(
         self,
         key: Tuple[str, str],

@@ -116,6 +116,7 @@ __all__ = [
     "QueryResult",
     "CompareResult",
     "EngineStats",
+    "PlanProbe",
     "QueryEngine",
     "default_engine",
     "set_default_engine",
@@ -123,6 +124,26 @@ __all__ = [
     "memmap_log_name",
     "repository_from_memmap",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanProbe:
+    """Read-only prediction of how one query would execute *right now* —
+    the serving tier's SLO-classification input (:mod:`repro.transport`).
+
+    ``fingerprint`` is the source fingerprint observed at probe time; the
+    transport layer keys in-flight request coalescing on it, so an append
+    that moves the fingerprint separates pre- and post-append waiters
+    instead of fanning a stale execution out to both.  ``cached`` /
+    ``delta_hint`` predict a ~µs–ms serve, ``estimated_cost_s`` is the
+    planner's cold-scan prior for the predicted backend."""
+
+    fingerprint: str
+    plan_key: str
+    backend: str
+    cached: bool
+    delta_hint: bool
+    estimated_cost_s: float
 
 
 @dataclasses.dataclass
@@ -885,6 +906,66 @@ class QueryEngine:
                     f"cache={'hit' if tr.from_cache else 'miss'}"
                 )
         return "\n".join(lines)
+
+    def probe(self, query: Query, sink: Optional[Sink] = None) -> PlanProbe:
+        """Cost/cache probe for the serving tier: predict — without
+        executing, without mutating cache stats or the graph-crossover
+        repeat counter — whether this query would be a cache hit, a delta
+        resume, or a cold scan, which backend it would pick, and the
+        planner's cost prior for that backend.
+
+        :mod:`repro.transport` classifies requests hot (predicted
+        cache/delta/graph serve) vs cold (full scan) from this, and keys
+        request coalescing on the returned fingerprint + plan key."""
+        if sink is None:
+            sink = DFGSink()
+        info = source_info(query.source)
+        logical, _ = canonicalize(
+            query.logical_plan(sink), info.activity_names
+        )
+        fp = fingerprint(query.source)
+        plan_key = logical.key()
+        cached = self.cache.probe((fp, plan_key))
+        delta_hint = False
+        if not cached and logical.source in ("memmap", "sharded"):
+            delta_hint = self.cache.has_delta_hint(
+                self._source_hint(query.source), plan_key
+            )
+        if isinstance(query.source, UnionSource):
+            graph_available = False
+        else:
+            # same read-only availability signal explain() computes: never
+            # bump the repeat counter from a probe
+            with self._lock:
+                seen = self._topo_seen.get(fp, 0)
+            sink_ok = isinstance(logical.sink, TOPOLOGY_SINKS) or (
+                isinstance(logical.sink, CONFORMANCE_SINKS)
+                and self._conformance_graph_ok(query.source)
+            )
+            warm = (
+                self._shards_warm(query.source)
+                if isinstance(query.source, ShardedLog)
+                else (
+                    self.graphs.peek(fp)
+                    or self.graphs.has_extendable(query.source)
+                )
+            )
+            graph_available = (
+                sink_ok
+                and not logical.has_barrier()
+                and (warm or seen + 1 >= self.graph_crossover)
+            )
+        physical = self._plan_cached(logical, info, graph_available)
+        return PlanProbe(
+            fingerprint=fp,
+            plan_key=plan_key,
+            backend=physical.backend,
+            cached=cached,
+            delta_hint=delta_hint,
+            estimated_cost_s=estimate_cost_s(
+                physical.backend, info.num_events
+            ),
+        )
 
     # -- union / compare (multi-source) --------------------------------------
     @staticmethod

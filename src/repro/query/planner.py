@@ -87,6 +87,7 @@ __all__ = [
     "load_calibration",
     "resolve_threshold",
     "estimate_cost_s",
+    "SLO_HOT_CUTOFF_S",
 ]
 
 _LOG = logging.getLogger(__name__)
@@ -108,6 +109,14 @@ REPLAY_STREAMING_CROSSOVER = MEMORY_BUDGET_EVENTS
 #: snapshots + aligned psum merge) beats concatenate-and-materialize on a
 #: single host; the measured value comes from BENCH_shard.json
 SHARDED_SINGLE_CROSSOVER = 1 << 18
+#: predicted execution cost (seconds) below which the serving tier
+#: (repro.transport) classifies a request *hot* — it rides the warm lane
+#: with cache/delta/graph serves instead of queueing behind cold scans.
+#: The static default sits between a cache hit (~100µs) and a cold
+#: streaming scan (~300ms); the measured boundary comes from
+#: BENCH_serve.json (geometric mean of the measured warm-lane p99 and
+#: cold-lane median service times)
+SLO_HOT_CUTOFF_S = 0.05
 
 # Order-of-magnitude cost priors for the observability drift check: fixed
 # per-backend dispatch overhead plus an events-per-second throughput.
@@ -169,6 +178,11 @@ _CONFORMANCE_CLAMPS = {
 }
 _SHARD_CLAMPS = {
     "sharded_single_crossover": (1 << 14, 1 << 24),
+}
+#: float clamp bounds mark float-valued calibration keys (the serve
+#: boundary is seconds, not a count)
+_SERVE_CLAMPS = {
+    "slo_hot_cutoff_s": (1e-4, 2.0),
 }
 _REPO_ROOT = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "..", "..")
@@ -256,7 +270,13 @@ def _read_calibration(
         for key, (lo, hi) in clamps.items():
             v = cal.get(key)
             if isinstance(v, (int, float)) and not isinstance(v, bool) and v > 0:
-                out[key] = int(min(max(int(v), lo), hi))
+                # float clamp bounds mark float-valued keys (e.g. the
+                # serve-tier SLO boundary in seconds); everything else
+                # stays an integer threshold
+                if isinstance(lo, float) or isinstance(hi, float):
+                    out[key] = float(min(max(float(v), lo), hi))
+                else:
+                    out[key] = int(min(max(int(v), lo), hi))
         _parse_curves(cal, clamps, out)
         return
     if basename not in _warned_missing:
@@ -273,6 +293,7 @@ def load_calibration(
     graph_path: Optional[str] = None,
     conformance_path: Optional[str] = None,
     shard_path: Optional[str] = None,
+    serve_path: Optional[str] = None,
 ) -> Dict:
     """Cost-model thresholds, measured when available.
 
@@ -287,10 +308,14 @@ def load_calibration(
     (``replay_streaming_crossover`` events) into
     ``BENCH_conformance.json``, and ``benchmarks/bench_shard.py`` the
     sharded-vs-single-host crossover (``sharded_single_crossover`` events)
-    into ``BENCH_shard.json``.  When such records exist — searched as:
+    into ``BENCH_shard.json``, and ``benchmarks/bench_serve.py`` the
+    serving tier's measured hot/cold lane boundary (``slo_hot_cutoff_s``
+    seconds — the crossover between warm-lane serves and cold scans that
+    the transport SLO classifier splits traffic on) into
+    ``BENCH_serve.json``.  When such records exist — searched as:
     explicit path argument, ``$GRAPHPM_BENCH_QUERY`` /
     ``$GRAPHPM_BENCH_GRAPH`` / ``$GRAPHPM_BENCH_CONFORMANCE`` /
-    ``$GRAPHPM_BENCH_SHARD``, ``./BENCH_*.json``, ``<repo
+    ``$GRAPHPM_BENCH_SHARD`` / ``$GRAPHPM_BENCH_SERVE``, ``./BENCH_*.json``, ``<repo
     root>/BENCH_*.json`` — their values replace the static constants,
     clamped to sanity rails, and any ``curves`` section becomes a
     :class:`CrossoverCurve` under ``out["curves"]`` (threshold as a function
@@ -305,6 +330,7 @@ def load_calibration(
         "graph_repeat_crossover": GRAPH_REPEAT_CROSSOVER,
         "replay_streaming_crossover": REPLAY_STREAMING_CROSSOVER,
         "sharded_single_crossover": SHARDED_SINGLE_CROSSOVER,
+        "slo_hot_cutoff_s": SLO_HOT_CUTOFF_S,
         "curves": {},
     }
     _read_calibration(
@@ -322,6 +348,10 @@ def load_calibration(
     _read_calibration(
         shard_path or os.environ.get("GRAPHPM_BENCH_SHARD"),
         "BENCH_shard.json", _SHARD_CLAMPS, out,
+    )
+    _read_calibration(
+        serve_path or os.environ.get("GRAPHPM_BENCH_SERVE"),
+        "BENCH_serve.json", _SERVE_CLAMPS, out,
     )
     return out
 

@@ -1,4 +1,4 @@
 from .engine import GenerationResult, ServeEngine
-from .query_service import QueryService
+from .query_service import QueryService, RequestProbe
 
-__all__ = ["GenerationResult", "ServeEngine", "QueryService"]
+__all__ = ["GenerationResult", "ServeEngine", "QueryService", "RequestProbe"]

@@ -64,9 +64,23 @@ from repro.analysis.lockdep import make_lock
 from repro.core.streaming import MemmapLog, MemmapLogWriter
 from repro.core.views import AccessDenied, AccessPolicy, ActivityView
 from repro.graph.shard import ShardedLog
-from repro.query import ApplyView, Q, Query, QueryEngine, QueryPlanError
+from repro.query import (
+    AlignmentsSink,
+    ApplyView,
+    CompareSink,
+    DFGSink,
+    FitnessSink,
+    HistogramSink,
+    NeighborhoodSink,
+    ProcessMapSink,
+    Q,
+    Query,
+    QueryEngine,
+    QueryPlanError,
+    VariantsSink,
+)
 
-__all__ = ["QueryService"]
+__all__ = ["QueryService", "RequestProbe"]
 
 
 @dataclasses.dataclass
@@ -117,6 +131,53 @@ def _combine_policies(
             )
     return _Grant(
         floor=floor, view=views[0][1], time_windows_allowed=allowed
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestProbe:
+    """Everything the transport tier needs to admit, coalesce, and lane one
+    request — computed at *enqueue time*, before anything queues.
+
+    ``group_key`` is the in-flight coalescing identity: requests are
+    dedup'd by (effective tenant policy, canonical plan, source
+    fingerprint).  The fingerprint is the one observed when this probe ran,
+    so an append that moves a log's fingerprint splits pre-append and
+    post-append waiters into different groups — a coalesced execution that
+    started against the old bytes is never fanned out to a waiter that
+    enqueued after the data changed.
+
+    ``cached`` / ``delta_hint`` / ``estimated_cost_s`` are the SLO
+    classifier's inputs: a predicted cache/delta/graph serve is *hot*
+    (~µs–ms), a predicted cold scan is *cold* (~100s of ms) and must not
+    head-of-line-block the warm lane."""
+
+    sink: str
+    names: Tuple[str, ...]
+    fingerprint: str
+    policy_token: str
+    plan_token: str
+    backend: str
+    cached: bool
+    delta_hint: bool
+    estimated_cost_s: float
+    coalescable: bool
+
+    @property
+    def group_key(self) -> Tuple[str, str, str]:
+        return (self.policy_token, self.plan_token, self.fingerprint)
+
+
+def _policy_token(grant: _Grant) -> str:
+    """Canonical string identity of an effective request policy: two
+    tenants under byte-identical effective policies may share a coalesced
+    execution; any difference (floor, view, dicing rights) must not."""
+    view = (
+        repr(ApplyView.from_view(grant.view)) if grant.has_view else "-"
+    )
+    return (
+        f"floor={grant.floor};dicing={int(grant.time_windows_allowed)};"
+        f"view={view}"
     )
 
 
@@ -373,6 +434,126 @@ class QueryService:
             "backend": res.physical.backend,
             "wall_s": res.wall_s,
         }
+
+    @staticmethod
+    def _sink_object(request: Dict, grant: _Grant):
+        """The sink instance ``query()`` would run for this request —
+        fully parameterized, so its canonical plan key covers every
+        response-shaping argument (top/edge_top/k/direction/backend).
+        Conformance sinks are built *without* the resolved model (resolving
+        may run discovery — far too heavy for an admission-time probe);
+        ``model_of`` joins the plan token instead."""
+        sink = request.get("sink", "dfg")
+        backend = request.get("backend", "auto")
+        if sink == "dfg":
+            return DFGSink(backend=backend)
+        if sink == "histogram":
+            return HistogramSink()
+        if sink == "variants":
+            if grant.has_view:
+                raise AccessDenied(
+                    "variants expose raw sequences and are not permitted "
+                    "under a view policy"
+                )
+            k = request.get("k")
+            return VariantsSink(int(k) if k is not None else None)
+        if sink == "process_map":
+            return ProcessMapSink(
+                top=float(request.get("top", 0.2)),
+                edge_top=(
+                    float(request["edge_top"])
+                    if request.get("edge_top") is not None
+                    else None
+                ),
+                backend=backend,
+            )
+        if sink == "neighborhood":
+            if request.get("activity") is None:
+                raise KeyError('"neighborhood" requests need an "activity"')
+            return NeighborhoodSink(
+                str(request["activity"]),
+                k=int(request.get("k", 1)),
+                direction=str(request.get("direction", "out")),
+                backend=backend,
+            )
+        if sink == "fitness":
+            return FitnessSink(backend=backend)
+        if sink == "alignments":
+            return AlignmentsSink(backend=backend)
+        if sink == "compare":
+            return CompareSink(backend=backend)
+        raise QueryPlanError(f"unknown sink {sink!r}")
+
+    def probe(self, request: Dict) -> RequestProbe:
+        """Admission-time probe for the transport tier (read-only).
+
+        Resolves the request exactly as :meth:`query` would — same policy
+        combination, same canonical plan — but executes nothing and mutates
+        no engine state, and returns the :class:`RequestProbe` the serving
+        layer coalesces and lanes on.  Raises the same ``KeyError`` /
+        ``AccessDenied`` / ``QueryPlanError`` a real execution would, so
+        invalid requests are rejected before they queue."""
+        sink = request.get("sink", "dfg")
+        if sink in ("forensics", "metrics"):
+            floor = self._introspection_floor(request)
+            # introspection responses are point-in-time snapshots of the
+            # live engine — there is no stable source fingerprint to
+            # coalesce on, and they are ~µs serves anyway
+            return RequestProbe(
+                sink=sink,
+                names=(),
+                fingerprint="live",
+                policy_token=f"floor={floor}",
+                plan_token=(
+                    f"{sink};format={request.get('format')};"
+                    f"trace={int(bool(request.get('trace')))}"
+                ),
+                backend="introspect",
+                cached=False,
+                delta_hint=False,
+                estimated_cost_s=1e-4,
+                coalescable=False,
+            )
+        multi = request.get("logs")
+        if multi is not None:
+            names = [str(n) for n in multi]
+            if not names:
+                raise QueryPlanError('"logs" must name at least one log')
+        else:
+            names = [request.get("log")]
+            if names[0] is None:
+                raise KeyError("request names no log")
+        model_of = (
+            str(request["model_of"])
+            if sink in ("fitness", "alignments")
+            and request.get("model_of") is not None
+            else None
+        )
+        if model_of is not None:
+            combined = list(dict.fromkeys(names + [model_of]))
+            sources_c, grant = self._resolve(combined)
+            sources = [sources_c[combined.index(n)] for n in names]
+        else:
+            sources, grant = self._resolve(names)
+        q = self._build_query(request, sources, names, grant)
+        plan = self.engine.probe(q, self._sink_object(request, grant))
+        plan_token = (
+            f"{plan.plan_key};trace={int(bool(request.get('trace')))}"
+        )
+        if model_of is not None:
+            plan_token += f";model_of={model_of}"
+        return RequestProbe(
+            sink=sink,
+            names=tuple(names),
+            fingerprint=plan.fingerprint,
+            policy_token=_policy_token(grant),
+            plan_token=plan_token,
+            backend=plan.backend,
+            cached=plan.cached,
+            delta_hint=plan.delta_hint,
+            estimated_cost_s=plan.estimated_cost_s,
+            coalescable=True,
+        )
 
     def query(self, request: Dict) -> Dict:
         """Execute one request dict; returns a JSON-shaped response dict.

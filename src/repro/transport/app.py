@@ -1,0 +1,256 @@
+"""The transport application: probe → admit → classify → coalesce → execute.
+
+:class:`TransportApp` is the protocol-independent core of the serving
+tier.  :class:`~repro.transport.server.TransportServer` parses HTTP and
+hands request dicts here; tests drive this class directly so every
+admission/coalescing/laning behaviour is assertable without sockets.
+
+One request's life:
+
+1. **Probe** — :meth:`QueryService.probe` resolves policy and canonical
+   plan *without executing*; invalid requests map to 4xx before they cost
+   a queue slot.
+2. **Admit** — the tenant's token bucket; over-quota requests shed with
+   429 + Retry-After.
+3. **Classify** — hot iff the probe predicts a cache/delta serve or the
+   planner's cost estimate is under the measured ``slo_hot_cutoff_s``
+   boundary; otherwise cold.
+4. **Coalesce** — an identical in-flight request (same policy, plan, and
+   fingerprint-at-enqueue) means we await its future instead of executing.
+5. **Execute** — the leader runs :meth:`QueryService.query` on its lane's
+   thread pool (the engine is synchronous numpy/jax) and fans the result
+   out.
+
+Everything reports through the engine's own :class:`MetricsRegistry` —
+queue-depth gauges, shed/coalesce counters, per-lane latency histograms —
+so ``{"sink": "metrics"}`` already covers the transport tier.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+from repro.core.views import AccessDenied
+from repro.query import QueryPlanError
+from repro.query.planner import load_calibration
+from repro.serve import QueryService
+
+from .admission import AdmissionController
+from .coalesce import Coalescer
+from .scheduler import TwoLaneScheduler
+
+__all__ = [
+    "TransportApp",
+    "TransportConfig",
+    "TransportResponse",
+    "canonical_payload",
+]
+
+#: response fields that legitimately differ between a direct
+#: ``QueryService.query`` call and a transport-served (possibly cached or
+#: coalesced) execution of the same request
+VOLATILE_FIELDS = ("wall_s", "from_cache", "backend", "trace")
+
+
+def canonical_payload(payload: Dict) -> Dict:
+    """The bit-identity view of a response: the payload minus execution
+    provenance.  Transport guarantee: ``canonical_payload(transport) ==
+    canonical_payload(service.query(request))`` for every request."""
+    return {k: v for k, v in payload.items() if k not in VOLATILE_FIELDS}
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportConfig:
+    rate: float = 200.0  # default per-tenant tokens/s
+    burst: float = 400.0
+    hot_workers: int = 4
+    cold_workers: int = 2
+    max_depth_hot: int = 256
+    max_depth_cold: int = 32
+    #: hot/cold boundary in seconds; None loads the measured value from
+    #: BENCH_serve.json via load_calibration (static fallback inside)
+    hot_cutoff_s: Optional[float] = None
+    max_body_bytes: int = 8 * 1024 * 1024
+
+
+@dataclasses.dataclass
+class TransportResponse:
+    status: int
+    payload: Dict
+    headers: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return 200 <= self.status < 300
+
+
+class TransportApp:
+    def __init__(
+        self,
+        service: Optional[QueryService] = None,
+        config: Optional[TransportConfig] = None,
+    ):
+        self.service = service or QueryService()
+        self.config = config or TransportConfig()
+        self.hot_cutoff_s = (
+            float(self.config.hot_cutoff_s)
+            if self.config.hot_cutoff_s is not None
+            else float(load_calibration()["slo_hot_cutoff_s"])
+        )
+        metrics = self.service.engine.metrics
+        self.metrics = metrics
+        self.admission = AdmissionController(
+            rate=self.config.rate, burst=self.config.burst
+        )
+        self.coalescer = Coalescer(metrics)
+        self.scheduler = TwoLaneScheduler(
+            metrics,
+            hot_workers=self.config.hot_workers,
+            cold_workers=self.config.cold_workers,
+            max_depth_hot=self.config.max_depth_hot,
+            max_depth_cold=self.config.max_depth_cold,
+        )
+        self._c_requests = {
+            lane: metrics.counter("transport_requests_total", lane=lane)
+            for lane in ("hot", "cold")
+        }
+        self._c_shed = {
+            reason: metrics.counter("transport_shed_total", reason=reason)
+            for reason in ("quota", "queue")
+        }
+        self._h_latency = {
+            lane: metrics.histogram("request_latency_seconds", lane=lane)
+            for lane in ("hot", "cold")
+        }
+
+    # -- classification -------------------------------------------------------
+    def classify(self, probe) -> str:
+        """hot = predicted cache/delta/graph serve or a scan the planner
+        prices under the measured boundary; cold = everything else."""
+        if probe.cached or probe.delta_hint:
+            return "hot"
+        return "hot" if probe.estimated_cost_s <= self.hot_cutoff_s else "cold"
+
+    # -- error mapping --------------------------------------------------------
+    @staticmethod
+    def _error_status(exc: BaseException) -> Optional[int]:
+        if isinstance(exc, KeyError):
+            return 404
+        if isinstance(exc, AccessDenied):
+            return 403
+        if isinstance(exc, (QueryPlanError, ValueError, TypeError)):
+            return 400
+        return None
+
+    @classmethod
+    def _error_response(cls, exc: BaseException) -> TransportResponse:
+        status = cls._error_status(exc)
+        if status is None:
+            raise exc
+        detail = exc.args[0] if exc.args else str(exc)
+        return TransportResponse(
+            status, {"error": type(exc).__name__, "detail": str(detail)}
+        )
+
+    @staticmethod
+    def _shed(retry_after_s: float) -> TransportResponse:
+        retry = max(retry_after_s, 0.001)
+        return TransportResponse(
+            429,
+            {"error": "Shed", "retry_after_s": retry},
+            headers={"Retry-After": f"{retry:.3f}"},
+        )
+
+    # -- the serving endpoint -------------------------------------------------
+    async def handle(
+        self, request: Dict, tenant: str = "default"
+    ) -> TransportResponse:
+        """Serve one query request dict for ``tenant``."""
+        t0 = time.perf_counter()
+        try:
+            probe = self.service.probe(request)
+        except (KeyError, AccessDenied, QueryPlanError, ValueError,
+                TypeError) as exc:
+            return self._error_response(exc)
+
+        wait = self.admission.admit(tenant)
+        if wait is not None:
+            self._c_shed["quota"].inc()
+            return self._shed(wait)
+
+        lane = self.classify(probe)
+        headers = {"X-Lane": lane, "X-Coalesced": "0"}
+
+        group_fut = None
+        if probe.coalescable:
+            existing = self.coalescer.join(probe.group_key)
+            if existing is not None:
+                headers["X-Coalesced"] = "1"
+                kind, value = await existing
+                if kind == "err":  # the leader's failure fans out too
+                    return self._error_response(value)
+                return self._finish(value, lane, headers, t0)
+            # no await between join-miss, open, and submit: the loop cannot
+            # interleave another handler here, so the group is never raced
+            group_fut = self.coalescer.open(probe.group_key)
+
+        exec_fut, retry = self.scheduler.try_submit(
+            lane, probe.estimated_cost_s, self.service.query, request
+        )
+        if exec_fut is None:
+            if group_fut is not None:
+                # nothing can have joined: no await ran since open()
+                self.coalescer.settle(
+                    probe.group_key, ("err", RuntimeError("leader shed"))
+                )
+            self._c_shed["queue"].inc()
+            return self._shed(retry)
+
+        try:
+            payload = await exec_fut
+        except BaseException as exc:
+            if group_fut is not None:
+                self.coalescer.settle(probe.group_key, ("err", exc))
+            return self._error_response(exc)
+        if group_fut is not None:
+            self.coalescer.settle(probe.group_key, ("ok", payload))
+        return self._finish(payload, lane, headers, t0)
+
+    def _finish(
+        self, payload: Dict, lane: str, headers: Dict[str, str], t0: float
+    ) -> TransportResponse:
+        self._c_requests[lane].inc()
+        self._h_latency[lane].observe(time.perf_counter() - t0)
+        return TransportResponse(200, payload, headers=headers)
+
+    # -- the append endpoint --------------------------------------------------
+    async def append(
+        self, request: Dict, tenant: str = "default"
+    ) -> TransportResponse:
+        """Live-append a batch of events.  Runs on the cold lane (it writes
+        column files); never coalesced.  The fingerprint move it causes
+        splits any concurrent coalescing groups automatically — that is the
+        point of keying groups on fingerprint-at-enqueue."""
+        wait = self.admission.admit(tenant)
+        if wait is not None:
+            self._c_shed["quota"].inc()
+            return self._shed(wait)
+        exec_fut, retry = self.scheduler.try_submit(
+            "cold", 0.05, self.service.append, request
+        )
+        if exec_fut is None:
+            self._c_shed["queue"].inc()
+            return self._shed(retry)
+        t0 = time.perf_counter()
+        try:
+            payload = await exec_fut
+        except BaseException as exc:
+            return self._error_response(exc)
+        self._c_requests["cold"].inc()
+        self._h_latency["cold"].observe(time.perf_counter() - t0)
+        return TransportResponse(200, payload, headers={"X-Lane": "cold"})
+
+    def close(self) -> None:
+        self.scheduler.close()

@@ -637,14 +637,17 @@ def test_calibration_fallback_and_load(tmp_path, monkeypatch):
 
     from repro.query.planner import SHARDED_SINGLE_CROSSOVER
 
+    from repro.query.planner import SLO_HOT_CUTOFF_S
+
     monkeypatch.delenv("GRAPHPM_BENCH_QUERY", raising=False)
     monkeypatch.delenv("GRAPHPM_BENCH_GRAPH", raising=False)
     monkeypatch.delenv("GRAPHPM_BENCH_CONFORMANCE", raising=False)
     monkeypatch.delenv("GRAPHPM_BENCH_SHARD", raising=False)
+    monkeypatch.delenv("GRAPHPM_BENCH_SERVE", raising=False)
     missing = str(tmp_path / "nope.json")
     cal = load_calibration(
         missing, graph_path=missing, conformance_path=missing,
-        shard_path=missing,
+        shard_path=missing, serve_path=missing,
     )
     assert cal == {
         "tiny_pairs": TINY_PAIRS,
@@ -652,6 +655,7 @@ def test_calibration_fallback_and_load(tmp_path, monkeypatch):
         "graph_repeat_crossover": GRAPH_REPEAT_CROSSOVER,
         "replay_streaming_crossover": REPLAY_STREAMING_CROSSOVER,
         "sharded_single_crossover": SHARDED_SINGLE_CROSSOVER,
+        "slo_hot_cutoff_s": SLO_HOT_CUTOFF_S,
         "curves": {},
     }
 

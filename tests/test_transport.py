@@ -1,0 +1,573 @@
+"""The transport tier — admission, coalescing, two-lane scheduling, HTTP.
+
+Pins: token-bucket math and 429 + Retry-After shedding (quota and queue
+bounds); exactly-one engine execution per coalesced group (asserted
+through ``EngineStats``); the stale-fanout regression — an append that
+moves a log's fingerprint splits pre-/post-append waiters into different
+coalescing groups, so a result computed from old bytes is never fanned
+out past the append; SLO lane classification and warm-lane isolation
+under a saturated cold lane; bit-identity of every transport response
+with the direct ``QueryService.query`` dict; transport health in the
+engine's own metrics registry; the NDJSON stream round-trip; the HTTP
+endpoints end to end; and the measured ``slo_hot_cutoff_s`` calibration
+path."""
+
+import asyncio
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core.views import AccessPolicy, ActivityView
+from repro.data import ProcessSpec, generate_memmap_log, generate_repository
+from repro.query import QueryEngine
+from repro.query.planner import SLO_HOT_CUTOFF_S, load_calibration
+from repro.serve import QueryService, RequestProbe
+from repro.transport import (
+    AdmissionController,
+    TokenBucket,
+    TransportApp,
+    TransportConfig,
+    TransportServer,
+    canonical_payload,
+    iter_ndjson,
+    reassemble_ndjson,
+)
+
+EVENTS = 6_000
+
+
+def run(coro):
+    return asyncio.run(coro)
+
+
+class GatedService(QueryService):
+    """QueryService whose ``query`` can be held at a barrier — before or
+    after the engine executes — so tests can freeze requests mid-flight
+    deterministically."""
+
+    def __init__(self, engine=None):
+        super().__init__(engine)
+        self.gate = threading.Event()
+        self.gate.set()
+        self.calls = []
+        self._calls_lock = threading.Lock()
+        self.gate_pred = lambda request: False
+        self.gate_after_execute = False
+        self.gate_first_call_only = False
+
+    def query(self, request):
+        with self._calls_lock:
+            self.calls.append(dict(request))
+            nth = len(self.calls)
+        gated = self.gate_pred(request) and not (
+            self.gate_first_call_only and nth > 1
+        )
+        if gated and not self.gate_after_execute:
+            assert self.gate.wait(timeout=30), "gate timeout"
+        out = super().query(request)
+        if gated and self.gate_after_execute:
+            assert self.gate.wait(timeout=30), "gate timeout"
+        return out
+
+
+@pytest.fixture()
+def repo():
+    return generate_repository(300, ProcessSpec(seed=11), seed=11)
+
+
+@pytest.fixture()
+def memmap_log(tmp_path):
+    return generate_memmap_log(
+        str(tmp_path / "log"), EVENTS,
+        ProcessSpec(num_activities=10, seed=5, horizon_days=30), seed=5,
+    )
+
+
+def make_app(service, **cfg):
+    cfg.setdefault("hot_cutoff_s", SLO_HOT_CUTOFF_S)
+    return TransportApp(service, TransportConfig(**cfg))
+
+
+# -- admission control --------------------------------------------------------
+
+def test_token_bucket_math():
+    b = TokenBucket(rate=10.0, burst=5.0, now=0.0)
+    assert b.take(0.0, 5.0) == 0.0  # full burst admitted
+    assert b.take(0.0, 1.0) == pytest.approx(0.1)  # empty: 1 token at 10/s
+    # refill is continuous: at t=0.05 the bucket holds 0.5 tokens
+    assert b.take(0.05, 1.0) == pytest.approx(0.05)
+    assert b.take(1.0, 1.0) == 0.0  # refilled well past 1 token
+    assert b.tokens < b.burst  # and capped at burst, never beyond
+    assert TokenBucket(rate=0.0, burst=0.0, now=0.0).take(1.0) == float("inf")
+
+
+def test_admission_controller_per_tenant():
+    ac = AdmissionController(rate=1.0, burst=2.0)
+    assert ac.admit("a") is None
+    assert ac.admit("a") is None
+    wait = ac.admit("a")  # burst spent
+    assert wait is not None and 0 < wait <= 1.0
+    assert ac.admit("b") is None  # tenants are isolated
+    ac.set_quota("paid", rate=1000.0, burst=1000.0)
+    assert all(ac.admit("paid") is None for _ in range(100))
+    assert ac.tenants() == 3
+
+
+def test_quota_shed_maps_to_429_with_retry_after(repo):
+    svc = QueryService()
+    svc.register("bpi", repo)
+    app = make_app(svc, rate=1.0, burst=2.0)
+
+    async def go():
+        req = {"log": "bpi", "sink": "dfg"}
+        r1 = await app.handle(req, tenant="t")
+        r2 = await app.handle(req, tenant="t")
+        r3 = await app.handle(req, tenant="t")
+        return r1, r2, r3
+
+    r1, r2, r3 = run(go())
+    app.close()
+    assert r1.status == 200 and r2.status == 200
+    assert r3.status == 429
+    assert float(r3.headers["Retry-After"]) > 0
+    assert r3.payload["retry_after_s"] > 0
+
+
+# -- SLO classification -------------------------------------------------------
+
+def _probe(cached=False, delta=False, cost=1.0):
+    return RequestProbe(
+        sink="dfg", names=("x",), fingerprint="f", policy_token="p",
+        plan_token="k", backend="stream", cached=cached, delta_hint=delta,
+        estimated_cost_s=cost, coalescable=True,
+    )
+
+
+def test_lane_classification(repo):
+    svc = QueryService()
+    svc.register("bpi", repo)
+    app = make_app(svc, hot_cutoff_s=0.01)
+    assert app.classify(_probe(cached=True, cost=9.0)) == "hot"
+    assert app.classify(_probe(delta=True, cost=9.0)) == "hot"
+    assert app.classify(_probe(cost=0.005)) == "hot"
+    assert app.classify(_probe(cost=0.5)) == "cold"
+    app.close()
+
+
+def test_explicit_cutoff_wins_over_calibration(repo):
+    svc = QueryService()
+    svc.register("bpi", repo)
+    app = TransportApp(svc, TransportConfig(hot_cutoff_s=0.123))
+    assert app.hot_cutoff_s == 0.123
+    app.close()
+
+
+def test_slo_cutoff_calibration(tmp_path):
+    p = tmp_path / "BENCH_serve.json"
+    p.write_text(json.dumps({"calibration": {"slo_hot_cutoff_s": 0.02}}))
+    assert load_calibration(serve_path=str(p))["slo_hot_cutoff_s"] == 0.02
+    # out-of-range measurements are clamped to the rails, not trusted
+    p.write_text(json.dumps({"calibration": {"slo_hot_cutoff_s": 99.0}}))
+    assert load_calibration(serve_path=str(p))["slo_hot_cutoff_s"] == 2.0
+    # no artifact -> static fallback
+    missing = str(tmp_path / "nope" / "BENCH_serve.json")
+    assert (
+        load_calibration(serve_path=missing)["slo_hot_cutoff_s"]
+        == SLO_HOT_CUTOFF_S
+    )
+
+
+# -- coalescing ---------------------------------------------------------------
+
+def test_coalesced_group_executes_exactly_once(memmap_log):
+    engine = QueryEngine(memory_budget_events=1_000)  # force real scans
+    svc = GatedService(engine)
+    svc.register("live", memmap_log)
+    svc.gate_pred = lambda r: r.get("sink") == "dfg"
+    svc.gate.clear()
+    app = make_app(svc)
+    req = {"log": "live", "sink": "dfg"}
+    before = engine.stats
+
+    async def go():
+        tasks = [asyncio.create_task(app.handle(req)) for _ in range(16)]
+        # let the leader reach the gate and every follower join its group
+        while len(svc.calls) < 1 or len(app.coalescer) < 1:
+            await asyncio.sleep(0.01)
+        await asyncio.sleep(0.05)
+        svc.gate.set()
+        return await asyncio.gather(*tasks)
+
+    resps = run(go())
+    after = engine.stats
+    app.close()
+    assert all(r.status == 200 for r in resps)
+    # exactly one engine execution, one full scan, for 16 identical requests
+    assert len(svc.calls) == 1
+    assert after.executions - before.executions == 1
+    assert after.rows_scanned - before.rows_scanned == memmap_log.num_events
+    coalesced = [r for r in resps if r.headers["X-Coalesced"] == "1"]
+    assert len(coalesced) == 15
+    payloads = [canonical_payload(r.payload) for r in resps]
+    assert all(p == payloads[0] for p in payloads)
+
+
+def test_distinct_plans_do_not_coalesce(repo):
+    svc = GatedService()
+    svc.register("bpi", repo)
+    app = make_app(svc)
+
+    async def go():
+        r1 = await app.handle({"log": "bpi", "sink": "dfg"})
+        r2 = await app.handle({"log": "bpi", "sink": "histogram"})
+        return r1, r2
+
+    r1, r2 = run(go())
+    app.close()
+    assert r1.status == r2.status == 200
+    assert len(svc.calls) == 2
+
+
+def test_append_splits_coalescing_groups(memmap_log):
+    """The stale-fanout regression: a leader whose result was computed
+    from fingerprint F must not fan out to a waiter that enqueued after an
+    append moved the log to F'."""
+    svc = GatedService()
+    svc.register("live", memmap_log)
+    svc.gate_pred = lambda r: r.get("sink") == "histogram"
+    svc.gate_after_execute = True  # freeze AFTER executing, BEFORE fanout
+    svc.gate_first_call_only = True
+    svc.gate.clear()
+    app = make_app(svc)
+    req = {"log": "live", "sink": "histogram"}
+    old_events = memmap_log.num_events
+    t_last = 10.0 * 365 * 24 * 3600.0  # far past the generated horizon
+
+    fp_before = svc.probe(req).fingerprint
+
+    async def go():
+        t1 = asyncio.create_task(app.handle(req))
+        while len(svc.calls) < 1:  # leader has computed, holding at gate
+            await asyncio.sleep(0.01)
+        await asyncio.sleep(0.05)
+        # live append while the leader's group is still open
+        svc.append({
+            "log": "live",
+            "activity": [0, 1, 2],
+            "case": [0, 0, 0],
+            "time": [t_last, t_last + 1, t_last + 2],
+        })
+        # post-append request: new fingerprint, must NOT join the group
+        t2 = asyncio.create_task(app.handle(req))
+        r2 = await t2
+        svc.gate.set()
+        r1 = await t1
+        return r1, r2
+
+    r1, r2 = run(go())
+    app.close()
+    fp_after = svc.probe(req).fingerprint
+    assert fp_before != fp_after  # append moved the fingerprint
+    assert r1.status == r2.status == 200
+    assert len(svc.calls) == 2  # two groups, two executions
+    assert r2.headers["X-Coalesced"] == "0"
+    # the leader's payload is the pre-append data; the post-append waiter
+    # sees the appended rows
+    assert sum(r1.payload["counts"]) == old_events
+    assert sum(r2.payload["counts"]) == old_events + 3
+
+
+# -- two-lane scheduling ------------------------------------------------------
+
+def test_queue_bound_sheds_with_retry_after(repo):
+    svc = GatedService()
+    svc.register("bpi", repo)
+    svc.gate_pred = lambda r: True
+    svc.gate.clear()
+    app = make_app(
+        svc, hot_cutoff_s=1e-9, cold_workers=1, max_depth_cold=1
+    )
+
+    async def go():
+        t1 = asyncio.create_task(app.handle({"log": "bpi", "sink": "dfg"}))
+        while app.scheduler.depth("cold") < 1:
+            await asyncio.sleep(0.01)
+        # lane full: a distinct cold request is shed, not queued
+        r2 = await app.handle({"log": "bpi", "sink": "histogram"})
+        svc.gate.set()
+        r1 = await t1
+        return r1, r2
+
+    r1, r2 = run(go())
+    assert r1.status == 200
+    assert r2.status == 429
+    assert float(r2.headers["Retry-After"]) > 0
+    snap = svc.engine.metrics_snapshot()
+    assert snap['transport_shed_total{reason=queue}'] >= 1
+    app.close()
+
+
+def test_warm_lane_isolated_from_saturated_cold_lane(repo):
+    svc = GatedService()
+    svc.register("bpi", repo)
+    app = make_app(
+        svc, hot_cutoff_s=1e-9, cold_workers=1, max_depth_cold=4
+    )
+    warm_req = {"log": "bpi", "sink": "dfg"}
+
+    async def go():
+        warm0 = await app.handle(warm_req)  # populate the cache
+        assert warm0.headers["X-Lane"] == "cold"  # uncached -> cold
+        svc.gate_pred = lambda r: r.get("sink") == "histogram"
+        svc.gate.clear()
+        cold = asyncio.create_task(
+            app.handle({"log": "bpi", "sink": "histogram"})
+        )
+        while app.scheduler.depth("cold") < 1:
+            await asyncio.sleep(0.01)
+        t0 = time.perf_counter()
+        warm = await app.handle(warm_req)  # cached -> hot lane
+        warm_latency = time.perf_counter() - t0
+        assert not cold.done()  # cold lane still saturated
+        svc.gate.set()
+        await cold
+        return warm, warm_latency
+
+    warm, warm_latency = run(go())
+    app.close()
+    assert warm.status == 200
+    assert warm.headers["X-Lane"] == "hot"
+    assert warm.payload["from_cache"] is True
+    assert warm_latency < 1.0  # never queued behind the blocked cold scan
+
+
+# -- bit-identity with the direct path ----------------------------------------
+
+def test_transport_responses_bit_identical_to_direct_path(repo, tmp_path):
+    other = generate_repository(200, ProcessSpec(seed=12), seed=12)
+    svc = QueryService()
+    svc.register("bpi", repo)
+    svc.register("other", other)
+    app = make_app(svc)
+    center = svc.query({"log": "bpi", "sink": "dfg"})["names"][0]
+    requests = [
+        {"log": "bpi", "sink": "dfg"},
+        {"log": "bpi", "sink": "histogram"},
+        {"log": "bpi", "sink": "variants", "k": 5},
+        {"log": "bpi", "sink": "process_map", "top": 1.0},
+        {"log": "bpi", "sink": "neighborhood", "activity": center, "k": 2},
+        {"log": "bpi", "sink": "fitness"},
+        {"log": "bpi", "sink": "alignments"},
+        {"logs": ["bpi", "other"], "sink": "compare"},
+    ]
+
+    async def go():
+        return [await app.handle(r) for r in requests]
+
+    resps = run(go())
+    app.close()
+    for req, resp in zip(requests, resps):
+        assert resp.status == 200, req
+        assert canonical_payload(resp.payload) == canonical_payload(
+            svc.query(req)
+        ), req
+
+
+# -- error mapping ------------------------------------------------------------
+
+def test_error_mapping(repo):
+    view = ActivityView(mapping={})
+    svc = QueryService()
+    svc.register("bpi", repo)
+    svc.register("sealed", repo, AccessPolicy(view=view))
+    app = make_app(svc)
+
+    async def go():
+        return (
+            await app.handle({"log": "nope", "sink": "dfg"}),
+            await app.handle({"log": "sealed", "sink": "variants"}),
+            await app.handle({"log": "bpi", "sink": "wat"}),
+            await app.handle({"sink": "dfg"}),
+        )
+
+    unknown, denied, bad_sink, no_log = run(go())
+    app.close()
+    assert unknown.status == 404
+    assert denied.status == 403
+    assert bad_sink.status == 400
+    assert no_log.status == 404
+    assert "error" in unknown.payload and "detail" in unknown.payload
+
+
+# -- transport health in the engine registry ----------------------------------
+
+def test_transport_metrics_in_engine_registry(repo):
+    svc = QueryService()
+    svc.register("bpi", repo)
+    app = make_app(svc, rate=1.0, burst=1.0)
+
+    async def go():
+        await app.handle({"log": "bpi", "sink": "dfg"}, tenant="t")
+        await app.handle({"log": "bpi", "sink": "dfg"}, tenant="t")  # shed
+        return await app.handle({"sink": "metrics"})
+
+    resp = run(go())
+    app.close()
+    assert resp.status == 200
+    snap = resp.payload["metrics"]
+    assert snap['transport_requests_total{lane=hot}'] >= 1
+    assert snap['transport_shed_total{reason=quota}'] >= 1
+    assert snap['transport_coalesce_groups_total'] >= 1
+    assert 'transport_queue_depth{lane=cold}' in snap
+    assert snap['request_latency_seconds{lane=hot}']["count"] >= 1
+
+
+# -- NDJSON streaming ---------------------------------------------------------
+
+def test_ndjson_round_trip_exact():
+    payload = {
+        "sink": "alignments", "fitness": 0.93, "log": "bpi",
+        "deviations": [{"edge": ["a", "b"], "count": 3}] * 4,
+        "names": ["a", "b"], "nested": {"k": [1, 2]},  # inner lists stay put
+    }
+    lines = list(iter_ndjson(payload))
+    assert json.loads(lines[-1]) == {"end": True}
+    assert reassemble_ndjson(lines) == payload
+    with pytest.raises(ValueError):
+        reassemble_ndjson(lines[:-1])  # truncated stream is detected
+    with pytest.raises(ValueError):
+        reassemble_ndjson([])
+
+
+# -- HTTP end to end ----------------------------------------------------------
+
+def _http(method, url, body=None, headers=None):
+    data = json.dumps(body).encode() if body is not None else None
+    req = urllib.request.Request(
+        url, data=data, method=method, headers=headers or {}
+    )
+    try:
+        with urllib.request.urlopen(req, timeout=30) as f:
+            return f.status, dict(f.headers), f.read()
+    except urllib.error.HTTPError as e:
+        return e.code, dict(e.headers), e.read()
+
+
+def test_http_server_end_to_end(repo):
+    svc = QueryService()
+    svc.register("bpi", repo)
+    app = make_app(svc)
+    app.admission.set_quota("starved", rate=0.001, burst=1.0)
+    direct = svc.query({"log": "bpi", "sink": "dfg"})
+
+    async def go():
+        srv = TransportServer(app)
+        await srv.start()
+        loop = asyncio.get_running_loop()
+
+        def exercise():
+            out = {}
+            out["query"] = _http(
+                "POST", srv.address + "/query",
+                {"log": "bpi", "sink": "dfg"},
+            )
+            out["stream"] = _http(
+                "POST", srv.address + "/query/stream",
+                {"log": "bpi", "sink": "dfg"},
+            )
+            out["metrics"] = _http("GET", srv.address + "/metrics")
+            out["live"] = _http(
+                "GET",
+                srv.address + "/stream/metrics?interval=0.01&count=2",
+            )
+            out["healthz"] = _http("GET", srv.address + "/healthz")
+            out["missing"] = _http("GET", srv.address + "/nope")
+            out["bad_json"] = _http(
+                "POST", srv.address + "/query", {"log": "nope"},
+            )
+            _http("POST", srv.address + "/query",
+                  {"log": "bpi", "sink": "dfg"},
+                  headers={"X-Tenant": "starved"})
+            out["shed"] = _http(
+                "POST", srv.address + "/query",
+                {"log": "bpi", "sink": "dfg"},
+                headers={"X-Tenant": "starved"},
+            )
+            return out
+
+        out = await loop.run_in_executor(None, exercise)
+        await srv.stop()
+        return out
+
+    out = run(go())
+    status, headers, body = out["query"]
+    assert status == 200
+    assert headers["X-Lane"] in ("hot", "cold")
+    assert canonical_payload(json.loads(body)) == canonical_payload(direct)
+
+    status, headers, body = out["stream"]
+    assert status == 200
+    assert headers["Content-Type"] == "application/x-ndjson"
+    reassembled = reassemble_ndjson(body.decode().splitlines())
+    assert canonical_payload(reassembled) == canonical_payload(direct)
+
+    status, _, body = out["metrics"]
+    assert status == 200
+    assert b"transport_requests_total" in body
+    assert b"transport_queue_depth" in body
+    assert b"request_latency_seconds_bucket" in body
+
+    status, _, body = out["live"]
+    lines = body.decode().splitlines()
+    assert status == 200
+    assert json.loads(lines[0])["body"]["sink"] == "metrics"
+    assert json.loads(lines[-1]) == {"end": True}
+
+    assert out["healthz"][0] == 200
+    assert out["missing"][0] == 404
+    assert out["bad_json"][0] == 404  # unknown log through HTTP
+
+    status, headers, body = out["shed"]
+    assert status == 429
+    assert float(headers["Retry-After"]) > 0
+
+
+def test_http_append_round_trip(memmap_log):
+    svc = QueryService()
+    svc.register("live", memmap_log)
+    old = memmap_log.num_events
+    t_last = 10.0 * 365 * 24 * 3600.0
+
+    async def go():
+        srv = TransportServer(TransportApp(svc))
+        await srv.start()
+        loop = asyncio.get_running_loop()
+
+        def exercise():
+            appended = _http(
+                "POST", srv.address + "/append",
+                {"log": "live", "activity": [0, 1], "case": [0, 0],
+                 "time": [t_last, t_last + 1]},
+            )
+            after = _http(
+                "POST", srv.address + "/query",
+                {"log": "live", "sink": "histogram"},
+            )
+            return appended, after
+
+        appended, after = await loop.run_in_executor(None, exercise)
+        await srv.stop()
+        return appended, after
+
+    appended, after = run(go())
+    status, _, body = appended
+    assert status == 200
+    assert json.loads(body)["num_events"] == old + 2
+    status, _, body = after
+    assert status == 200
+    assert sum(json.loads(body)["counts"]) == old + 2
