@@ -53,6 +53,10 @@ REPEATS = 4
 WINDOWS = 16
 HIT_PAIRS = 4_000
 OVERHEAD_BUDGET = 0.03
+#: head-sampling stride for the benchmark's trace store: the traced side
+#: pays the real serving-tier cost (keep/drop decision every query, an
+#: actual JSONL write every Nth)
+STORE_SAMPLE_EVERY = 256
 
 
 def _windows(log, k: int):
@@ -76,16 +80,36 @@ def _paired_delta_us(qa, qb, pairs: int) -> float:
     return statistics.median(ds)
 
 
-def _per_query_tax_us(log):
-    """Bias-cancelled per-query tracing cost on the cache-hit hot path."""
+def _traced_engine(store_dir: str):
+    """The traced side runs the full distributed-observability stack: a
+    trace store offered every finished root query (tail-sampling decision
+    on the hot path, a JSONL write every ``STORE_SAMPLE_EVERY``-th) and
+    latency-histogram observes carrying trace-id exemplars."""
+    from repro.obs import TraceStore
+    from repro.query import QueryEngine
+
+    eng = QueryEngine()
+    eng.trace_store = TraceStore(
+        store_dir, sample_every=STORE_SAMPLE_EVERY, metrics=eng.metrics
+    )
+    return eng
+
+
+def _per_query_tax_us(log, store_dir, pairs):
+    """Bias-cancelled per-query tracing cost on the cache-hit hot path,
+    with context propagation on: every traced query binds as a child of an
+    ambient request context, exactly as under the transport tier."""
+    from repro.obs.context import mint_context
     from repro.query import Q, QueryEngine
 
-    q_on = Q.log(log).using(QueryEngine())
+    eng_on = _traced_engine(store_dir)
+    q_on = Q.log(log).using(eng_on)
     q_off = Q.log(log).using(QueryEngine(trace=False))
     q_on.dfg()  # populate both caches
     q_off.dfg()
-    d_on_first = _paired_delta_us(q_on, q_off, HIT_PAIRS)
-    d_off_first = _paired_delta_us(q_off, q_on, HIT_PAIRS)
+    with eng_on.trace_scope(mint_context()):
+        d_on_first = _paired_delta_us(q_on, q_off, pairs)
+        d_off_first = _paired_delta_us(q_off, q_on, pairs)
     # d_on_first  = (c_on − c_off) + bias;  d_off_first = (c_off − c_on) + bias
     tax = (d_on_first - d_off_first) / 2.0
     # per-hit wall for context (median of the off side, second position)
@@ -97,31 +121,44 @@ def _per_query_tax_us(log):
     return max(0.0, tax), hit_us
 
 
-def _workload_s(trace: bool, log, windows) -> float:
+def _workload_s(trace: bool, log, windows, store_dir=None) -> float:
+    import contextlib
+
+    from repro.obs.context import mint_context
     from repro.query import Q, QueryEngine
 
-    eng = QueryEngine(trace=trace)  # fresh: cold plan/result cache
+    if trace:
+        eng = _traced_engine(store_dir)  # fresh: cold plan/result cache
+        scope = eng.trace_scope(mint_context())
+    else:
+        eng = QueryEngine(trace=False)
+        scope = contextlib.nullcontext()
     t0 = time.perf_counter()
-    Q.log(log).using(eng).dfg()  # cold full scan (cached after)
-    for w0, w1 in windows:  # windowed fan: misses
-        Q.log(log).using(eng).window(w0, w1).dfg()
-    for w0, w1 in windows:  # same fan again: pure cache-hit hot path
-        Q.log(log).using(eng).window(w0, w1).dfg()
+    with scope:
+        Q.log(log).using(eng).dfg()  # cold full scan (cached after)
+        for w0, w1 in windows:  # windowed fan: misses
+            Q.log(log).using(eng).window(w0, w1).dfg()
+        for w0, w1 in windows:  # same fan again: pure cache-hit hot path
+            Q.log(log).using(eng).window(w0, w1).dfg()
     return time.perf_counter() - t0
 
 
-def run(write_json: bool = False) -> list:
+def run(write_json: bool = False, fast: bool = False) -> list:
     """CSV rows; ``write_json=True`` (direct invocation only) also rewrites
     ``BENCH_obs.json`` and stamps ``trace_overhead`` into the other
-    committed ``BENCH_*.json`` records — the aggregator's reduced
+    committed ``BENCH_*.json`` records — the aggregator's and CI's reduced
     ``--fast`` runs must not clobber them."""
     from repro.data import ProcessSpec, generate_memmap_log
     from repro.query import Q, QueryEngine
 
+    events = min(EVENTS, 200_000) if fast else EVENTS
+    hit_pairs = 400 if fast else HIT_PAIRS
+    repeats = 2 if fast else REPEATS
+
     rows = []
     tmp = tempfile.mkdtemp(prefix="graphpm_bencho_")
     log = generate_memmap_log(
-        os.path.join(tmp, "log"), EVENTS,
+        os.path.join(tmp, "log"), events,
         ProcessSpec(num_activities=64, seed=31, horizon_days=120), seed=31,
     )
     windows = _windows(log, WINDOWS)
@@ -130,7 +167,9 @@ def run(write_json: bool = False) -> list:
     warm = QueryEngine()
     Q.log(log).using(warm).dfg()
 
-    tax_us, hit_us = _per_query_tax_us(log)
+    tax_us, hit_us = _per_query_tax_us(
+        log, os.path.join(tmp, "traces_tax"), hit_pairs
+    )
     rows.append((
         "obs_per_query_tax", tax_us,
         f"hit_us={hit_us:.1f};tax_of_hit={tax_us / hit_us * 100:.2f}%",
@@ -139,10 +178,13 @@ def run(write_json: bool = False) -> list:
     # -- scan-bearing workload (denominator; noisy on shared hosts) ----------
     n_queries = 1 + 2 * WINDOWS
     on_s = off_s = math.inf
-    for rep in range(REPEATS):
+    for rep in range(repeats):
         order = (True, False) if rep % 2 else (False, True)
         for trace in order:
-            dt = _workload_s(trace, log, windows)
+            dt = _workload_s(
+                trace, log, windows,
+                store_dir=os.path.join(tmp, f"traces_wl{rep}"),
+            )
             if trace:
                 on_s = min(on_s, dt)
             else:
@@ -176,7 +218,9 @@ def run(write_json: bool = False) -> list:
     record = {
         "events": log.num_events,
         "queries": n_queries,
-        "repeats": REPEATS,
+        "repeats": repeats,
+        "propagation": True,   # traced side: ambient context + trace store
+        "store_sample_every": STORE_SAMPLE_EVERY,
         "per_query_tax_us": tax_us,
         "hit_us": hit_us,
         "workload_traced_s": on_s,
@@ -200,5 +244,6 @@ def run(write_json: bool = False) -> list:
 
 
 if __name__ == "__main__":
-    for r in run(write_json=True):
+    _fast = "--fast" in sys.argv[1:]
+    for r in run(write_json=not _fast, fast=_fast):
         print(",".join(str(x) for x in r))

@@ -214,6 +214,28 @@ def run(write_json: bool = False) -> list:
             "while the cold lane was loaded"
         )
 
+    # the SLO engine must reproduce the warm-lane verdict just asserted
+    # from the live request_latency_seconds{lane=hot} series alone
+    slo = svc.slo.evaluate()
+    warm_obj = next(
+        o for o in slo["objectives"] if o["name"] == "warm_latency"
+    )
+    rows.append((
+        "serve_slo_verdict", (warm_obj["measured"] or 0.0) * 1e6,
+        f"ok={warm_obj['ok']};budget_left="
+        f"{warm_obj['error_budget_remaining']:.3f}",
+    ))
+    results["slo"] = {
+        "warm_latency_ok": warm_obj["ok"],
+        "warm_latency_measured_p99_ms": (warm_obj["measured"] or 0.0) * 1e3,
+        "error_budget_remaining": warm_obj["error_budget_remaining"],
+    }
+    if warm_obj["ok"] is not True:
+        raise AssertionError(
+            "SLO engine disagrees with the measured warm-lane verdict: "
+            f"{warm_obj}"
+        )
+
     # -- 3. admission: a starved tenant sheds, never queues ------------------
     app.admission.set_quota("starved", rate=0.5, burst=4.0)
 

@@ -17,8 +17,19 @@ import them without cycles:
   :class:`repro.core.telemetry.EventCollector`, so
   ``Q.log(engine.own_telemetry())`` mines the engine's own process with the
   engine itself (the paper's Algorithm 1 over the engine's spans).
+* :mod:`repro.obs.context` — W3C-traceparent-style :class:`TraceContext`
+  propagated from the transport tier through coalescing, scheduler lanes,
+  and into every engine (and per-shard) :class:`QueryTrace`, so one trace
+  id stitches the full distributed request tree.
+* :mod:`repro.obs.slo` — declarative :class:`Objective`s evaluated over
+  live registries by :class:`SLOEngine`: verdicts, error budgets, and
+  multi-window burn-rate alerts (``{"sink": "slo"}`` / ``GET /slo``).
+* :mod:`repro.obs.store` — :class:`TraceStore`, a bounded on-disk JSONL
+  ring of tail-sampled finished traces, readable back as an event log so
+  cross-process traces mine bit-identically to Algorithm 1.
 """
 
+from .context import TraceContext, mint_context, new_span_id, parse_traceparent
 from .metrics import (
     Counter,
     Histogram,
@@ -26,13 +37,23 @@ from .metrics import (
     kernel_registry,
     prometheus_text,
 )
+from .slo import Objective, SLOEngine, default_service_objectives
+from .store import TraceStore
 from .trace import Span, QueryTrace
 
 __all__ = [
     "Counter",
     "Histogram",
     "MetricsRegistry",
+    "Objective",
+    "SLOEngine",
+    "TraceContext",
+    "TraceStore",
+    "default_service_objectives",
     "kernel_registry",
+    "mint_context",
+    "new_span_id",
+    "parse_traceparent",
     "prometheus_text",
     "Span",
     "QueryTrace",

@@ -85,17 +85,29 @@ class Counter:
             return self._value
 
 
+#: an exemplar older than this many subsequent observations is replaced
+#: even by a smaller value — "worst recent", not "worst ever"
+EXEMPLAR_REFRESH = 4096
+
+
 class Histogram:
     """Streaming histogram over fixed log-scale buckets.
 
     ``observe`` is a bisect + three adds under the registry lock; no
     sample is retained.  Percentiles interpolate linearly inside the
     winning bucket and clamp to the observed ``[min, max]`` envelope.
+
+    When an observation carries a ``trace_id``, the bucket keeps the
+    (trace id, value) of its worst recent observation as an **exemplar**
+    — a p99 spike in the exposition then links directly to the trace that
+    caused it.  Memory stays O(buckets): one exemplar per bucket,
+    refreshed after :data:`EXEMPLAR_REFRESH` further observations so a
+    one-off ancient worst case cannot pin the slot forever.
     """
 
     __slots__ = (
         "name", "labels", "_lock", "_counts", "_count", "_sum",
-        "_min", "_max",
+        "_min", "_max", "_exemplars",
     )
 
     def __init__(self, name: str, labels: LabelItems, lock: threading.Lock):
@@ -107,8 +119,10 @@ class Histogram:
         self._sum = 0.0
         self._min = math.inf
         self._max = -math.inf
+        # bucket index -> (trace_id, value, total count at store time)
+        self._exemplars: Dict[int, Tuple[str, float, int]] = {}
 
-    def observe(self, x: float) -> None:
+    def observe(self, x: float, trace_id: Optional[str] = None) -> None:
         i = bisect_left(BUCKET_BOUNDS, x)
         with self._lock:
             self._counts[i] += 1
@@ -118,6 +132,19 @@ class Histogram:
                 self._min = x
             if x > self._max:
                 self._max = x
+            if trace_id is not None:
+                ex = self._exemplars.get(i)
+                if (
+                    ex is None or x >= ex[1]
+                    or self._count - ex[2] > EXEMPLAR_REFRESH
+                ):
+                    self._exemplars[i] = (trace_id, x, self._count)
+
+    def exemplars(self) -> Dict[int, Tuple[str, float]]:
+        """``{bucket index: (trace id, value)}`` — worst recent observation
+        per occupied bucket (only buckets that ever saw a trace id)."""
+        with self._lock:
+            return {i: (t, v) for i, (t, v, _) in self._exemplars.items()}
 
     @property
     def count(self) -> int:
@@ -185,32 +212,81 @@ class MetricsRegistry:
         self._counters: Dict[Tuple[str, LabelItems], Counter] = {}
         self._histograms: Dict[Tuple[str, LabelItems], Histogram] = {}
         self._gauges: Dict[Tuple[str, LabelItems], Callable[[], float]] = {}
+        self._help: Dict[str, str] = {}  # metric name -> # HELP text
 
     @staticmethod
     def _key(name: str, labels: Dict[str, str]) -> Tuple[str, LabelItems]:
         items = tuple(sorted((k, str(v)) for k, v in labels.items()))
         return (name, items)
 
-    def counter(self, name: str, **labels: str) -> Counter:
+    def counter(
+        self, name: str, description: Optional[str] = None, **labels: str
+    ) -> Counter:
         key = self._key(name, labels)
         with self._lock:
+            if description:
+                self._help.setdefault(name, description)
             c = self._counters.get(key)
             if c is None:
                 c = self._counters[key] = Counter(name, key[1], self._lock)
         return c
 
-    def histogram(self, name: str, **labels: str) -> Histogram:
+    def histogram(
+        self, name: str, description: Optional[str] = None, **labels: str
+    ) -> Histogram:
         key = self._key(name, labels)
         with self._lock:
+            if description:
+                self._help.setdefault(name, description)
             h = self._histograms.get(key)
             if h is None:
                 h = self._histograms[key] = Histogram(name, key[1], self._lock)
         return h
 
-    def gauge(self, name: str, fn: Callable[[], float], **labels: str) -> None:
+    def gauge(
+        self,
+        name: str,
+        fn: Callable[[], float],
+        description: Optional[str] = None,
+        **labels: str,
+    ) -> None:
         key = self._key(name, labels)
         with self._lock:
+            if description:
+                self._help.setdefault(name, description)
             self._gauges[key] = fn
+
+    def describe(self, name: str, description: str) -> None:
+        """Attach (or replace) the ``# HELP`` text of a metric name."""
+        with self._lock:
+            self._help[name] = description
+
+    # -- matching (SLO objectives) ----------------------------------------
+
+    @staticmethod
+    def _matches(labels: LabelItems, want: Dict[str, str]) -> bool:
+        have = dict(labels)
+        return all(have.get(k) == str(v) for k, v in want.items())
+
+    def find_histograms(self, name: str, **labels: str) -> List[Histogram]:
+        """Every histogram series named ``name`` whose labels are a
+        superset of ``labels`` (empty ``labels`` matches all series)."""
+        with self._lock:
+            items = list(self._histograms.items())
+        return [
+            h for (n, li), h in items
+            if n == name and self._matches(li, labels)
+        ]
+
+    def find_counters(self, name: str, **labels: str) -> List[Counter]:
+        """Every counter series named ``name`` whose labels are a superset
+        of ``labels``."""
+        with self._lock:
+            items = list(self._counters.items())
+        return [
+            c for (n, li), c in items
+            if n == name and self._matches(li, labels)
+        ]
 
     # -- export -----------------------------------------------------------
 
@@ -220,6 +296,10 @@ class MetricsRegistry:
             hists = list(self._histograms.items())
             gauges = list(self._gauges.items())
         return counters, hists, gauges
+
+    def _help_snapshot(self) -> Dict[str, str]:
+        with self._lock:
+            return dict(self._help)
 
     def to_dict(self, floor: int = 0) -> Dict[str, object]:
         """Flat snapshot ``{"name{k=v}": value-or-summary}``.
@@ -237,6 +317,23 @@ class MetricsRegistry:
             snap = h.snapshot()
             if snap["count"] < floor:
                 snap = {k: 0 if k == "count" else 0.0 for k in snap}
+            else:
+                # exemplars name individual traces; a floored (multi-tenant)
+                # snapshot must not carry them
+                ex = h.exemplars() if floor == 0 else {}
+                if ex:
+                    snap = dict(snap)
+                    snap["exemplars"] = [
+                        {
+                            "le": (
+                                BUCKET_BOUNDS[i]
+                                if i < len(BUCKET_BOUNDS) else math.inf
+                            ),
+                            "trace_id": t,
+                            "value": v,
+                        }
+                        for i, (t, v) in sorted(ex.items())
+                    ]
             out[name + _label_suffix(labels)] = snap
         for (name, labels), fn in gauges:
             v = fn()
@@ -266,33 +363,50 @@ class MetricsRegistry:
     def to_prometheus(self) -> str:
         lines: List[str] = []
         counters, hists, gauges = self._items()
+        help_text = self._help_snapshot()
         seen_type = set()
+
+        def _head(name: str, kind: str) -> None:
+            if name in seen_type:
+                return
+            seen_type.add(name)
+            desc = help_text.get(name)
+            if desc:
+                desc = desc.replace("\\", "\\\\").replace("\n", "\\n")
+                lines.append(f"# HELP {name} {desc}")
+            lines.append(f"# TYPE {name} {kind}")
+
         for (name, labels), c in counters:
-            if name not in seen_type:
-                lines.append(f"# TYPE {name} counter")
-                seen_type.add(name)
+            _head(name, "counter")
             lines.append(f"{name}{_prom_labels(labels)} {c.value}")
         for (name, labels), h in hists:
-            if name not in seen_type:
-                lines.append(f"# TYPE {name} histogram")
-                seen_type.add(name)
+            _head(name, "histogram")
             counts = h.bucket_counts()
+            exemplars = h.exemplars()
             cum = 0
-            for bound, c in zip(BUCKET_BOUNDS, counts[:-1]):
+            for i, (bound, c) in enumerate(zip(BUCKET_BOUNDS, counts[:-1])):
                 cum += c
                 if c == 0:
                     continue  # sparse: emit only occupied buckets (+Inf)
                 le = _prom_labels(labels, f'le="{bound:.6g}"')
-                lines.append(f"{name}_bucket{le} {cum}")
+                row = f"{name}_bucket{le} {cum}"
+                ex = exemplars.get(i)
+                if ex is not None:
+                    # OpenMetrics exemplar syntax: links the bucket to the
+                    # worst recent trace that landed in it
+                    row += f' # {{trace_id="{ex[0]}"}} {ex[1]:.9g}'
+                lines.append(row)
             cum += counts[-1]
             le = _prom_labels(labels, 'le="+Inf"')
-            lines.append(f"{name}_bucket{le} {cum}")
+            row = f"{name}_bucket{le} {cum}"
+            ex = exemplars.get(len(BUCKET_BOUNDS))
+            if ex is not None:
+                row += f' # {{trace_id="{ex[0]}"}} {ex[1]:.9g}'
+            lines.append(row)
             lines.append(f"{name}_sum{_prom_labels(labels)} {h.sum:.9g}")
             lines.append(f"{name}_count{_prom_labels(labels)} {h.count}")
         for (name, labels), fn in gauges:
-            if name not in seen_type:
-                lines.append(f"# TYPE {name} gauge")
-                seen_type.add(name)
+            _head(name, "gauge")
             lines.append(f"{name}{_prom_labels(labels)} {fn()}")
         return "\n".join(lines) + "\n"
 

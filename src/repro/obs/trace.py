@@ -20,6 +20,8 @@ from __future__ import annotations
 from time import perf_counter
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
+from .context import TraceContext, new_span_id
+
 __all__ = ["Span", "QueryTrace", "NullTrace"]
 
 _SLAB = 8
@@ -43,6 +45,7 @@ class QueryTrace:
         "executed_backend", "from_cache", "predicted_cost_s",
         "actual_cost_s", "rows_scanned", "delta_rows", "total_s",
         "branches", "drift", "notes",
+        "trace_id", "span_id", "parent_span_id", "sampled", "links",
         "_t_start", "_names", "_t0", "_dur", "_n",
     )
 
@@ -61,11 +64,44 @@ class QueryTrace:
         self.branches: List[Tuple[str, "QueryTrace"]] = []
         self.drift: Optional[float] = None
         self.notes: Dict[str, object] = {}
+        # distributed-trace identity: None until the engine/transport binds
+        # a TraceContext (bind_root / bind_child_of); links are causal
+        # references to *other* traces (coalesced_into, produced_by)
+        self.trace_id: Optional[str] = None
+        self.span_id: Optional[str] = None
+        self.parent_span_id: Optional[str] = None
+        self.sampled = True
+        self.links: Dict[str, str] = {}
         self._names: List[Optional[str]] = [None] * _SLAB
         self._t0 = [0.0] * _SLAB
         self._dur = [0.0] * _SLAB
         self._n = 0
         self._t_start = perf_counter()
+
+    # -- distributed identity ---------------------------------------------
+
+    def bind_root(self, ctx: TraceContext) -> None:
+        """Adopt ``ctx`` as this trace's own identity (the request root:
+        this node *is* the context's span)."""
+        self.trace_id = ctx.trace_id
+        self.span_id = ctx.span_id
+        self.parent_span_id = None
+        self.sampled = ctx.sampled
+
+    def bind_child_of(self, ctx: TraceContext) -> None:
+        """Become a child of ``ctx``: same trace id, fresh span id,
+        ``ctx``'s span recorded as parent."""
+        self.trace_id = ctx.trace_id
+        self.span_id = new_span_id()
+        self.parent_span_id = ctx.span_id
+        self.sampled = ctx.sampled
+
+    @property
+    def context(self) -> Optional[TraceContext]:
+        """This trace's node as a propagatable context (None if unbound)."""
+        if self.trace_id is None or self.span_id is None:
+            return None
+        return TraceContext(self.trace_id, self.span_id, self.sampled)
 
     # -- hot path ---------------------------------------------------------
 
@@ -83,6 +119,17 @@ class QueryTrace:
 
     def end(self, idx: int) -> None:
         self._dur[idx] = perf_counter() - self._t0[idx]
+
+    def add_span(self, name: str, t0: float, duration_s: float) -> int:
+        """Record an externally-timed span (absolute ``perf_counter``
+        start).  Used for intervals measured outside the trace's own
+        begin/end pairing — e.g. the scheduler's queue wait, whose start
+        stamp is taken on the event loop and whose end is observed on the
+        worker thread that finally picks the request up."""
+        i = self.begin(name)
+        self._t0[i] = t0
+        self._dur[i] = max(duration_s, 0.0)
+        return i
 
     def finish(self) -> "QueryTrace":
         t = perf_counter()
@@ -146,6 +193,14 @@ class QueryTrace:
                 for s in self.spans
             ],
         }
+        if self.trace_id is not None:
+            d["trace_id"] = self.trace_id
+            d["span_id"] = self.span_id
+            d["sampled"] = self.sampled
+            if self.parent_span_id is not None:
+                d["parent_span_id"] = self.parent_span_id
+        if self.links:
+            d["links"] = dict(self.links)
         if self.delta_rows is not None:
             d["delta_rows"] = list(self.delta_rows)
         if self.drift is not None:
@@ -213,3 +268,6 @@ class NullTrace(QueryTrace):
 
     def end(self, idx: int) -> None:
         return None
+
+    def add_span(self, name: str, t0: float, duration_s: float) -> int:
+        return 0

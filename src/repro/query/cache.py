@@ -373,8 +373,12 @@ def _copy_result(result):
         out.names = list(result.names)
     # Traces describe one concrete execution; a stored entry must not leak
     # the producing run's spans into later hits (the engine attaches a fresh
-    # cache-hit trace to each served copy).
+    # cache-hit trace to each served copy).  The producing run's *trace id*
+    # is retained so hit traces (and exemplars) can link back to the
+    # execution that populated the entry.
     if getattr(out, "trace", None) is not None:
+        if getattr(out, "source_trace_id", None) is None:
+            out.source_trace_id = out.trace.trace_id
         out.trace = None
     return out
 

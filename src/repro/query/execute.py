@@ -67,6 +67,7 @@ from repro.graph.build import EventGraph
 from repro.graph.shard import ShardedLog, sharded_log_name
 from repro.analysis.lockdep import make_lock
 from repro.obs import MetricsRegistry, QueryTrace, kernel_registry
+from repro.obs.context import TraceContext, mint_context
 from repro.obs.trace import NullTrace
 
 from .ast import (
@@ -166,6 +167,13 @@ class QueryResult:
     # when the engine was constructed with trace=False
     trace: Optional[QueryTrace] = dataclasses.field(
         default=None, repr=False, compare=False
+    )
+    # trace id of the execution that produced this value.  Cached copies
+    # scrub the producing run's spans but keep this id, so a cache hit's
+    # trace (and any exemplar pointing at it) links back to the execution
+    # that populated the cache.
+    source_trace_id: Optional[str] = dataclasses.field(
+        default=None, compare=False
     )
 
 
@@ -380,6 +388,28 @@ def _zero_outside(psi: np.ndarray, keep_ids: np.ndarray) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
+class _TraceScope:
+    """Thread-local ambient trace parent (``QueryEngine.trace_scope``):
+    while entered, root queries on this thread bind as children of the
+    scoped :class:`TraceContext` instead of minting a fresh trace id."""
+
+    __slots__ = ("_tls", "_ctx", "_prev")
+
+    def __init__(self, tls, ctx: Optional[TraceContext]):
+        self._tls = tls
+        self._ctx = ctx
+        self._prev: Optional[TraceContext] = None
+
+    def __enter__(self) -> Optional[TraceContext]:
+        self._prev = getattr(self._tls, "ctx", None)
+        self._tls.ctx = self._ctx
+        return self._ctx
+
+    def __exit__(self, *exc) -> bool:
+        self._tls.ctx = self._prev
+        return False
+
+
 class QueryEngine:
     """Plans, caches, and executes logical query plans in-store."""
 
@@ -400,6 +430,7 @@ class QueryEngine:
         graph_spill_dir: Optional[str] = None,
         metrics: Optional[MetricsRegistry] = None,
         trace: bool = True,
+        trace_store=None,
         telemetry_max_events: Optional[int] = 1 << 16,
         drift_ratio: float = 16.0,
     ):
@@ -447,32 +478,76 @@ class QueryEngine:
         # ``.stats`` rebuilds the dataclass as a point-in-time snapshot
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         m = self.metrics
-        self._c_queries = m.counter("engine_queries_total")
-        self._c_executions = m.counter("engine_executions_total")
-        self._c_cache_hits = m.counter("engine_cache_hits_total")
-        self._c_delta_hits = m.counter("engine_delta_hits_total")
-        self._c_delta_free_hits = m.counter("engine_delta_free_hits_total")
-        self._c_rows = m.counter("engine_rows_scanned_total")
-        self._c_union = m.counter("engine_union_queries_total")
-        self._c_graph = m.counter("engine_graph_queries_total")
-        self._c_conformance = m.counter("engine_conformance_queries_total")
-        self._c_shard = m.counter("engine_shard_queries_total")
-        self._h_replay_chunk = m.histogram("replay_chunk_seconds")
-        self._h_delta_fraction = m.histogram("delta_suffix_fraction")
-        m.gauge("engine_cache_hit_ratio", self._cache_hit_ratio)
+        self._c_queries = m.counter(
+            "engine_queries_total", "Queries run (also the query-id sequence)"
+        )
+        self._c_executions = m.counter(
+            "engine_executions_total",
+            "Backend executions (cache misses, incl. delta scans)",
+        )
+        self._c_cache_hits = m.counter(
+            "engine_cache_hits_total", "Queries served from the result cache"
+        )
+        self._c_delta_hits = m.counter(
+            "engine_delta_hits_total",
+            "Append-only queries resumed over just the suffix",
+        )
+        self._c_delta_free_hits = m.counter(
+            "engine_delta_free_hits_total",
+            "Append-only queries answered without any scan (window predates "
+            "the append)",
+        )
+        self._c_rows = m.counter(
+            "engine_rows_scanned_total",
+            "Memmap rows fed to streaming/delta scans",
+        )
+        self._c_union = m.counter(
+            "engine_union_queries_total",
+            "Multi-source (Q.logs) queries, incl. compare",
+        )
+        self._c_graph = m.counter(
+            "engine_graph_queries_total",
+            "Queries answered from the CSR event-knowledge graph",
+        )
+        self._c_conformance = m.counter(
+            "engine_conformance_queries_total",
+            "Conformance (fitness / alignments) queries",
+        )
+        self._c_shard = m.counter(
+            "engine_shard_queries_total",
+            "Queries answered by the sharded-graph merge backend",
+        )
+        self._h_replay_chunk = m.histogram(
+            "replay_chunk_seconds", "Streaming-replay chunk wall time"
+        )
+        self._h_delta_fraction = m.histogram(
+            "delta_suffix_fraction",
+            "Fraction of the log rescanned by a delta resume",
+        )
+        m.gauge(
+            "engine_cache_hit_ratio", self._cache_hit_ratio,
+            "Result-cache hits over total queries",
+        )
         # always-on per-query tracing + self-mining forensics: every
         # finished trace batches its spans into a bounded collector, so
         # ``Q.log(engine.own_telemetry())`` mines the engine's own process
         self.trace_enabled = trace
+        # optional repro.obs.store.TraceStore: every finished *root* trace
+        # (and every errored one) is offered for tail-sampled persistence
+        self.trace_store = trace_store
         self.drift_ratio = drift_ratio
         self.drift_min_s = 0.005
         self.telemetry = EventCollector(
             "engine", max_events=telemetry_max_events
         )
-        m.gauge("telemetry_events", lambda: float(len(self.telemetry)))
+        m.gauge(
+            "telemetry_events", lambda: float(len(self.telemetry)),
+            "Span events resident in the forensics ring buffer",
+        )
         m.gauge(
             "telemetry_dropped_events",
             lambda: float(self.telemetry.dropped),
+            "Span events dropped by the bounded forensics ring",
         )
         # hot-path memo of query_latency_seconds{sink,backend} histograms
         self._lat_hists: Dict[Tuple[str, str], "Histogram"] = {}  # guarded by _lock
@@ -544,6 +619,15 @@ class QueryEngine:
         return snap
 
     # -- tracing / self-mining forensics -------------------------------------
+    def trace_scope(self, ctx: Optional[TraceContext]):
+        """Context manager binding ``ctx`` as the ambient trace parent for
+        queries run on *this thread*: the next root query's trace becomes a
+        child of ``ctx`` (same trace id), and its own sub-queries — union
+        branches, per-shard sub-traces — inherit transitively through the
+        trace stack.  This is how the transport tier stitches its request
+        span tree into the engine's: one trace id end to end."""
+        return _TraceScope(self._tls, ctx)
+
     def _trace_begin(self, qid: int, sink: Sink, source) -> QueryTrace:
         if isinstance(source, UnionSource):
             kind = "union"
@@ -558,6 +642,19 @@ class QueryEngine:
         stack = getattr(self._tls, "stack", None)
         if stack is None:
             stack = self._tls.stack = []
+        if self.trace_enabled:
+            # distributed identity: nested queries (union branches, shard
+            # sub-queries) chain under their enclosing trace; a root query
+            # chains under the ambient transport context when one is
+            # scoped, else mints a fresh trace id
+            if stack and stack[-1].trace_id is not None:
+                tr.bind_child_of(stack[-1].context)
+            else:
+                ctx = getattr(self._tls, "ctx", None)
+                if ctx is not None:
+                    tr.bind_child_of(ctx)
+                else:
+                    tr.bind_root(mint_context())
         stack.append(tr)
         return tr
 
@@ -602,13 +699,33 @@ class QueryEngine:
                 hist = self._lat_hists.get(key)
                 if hist is None:
                     hist = self._lat_hists[key] = self.metrics.histogram(
-                        "query_latency_seconds", sink=key[0], backend=key[1]
+                        "query_latency_seconds",
+                        "Per-query wall time by sink and executed backend",
+                        sink=key[0], backend=key[1],
                     )
-        hist.observe(tr.total_s)
+        hist.observe(tr.total_s, trace_id=tr.trace_id)
         names, t0s, durs = tr.raw_spans()
         if names:
             self.telemetry.record_many(f"q{tr.query_id}", names, t0s, durs)
         self._check_drift(tr)
+        # persist root traces only: a nested sub-trace (union branch, shard
+        # sub-query) rides its parent's record as a branch
+        if self.trace_store is not None and not getattr(
+            self._tls, "stack", None
+        ):
+            self.trace_store.offer(tr)
+
+    def _trace_error(self, tr: QueryTrace) -> None:
+        """Error path: pop + finish the trace and persist it when a store
+        is attached — errored traces are always kept (tail sampling)."""
+        self._trace_abort(tr)
+        if not tr.enabled:
+            return
+        tr.finish()
+        if self.trace_store is not None and not getattr(
+            self._tls, "stack", None
+        ):
+            self.trace_store.offer(tr, error=True)
 
     def _check_drift(self, tr: QueryTrace) -> None:
         """Calibration drift: the recorded cost contradicts the planner's
@@ -676,6 +793,10 @@ class QueryEngine:
                 tr.from_cache = True
                 tr.planned_backend = cached.physical.backend
                 tr.executed_backend = "cache"
+                if cached.source_trace_id:
+                    # the hit's trace links back to the execution that
+                    # populated the cache entry
+                    tr.links["produced_by"] = cached.source_trace_id
                 self._trace_finish(tr, cached)
                 # report this hit's own latency (fingerprint + canonicalize
                 # + lookup), not the wall time of the original execution
@@ -720,6 +841,7 @@ class QueryEngine:
             result = QueryResult(
                 value=value, names=names, logical=logical, physical=physical,
                 from_cache=False, wall_s=wall, rewrites=tuple(rewrites),
+                source_trace_id=tr.trace_id,
             )
             s = tr.begin("sink")
             self.cache.put(
@@ -730,7 +852,7 @@ class QueryEngine:
             self._trace_finish(tr, result)
             return result
         except BaseException:
-            self._trace_abort(tr)
+            self._trace_error(tr)
             raise
 
     def _conformance_graph_ok(self, source) -> bool:
@@ -1022,6 +1144,8 @@ class QueryEngine:
                 tr.from_cache = True
                 tr.planned_backend = cached.physical.backend
                 tr.executed_backend = "cache"
+                if cached.source_trace_id:
+                    tr.links["produced_by"] = cached.source_trace_id
                 self._trace_finish(tr, cached)
                 cached.wall_s = tr.total_s
                 return cached
@@ -1063,6 +1187,7 @@ class QueryEngine:
             result = QueryResult(
                 value=value, names=names, logical=logical, physical=physical,
                 from_cache=False, wall_s=wall, rewrites=tuple(rewrites),
+                source_trace_id=tr.trace_id,
             )
             s = tr.begin("sink")
             self.cache.put(key, result)
@@ -1070,7 +1195,7 @@ class QueryEngine:
             self._trace_finish(tr, result)
             return result
         except BaseException:
-            self._trace_abort(tr)
+            self._trace_error(tr)
             raise
 
     def _branch_raw(
@@ -1483,6 +1608,8 @@ class QueryEngine:
                 tr.planned_backend = "delta"
                 tr.executed_backend = "delta_free"
                 tr.delta_rows = (old.num_events, old.num_events)
+                if old_result.source_trace_id:
+                    tr.links["produced_by"] = old_result.source_trace_id
                 # republish under the new fingerprint: the next run is a
                 # plain hit
                 self.cache.put(
@@ -1530,7 +1657,7 @@ class QueryEngine:
             result = QueryResult(
                 value=value, names=out_names, logical=logical,
                 physical=physical, from_cache=False, wall_s=wall,
-                rewrites=rewrites,
+                rewrites=rewrites, source_trace_id=tr.trace_id,
             )
             self.cache.put(key, result, resume=new_resume, source_hint=hint)
             return result

@@ -187,12 +187,20 @@ class QueryService:
         engine: Optional[QueryEngine] = None,
         *,
         forensics_floor: int = 0,
+        slo_objectives=None,
     ):
+        from repro.obs import SLOEngine
+
         self.engine = engine or QueryEngine()
-        # k-anonymity floor for the engine-introspection sinks ("forensics"
-        # and "metrics") when the request names no logs; when it does, the
-        # strictest of this and the named logs' combined floor applies
+        # k-anonymity floor for the engine-introspection sinks ("forensics",
+        # "metrics", and "slo") when the request names no logs; when it
+        # does, the strictest of this and the named logs' combined floor
+        # applies
         self.forensics_floor = int(forensics_floor)
+        # declarative SLOs over the shared engine registry (the transport
+        # tier's series live there too), served via {"sink": "slo"} and the
+        # HTTP GET /slo endpoint
+        self.slo = SLOEngine(self.engine.metrics, objectives=slo_objectives)
         self._logs: Dict[str, object] = {}
         self._policies: Dict[str, Optional[AccessPolicy]] = {}
         self._lock = make_lock("QueryService")
@@ -396,6 +404,10 @@ class QueryService:
 
     def _introspect(self, request: Dict, sink: str) -> Dict:
         floor = self._introspection_floor(request)
+        if sink == "slo":
+            payload = self.slo.evaluate(floor=floor)
+            payload["floor"] = floor
+            return payload
         if sink == "metrics":
             payload = {
                 "sink": "metrics",
@@ -494,7 +506,7 @@ class QueryService:
         ``AccessDenied`` / ``QueryPlanError`` a real execution would, so
         invalid requests are rejected before they queue."""
         sink = request.get("sink", "dfg")
-        if sink in ("forensics", "metrics"):
+        if sink in ("forensics", "metrics", "slo"):
             floor = self._introspection_floor(request)
             # introspection responses are point-in-time snapshots of the
             # live engine — there is no stable source fingerprint to
@@ -555,7 +567,7 @@ class QueryService:
             coalescable=True,
         )
 
-    def query(self, request: Dict) -> Dict:
+    def query(self, request: Dict, trace_context=None) -> Dict:
         """Execute one request dict; returns a JSON-shaped response dict.
 
         ``{"log": name}`` targets a single registered log; ``{"logs":
@@ -563,13 +575,28 @@ class QueryService:
         ``variants`` merge; sink ``compare`` keeps the logs apart and
         reports drift).
 
-        Two introspection sinks need no log at all: ``{"sink":
+        Three introspection sinks need no log at all: ``{"sink":
         "forensics"}`` mines the engine's own execution spans into a DFG of
-        the serving process, and ``{"sink": "metrics"}`` snapshots the
+        the serving process, ``{"sink": "metrics"}`` snapshots the
         engine's counters/histograms (``"format": "prometheus"`` adds the
-        text exposition).  Any request may set ``"trace": true`` to attach
-        the per-query execution trace to the response."""
-        if request.get("sink") in ("forensics", "metrics"):
+        text exposition), and ``{"sink": "slo"}`` evaluates the declarative
+        objectives (verdicts, error budgets, burn rates).  Any request may
+        set ``"trace": true`` to attach the per-query execution trace to
+        the response; every non-introspection response carries the
+        execution's ``trace_id``.
+
+        ``trace_context`` (a :class:`repro.obs.TraceContext`) scopes the
+        engine execution under the caller's distributed trace — the
+        transport tier passes its request span here so the engine trace
+        (and every shard/union sub-trace under it) shares the request's
+        trace id."""
+        if trace_context is not None:
+            with self.engine.trace_scope(trace_context):
+                return self._query(request)
+        return self._query(request)
+
+    def _query(self, request: Dict) -> Dict:
+        if request.get("sink") in ("forensics", "metrics", "slo"):
             return self._introspect(request, request["sink"])
         multi = request.get("logs")
         if multi is not None:
@@ -715,6 +742,11 @@ class QueryService:
             "from_cache": res.from_cache,
             "backend": res.physical.backend,
             "wall_s": res.wall_s,
+            # the execution's distributed-trace id (a cache hit reports the
+            # hit's own trace; its links name the populating run)
+            "trace_id": (
+                res.trace.trace_id if res.trace is not None else None
+            ),
         })
         if request.get("trace"):
             payload["trace"] = (

@@ -31,8 +31,15 @@ GroupKey = Tuple[str, str, str]
 class Coalescer:
     def __init__(self, metrics: MetricsRegistry):
         self._groups: Dict[GroupKey, asyncio.Future] = {}
-        self._c_groups = metrics.counter("transport_coalesce_groups_total")
-        self._c_fanout = metrics.counter("transport_coalesce_fanout_total")
+        self._leaders: Dict[GroupKey, Optional[str]] = {}
+        self._c_groups = metrics.counter(
+            "transport_coalesce_groups_total",
+            "Coalescing groups opened (one leader execution each)",
+        )
+        self._c_fanout = metrics.counter(
+            "transport_coalesce_fanout_total",
+            "Requests served by awaiting another request's execution",
+        )
 
     def __len__(self) -> int:
         return len(self._groups)
@@ -45,13 +52,24 @@ class Coalescer:
             self._c_fanout.inc()
         return fut
 
-    def open(self, key: GroupKey) -> asyncio.Future:
+    def open(
+        self, key: GroupKey, trace_id: Optional[str] = None
+    ) -> asyncio.Future:
         """Open a new group led by the caller; the returned future fans the
-        leader's result out to every subsequent :meth:`join`."""
+        leader's result out to every subsequent :meth:`join`.  The leader's
+        ``trace_id`` is retained so followers can link ``coalesced_into``
+        in their own traces."""
         fut = asyncio.get_running_loop().create_future()
         self._groups[key] = fut
+        self._leaders[key] = trace_id
         self._c_groups.inc()
         return fut
+
+    def leader_of(self, key: GroupKey) -> Optional[str]:
+        """The open group leader's trace id (None when unknown or no
+        group).  Read it right after :meth:`join` — the group may settle
+        and vanish across any ``await``."""
+        return self._leaders.get(key)
 
     def settle(self, key: GroupKey, outcome) -> None:
         """Resolve and close ``key``'s group with ``outcome`` — an
@@ -61,6 +79,7 @@ class Coalescer:
         resolves: a request arriving after settlement opens a fresh group
         (and will find the result in the engine cache anyway)."""
         fut = self._groups.pop(key, None)
+        self._leaders.pop(key, None)
         if fut is None or fut.done():
             return
         fut.set_result(outcome)

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import asyncio
 from concurrent.futures import ThreadPoolExecutor
+from time import perf_counter
 from typing import Callable, Optional, Tuple
 
 from repro.analysis.lockdep import make_lock
@@ -53,10 +54,19 @@ class TwoLaneScheduler:
         self._max_depth = {"hot": max_depth_hot, "cold": max_depth_cold}
         self._depth = {"hot": 0, "cold": 0}  # guarded by _lock
         self._lock = make_lock("TransportScheduler")
+        self._h_wait = {
+            lane: metrics.histogram(
+                "transport_queue_wait_seconds",
+                "Lane queue wait: submission to worker pickup",
+                lane=lane,
+            )
+            for lane in LANES
+        }
         for lane in LANES:
             metrics.gauge(
                 "transport_queue_depth",
                 lambda lane=lane: float(self.depth(lane)),
+                "Queued plus running work per lane",
                 lane=lane,
             )
 
@@ -65,7 +75,7 @@ class TwoLaneScheduler:
             return self._depth[lane]
 
     def try_submit(
-        self, lane: str, est_cost_s: float, fn: Callable, *args
+        self, lane: str, est_cost_s: float, fn: Callable, *args, trace=None
     ) -> Tuple[Optional[asyncio.Future], Optional[float]]:
         """Run ``fn(*args)`` on ``lane``'s pool, bounded by the lane depth.
 
@@ -74,6 +84,14 @@ class TwoLaneScheduler:
         the lane is full and the request must be shed.  Depth counts
         queued *plus* running work, so the Retry-After estimate
         ``depth × est_cost / workers`` approximates the lane's drain time.
+
+        ``trace`` (a :class:`~repro.obs.QueryTrace`) receives a
+        ``queue_wait:<lane>`` span — submit-to-pickup — and an ``execute``
+        span, both recorded *on the worker thread* so the submitting
+        coroutine (which is suspended awaiting the future until after the
+        worker finishes) never races the span slab.  The wait also feeds
+        the ``transport_queue_wait_seconds`` histogram with the trace id
+        as exemplar.
         """
         with self._lock:
             depth = self._depth[lane]
@@ -86,8 +104,27 @@ class TwoLaneScheduler:
             per_req = max(est_cost_s, 1e-3)
             return None, depth * per_req / max(self._workers[lane], 1)
 
+        t_submit = perf_counter()
+        h_wait = self._h_wait[lane]
+
+        def _run():
+            t_start = perf_counter()
+            if trace is not None:
+                trace.add_span(f"queue_wait:{lane}", t_submit,
+                               t_start - t_submit)
+            h_wait.observe(
+                t_start - t_submit,
+                trace_id=None if trace is None else trace.trace_id,
+            )
+            try:
+                return fn(*args)
+            finally:
+                if trace is not None:
+                    trace.add_span("execute", t_start,
+                                   perf_counter() - t_start)
+
         loop = asyncio.get_running_loop()
-        fut = loop.run_in_executor(self._pools[lane], fn, *args)
+        fut = loop.run_in_executor(self._pools[lane], _run)
         fut.add_done_callback(lambda _f: self._done(lane))
         return fut, None
 

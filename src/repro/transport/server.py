@@ -15,10 +15,17 @@ engine is.  Endpoints:
   registries, transport series included).
 * ``GET /stream/metrics`` / ``GET /stream/forensics`` — live NDJSON feeds
   of the introspection sinks (``?interval=0.5&count=10``).
+* ``GET /slo`` — objective verdicts, error budgets, and burn-rate alerts
+  (the ``{"sink": "slo"}`` introspection over HTTP).
 * ``GET /healthz`` — liveness.
+* ``GET /readyz`` — readiness: probes engine registry, log registry,
+  graph store, and scheduler-lane saturation; 503 + JSON reasons when
+  degraded.
 
 The tenant identity is the ``X-Tenant`` header (default ``"default"``) —
-admission quotas key on it.
+admission quotas key on it.  An inbound ``traceparent`` header roots the
+request's distributed trace under the caller's; responses echo the
+request's own context back (``traceparent`` / ``X-Trace-Id``).
 """
 
 from __future__ import annotations
@@ -89,6 +96,7 @@ def _reason(status: int) -> str:
         200: "OK", 400: "Bad Request", 403: "Forbidden", 404: "Not Found",
         405: "Method Not Allowed", 413: "Payload Too Large",
         429: "Too Many Requests", 500: "Internal Server Error",
+        503: "Service Unavailable",
     }.get(status, "Unknown")
 
 
@@ -178,17 +186,30 @@ class TransportServer:
         url = urlsplit(target)
         path = url.path
         tenant = headers.get("x-tenant", "default")
+        traceparent = headers.get("traceparent")
         try:
             if path == "/healthz" and method == "GET":
                 _write_response(
                     writer, TransportResponse(200, {"ok": True})
                 )
+            elif path == "/readyz" and method == "GET":
+                ready, report = self.app.readiness()
+                _write_response(
+                    writer, TransportResponse(200 if ready else 503, report)
+                )
             elif path == "/metrics" and method == "GET":
                 self._write_prometheus(writer)
+            elif path == "/slo" and method == "GET":
+                _write_response(
+                    writer,
+                    await self.app.handle(
+                        {"sink": "slo"}, tenant, traceparent
+                    ),
+                )
             elif path == "/query" and method == "POST":
                 request = self._body_json(body)
                 _write_response(
-                    writer, await self.app.handle(request, tenant)
+                    writer, await self.app.handle(request, tenant, traceparent)
                 )
             elif path == "/append" and method == "POST":
                 request = self._body_json(body)
@@ -197,7 +218,7 @@ class TransportServer:
                 )
             elif path == "/query/stream" and method == "POST":
                 request = self._body_json(body)
-                resp = await self.app.handle(request, tenant)
+                resp = await self.app.handle(request, tenant, traceparent)
                 if not resp.ok:
                     _write_response(writer, resp)
                 else:
@@ -216,7 +237,7 @@ class TransportServer:
                     TransportResponse(
                         405 if path in (
                             "/query", "/append", "/query/stream",
-                            "/metrics", "/healthz",
+                            "/metrics", "/healthz", "/readyz", "/slo",
                         ) else 404,
                         {"error": "NoSuchEndpoint", "detail": target},
                     ),

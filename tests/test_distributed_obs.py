@@ -1,0 +1,518 @@
+"""Distributed observability — trace propagation, exemplars, SLOs, and
+the persisted trace store.
+
+Pins: W3C traceparent parsing (malformed never fails a request); one
+trace id across transport spans, the engine ``QueryTrace``, and every
+per-shard sub-trace of a sharded execution, proven through one HTTP
+request; coalesced followers linking ``coalesced_into`` the leader;
+cache hits linking ``produced_by`` the populating run; exemplar-linked
+histograms and ``# HELP`` metadata in the Prometheus exposition; the SLO
+engine's verdicts / error budgets / multi-window burn-rate alerts with
+an injected clock; the trace store's bounded ring, tail-based sampling,
+and the bit-identity of mining the persisted trace log with Algorithm 1;
+and ``GET /readyz`` degrading to 503 with reasons."""
+
+import asyncio
+import json
+import os
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import dfg_numpy
+from repro.data import ProcessSpec, generate_memmap_log, generate_repository
+from repro.graph import partition_memmap_log
+from repro.obs import (
+    MetricsRegistry,
+    Objective,
+    SLOEngine,
+    TraceStore,
+    mint_context,
+    parse_traceparent,
+)
+from repro.obs.context import TraceContext
+from repro.query import Q, QueryEngine, QueryPlanError
+from repro.serve import QueryService
+from repro.transport import (
+    TransportApp,
+    TransportConfig,
+    TransportServer,
+    reassemble_ndjson,
+)
+
+EVENTS = 6_000
+
+
+def run(coro):
+    return asyncio.run(coro)
+
+
+@pytest.fixture()
+def repo():
+    return generate_repository(300, ProcessSpec(seed=11), seed=11)
+
+
+@pytest.fixture()
+def sharded(tmp_path):
+    base = generate_memmap_log(
+        str(tmp_path / "log"), EVENTS,
+        ProcessSpec(num_activities=10, seed=5, horizon_days=30), seed=5,
+    )
+    return partition_memmap_log(base, 3, str(tmp_path / "k3"))
+
+
+def make_app(service, tmp_path=None, **cfg):
+    cfg.setdefault("hot_cutoff_s", 0.05)
+    if tmp_path is not None:
+        cfg.setdefault("trace_dir", str(tmp_path / "traces"))
+    return TransportApp(service, TransportConfig(**cfg))
+
+
+# -- trace context ------------------------------------------------------------
+
+def test_traceparent_round_trip():
+    ctx = mint_context()
+    back = parse_traceparent(ctx.to_traceparent())
+    assert back == ctx
+    assert len(ctx.trace_id) == 32 and len(ctx.span_id) == 16
+    unsampled = TraceContext(ctx.trace_id, ctx.span_id, False)
+    assert unsampled.to_traceparent().endswith("-00")
+    assert parse_traceparent(unsampled.to_traceparent()).sampled is False
+
+
+@pytest.mark.parametrize("header", [
+    "",
+    "garbage",
+    "00-short-beef-01",
+    "00-" + "g" * 32 + "-" + "a" * 16 + "-01",       # non-hex
+    "00-" + "A" * 32 + "-" + "a" * 16 + "-01",       # uppercase
+    "00-" + "0" * 32 + "-" + "a" * 16 + "-01",       # all-zero trace id
+    "00-" + "a" * 32 + "-" + "0" * 16 + "-01",       # all-zero span id
+    "ff-" + "a" * 32 + "-" + "b" * 16 + "-01",       # forbidden version
+    "00-" + "a" * 32 + "-" + "b" * 16,               # missing flags
+])
+def test_malformed_traceparent_is_rejected(header):
+    assert parse_traceparent(header) is None
+
+
+def test_malformed_traceparent_never_fails_the_request(repo, tmp_path):
+    svc = QueryService()
+    svc.register("bpi", repo)
+    app = make_app(svc, tmp_path)
+    resp = run(app.handle(
+        {"log": "bpi", "sink": "dfg"}, traceparent="not-a-traceparent"
+    ))
+    app.close()
+    assert resp.status == 200
+    assert len(resp.headers["X-Trace-Id"]) == 32  # fresh root, not an error
+
+
+# -- end-to-end propagation over HTTP -----------------------------------------
+
+def _http(method, url, body=None, headers=None):
+    data = json.dumps(body).encode() if body is not None else None
+    req = urllib.request.Request(
+        url, data=data, method=method, headers=headers or {}
+    )
+    try:
+        with urllib.request.urlopen(req, timeout=30) as f:
+            return f.status, dict(f.headers), f.read()
+    except urllib.error.HTTPError as e:
+        return e.code, dict(e.headers), e.read()
+
+
+def test_one_trace_id_across_transport_engine_and_shards(sharded, tmp_path):
+    """The acceptance path: one HTTP request with an inbound traceparent
+    over a sharded log — the response echoes the trace id, the engine
+    trace and every shard sub-trace carry it, and the persisted store
+    holds the stitched request tree."""
+    svc = QueryService()
+    svc.register("sharded", sharded)
+    app = make_app(svc, tmp_path)
+    inbound = mint_context()
+    req = {
+        "log": "sharded", "sink": "dfg",
+        "backend": "sharded-graph", "trace": True,
+    }
+
+    async def go():
+        srv = TransportServer(app)
+        await srv.start()
+        loop = asyncio.get_running_loop()
+
+        def exercise():
+            out = {}
+            out["query"] = _http(
+                "POST", srv.address + "/query", req,
+                headers={"traceparent": inbound.to_traceparent()},
+            )
+            out["stream"] = _http(
+                "POST", srv.address + "/query/stream", req,
+                headers={"traceparent": inbound.to_traceparent()},
+            )
+            return out
+
+        out = await loop.run_in_executor(None, exercise)
+        await srv.stop()
+        return out
+
+    out = run(go())
+    status, headers, body = out["query"]
+    assert status == 200
+    tid = inbound.trace_id
+    # the transport adopted the caller's trace and echoed it back
+    assert headers["X-Trace-Id"] == tid
+    echoed = parse_traceparent(headers["traceparent"])
+    assert echoed.trace_id == tid and echoed.span_id != inbound.span_id
+    payload = json.loads(body)
+    assert payload["trace_id"] == tid
+    # the engine trace and every per-shard sub-trace share the id
+    tr = payload["trace"]
+    assert tr["trace_id"] == tid
+    branches = tr["branches"]
+    assert len(branches) == 3
+    for b in branches:
+        assert b["trace"]["trace_id"] == tid
+        assert b["trace"]["parent_span_id"] == tr["span_id"]
+
+    # NDJSON streaming carries the same id on the meta line
+    status, headers, body = out["stream"]
+    assert status == 200
+    assert headers["X-Trace-Id"] == tid
+    streamed = reassemble_ndjson(body.decode().splitlines())
+    assert streamed["trace_id"] == tid
+
+    # the persisted store holds the stitched tree: the transport record
+    # parents the engine record, shard spans nested under it
+    recs = app.trace_store.find(tid)
+    t_recs = [r for r in recs if r["source"] == "transport"]
+    eng_recs = [r for r in recs if r["source"] != "transport"]
+    assert len(t_recs) == 2 and eng_recs  # /query and /query/stream
+    t_spans = {r["span_id"] for r in t_recs}
+    assert all(r["parent_span_id"] in t_spans for r in eng_recs)
+    span_names = [s["name"] for s in t_recs[0]["spans"]]
+    assert "probe" in span_names and "admit" in span_names
+    assert any(n.startswith("queue_wait:") for n in span_names)
+    assert "execute" in span_names
+    app.close()
+
+
+def test_coalesced_follower_links_leader(sharded, tmp_path):
+    class Gated(QueryService):
+        def __init__(self):
+            super().__init__(QueryEngine(memory_budget_events=1_000))
+            self.gate = threading.Event()
+
+        def query(self, request, trace_context=None):
+            if request.get("sink") == "dfg":
+                assert self.gate.wait(timeout=30), "gate timeout"
+            return super().query(request, trace_context)
+
+    svc = Gated()
+    svc.register("live", sharded)
+    app = make_app(svc, tmp_path)
+    req = {"log": "live", "sink": "dfg"}
+
+    async def go():
+        t1 = asyncio.create_task(app.handle(req))
+        await asyncio.sleep(0.05)          # leader held at the gate
+        t2 = asyncio.create_task(app.handle(req))
+        await asyncio.sleep(0.05)
+        svc.gate.set()
+        return await asyncio.gather(t1, t2)
+
+    r1, r2 = run(go())
+    leader = r1 if r1.headers["X-Coalesced"] == "0" else r2
+    follower = r2 if leader is r1 else r1
+    assert follower.headers["X-Coalesced"] == "1"
+    ltid = leader.headers["X-Trace-Id"]
+    ftid = follower.headers["X-Trace-Id"]
+    assert ltid != ftid
+    # the shared payload names the producing (leader) execution
+    assert follower.payload["trace_id"] == ltid
+    f_rec = next(
+        r for r in app.trace_store.find(ftid) if r["source"] == "transport"
+    )
+    assert f_rec["links"]["coalesced_into"] == ltid
+    assert "await_leader" in [s["name"] for s in f_rec["spans"]]
+    app.close()
+
+
+def test_cache_hit_links_producing_run(repo):
+    engine = QueryEngine()
+    miss = Q.log(repo).using(engine).dfg()
+    hit = Q.log(repo).using(engine).dfg()
+    assert hit.from_cache
+    assert hit.trace.trace_id != miss.trace.trace_id
+    assert hit.trace.links["produced_by"] == miss.trace.trace_id
+    # the retained id survives service payloads too
+    svc = QueryService(engine)
+    svc.register("bpi", repo)
+    payload = svc.query({"log": "bpi", "sink": "dfg"})
+    assert len(payload["trace_id"]) == 32
+
+
+# -- exemplars and HELP metadata ----------------------------------------------
+
+def test_histogram_exemplars_and_help():
+    m = MetricsRegistry()
+    h = m.histogram("request_latency_seconds", "End-to-end latency", lane="hot")
+    m.counter("transport_requests_total", "Requests served", lane="hot")
+    h.observe(0.003, trace_id="aa" * 16)
+    h.observe(0.004, trace_id="bb" * 16)   # worse in the same bucket wins
+    h.observe(5.0, trace_id="cc" * 16)     # lands in the overflow bucket
+    h.observe(0.0035)                      # no trace id: never an exemplar
+    ex = h.exemplars()
+    assert ("bb" * 16, 0.004) in ex.values()
+    assert ("cc" * 16, 5.0) in ex.values()
+    text = m.to_prometheus()
+    assert "# HELP request_latency_seconds End-to-end latency" in text
+    assert "# HELP transport_requests_total Requests served" in text
+    assert f'# {{trace_id="{"bb" * 16}"}} 0.004' in text
+    assert f'# {{trace_id="{"cc" * 16}"}} 5' in text
+    snap = m.to_dict()["request_latency_seconds{lane=hot}"]
+    assert any(e["trace_id"] == "bb" * 16 for e in snap["exemplars"])
+
+
+def test_exemplars_respect_floor():
+    m = MetricsRegistry()
+    h = m.histogram("lat", "latency")
+    for i in range(3):
+        h.observe(0.01, trace_id=f"{i:032x}")
+    snap = m.to_dict(floor=5)["lat"]
+    assert "exemplars" not in snap  # sub-floor counts leak nothing
+
+
+# -- SLO engine ---------------------------------------------------------------
+
+def _slo_setup(observations, threshold_s=0.025, target=0.99):
+    m = MetricsRegistry()
+    h = m.histogram("request_latency_seconds", lane="hot")
+    for x in observations:
+        h.observe(x)
+    clock = {"t": 1000.0}
+    eng = SLOEngine(
+        m,
+        objectives=[Objective(
+            name="warm_latency", kind="latency", target=target,
+            metric="request_latency_seconds", labels=(("lane", "hot"),),
+            threshold_s=threshold_s,
+        )],
+        windows_s=(60.0, 300.0),
+        now=lambda: clock["t"],
+    )
+    return m, h, eng, clock
+
+
+def test_slo_latency_verdict_and_budget():
+    _, _, eng, _ = _slo_setup([0.001] * 99 + [0.5])
+    out = eng.evaluate()
+    obj = out["objectives"][0]
+    assert obj["ok"] is True and out["ok"] is True
+    assert obj["total"] == 100
+    assert obj["error_budget_remaining"] == pytest.approx(0.0, abs=0.05)
+    # now degrade: p99 over threshold
+    _, _, eng2, _ = _slo_setup([0.1] * 100)
+    obj2 = eng2.evaluate()["objectives"][0]
+    assert obj2["ok"] is False
+    assert obj2["measured"] > 0.025
+
+
+def test_slo_burn_rate_alert_needs_every_window():
+    m, h, eng, clock = _slo_setup([0.001] * 1000)
+    eng.tick()                      # healthy baseline at t=1000
+    clock["t"] += 300.0
+    eng.tick()                      # still healthy at t=1300
+    out = eng.evaluate(tick=False)
+    obj = out["objectives"][0]
+    assert obj["alert"] is False and out["alerts"] == []
+    # sustained burn: every subsequent event is bad, across both windows
+    for _ in range(400):
+        h.observe(0.2)
+    clock["t"] += 60.0
+    eng.tick()
+    clock["t"] += 300.0
+    for _ in range(400):
+        h.observe(0.2)
+    eng.tick()
+    out = eng.evaluate(tick=False)
+    obj = out["objectives"][0]
+    burns = [b for b in obj["burn_rates"].values() if b is not None]
+    assert burns and all(b > 14.4 for b in burns)
+    assert obj["alert"] is True and out["alerts"] == ["warm_latency"]
+
+
+def test_slo_availability_objective():
+    m = MetricsRegistry()
+    good = m.counter("transport_requests_total", lane="hot")
+    bad = m.counter("transport_shed_total", reason="queue")
+    eng = SLOEngine(m, objectives=[Objective(
+        name="availability", kind="availability", target=0.999,
+        metric="transport_requests_total",
+        bad_metric="transport_shed_total",
+    )])
+    good.inc(2000)
+    obj = eng.evaluate()["objectives"][0]
+    assert obj["ok"] is True and obj["good_ratio"] == 1.0
+    bad.inc(100)
+    obj = eng.evaluate()["objectives"][0]
+    assert obj["ok"] is False
+    assert obj["error_budget_remaining"] < 0  # budget overdrawn
+
+
+def test_slo_floor_hides_counts():
+    _, _, eng, _ = _slo_setup([0.001] * 3)
+    obj = eng.evaluate(floor=10)["objectives"][0]
+    assert obj["ok"] is None and obj["total"] == 0 and obj["good"] == 0
+
+
+def test_slo_sink_and_http_endpoint(repo, tmp_path):
+    svc = QueryService()
+    svc.register("bpi", repo)
+    app = make_app(svc, tmp_path)
+
+    async def go():
+        for _ in range(3):
+            await app.handle({"log": "bpi", "sink": "dfg"})
+        sink = await app.handle({"sink": "slo"})
+        srv = TransportServer(app)
+        await srv.start()
+        loop = asyncio.get_running_loop()
+        http = await loop.run_in_executor(
+            None, lambda: _http("GET", srv.address + "/slo")
+        )
+        await srv.stop()
+        return sink, http
+
+    sink, (status, _, body) = run(go())
+    assert sink.status == 200
+    names = {o["name"] for o in sink.payload["objectives"]}
+    assert names == {"warm_latency", "availability"}
+    warm = next(
+        o for o in sink.payload["objectives"] if o["name"] == "warm_latency"
+    )
+    assert warm["total"] >= 3 and warm["ok"] is True
+    assert status == 200
+    assert {o["name"] for o in json.loads(body)["objectives"]} == names
+
+
+# -- persisted trace store ----------------------------------------------------
+
+def _run_traces(store, n, repo, **engine_kw):
+    engine = QueryEngine(**engine_kw)
+    engine.trace_store = store
+    q = Q.log(repo).using(engine)
+    for _ in range(n):
+        q.dfg()
+    return engine
+
+
+def test_trace_store_ring_is_bounded(repo, tmp_path):
+    store = TraceStore(
+        str(tmp_path / "tr"), max_bytes=64 * 1024, segments=3
+    )
+    _run_traces(store, 200, repo)
+    files = [f for f in os.listdir(tmp_path / "tr") if f.endswith(".jsonl")]
+    assert len(files) <= 3
+    total = sum(
+        os.path.getsize(tmp_path / "tr" / f) for f in files
+    )
+    assert total <= 64 * 1024 + 8 * 1024  # ring bound (+1 in-flight line)
+    assert len(store) == 200              # everything was offered and kept
+    store.close()
+
+
+def test_trace_store_tail_sampling(repo, tmp_path):
+    store = TraceStore(str(tmp_path / "tr"), sample_every=10, slo_latency_s=0.5)
+    engine = QueryEngine()
+    engine.trace_store = store
+    q = Q.log(repo).using(engine)
+    for _ in range(20):
+        q.dfg()                            # fast, healthy: decimated 1-in-10
+    kept_before = len(store)
+    assert kept_before == 2
+    with pytest.raises(QueryPlanError):
+        q.neighborhood("no-such-activity") # errors are always kept
+    assert len(store) == kept_before + 1
+    recs = list(store.read_records())
+    assert sum(1 for r in recs if r["error"]) == 1
+    store.close()
+
+
+def test_unsampled_context_kept_only_by_tail_rules(repo, tmp_path):
+    store = TraceStore(str(tmp_path / "tr"), sample_every=1)
+    engine = QueryEngine()
+    engine.trace_store = store
+    ctx = TraceContext(mint_context().trace_id, "ab" * 8, sampled=False)
+    with engine.trace_scope(ctx):
+        Q.log(repo).using(engine).dfg()    # healthy + unsampled: dropped
+    assert len(store) == 0
+    with engine.trace_scope(ctx):
+        with pytest.raises(QueryPlanError):
+            Q.log(repo).using(engine).neighborhood("nope")
+    assert len(store) == 1                 # the error overrides the flag
+    store.close()
+
+
+def test_trace_store_mines_bit_identical_to_algorithm1(repo, tmp_path):
+    """``Q.log(store.to_repository()).dfg()`` == the numpy Algorithm 1
+    oracle over the same read-back event table — the persisted trace log
+    is a first-class event log."""
+    store = TraceStore(str(tmp_path / "tr"))
+    engine = _run_traces(store, 3, repo)
+    Q.log(repo).using(engine).histogram()
+    own = store.to_repository()
+    assert own.num_events > 0
+    res = Q.log(own).using(QueryEngine()).dfg()
+    src, dst, valid = own.df_pairs()
+    expect = dfg_numpy(src, dst, valid, own.num_activities)
+    assert res.names == own.activity_names
+    np.testing.assert_array_equal(np.asarray(res.value), expect)
+    # the mined process contains the engine's execution chain
+    assert "parse" in res.names
+    store.close()
+
+
+def test_trace_store_find_resumes_across_instances(repo, tmp_path):
+    store = TraceStore(str(tmp_path / "tr"))
+    engine = _run_traces(store, 2, repo)
+    tid = Q.log(repo).using(engine).dfg().trace.trace_id
+    store.close()
+    reopened = TraceStore(str(tmp_path / "tr"))  # resumes highest segment
+    assert [r["trace_id"] for r in reopened.find(tid)]
+    reopened.close()
+
+
+# -- readiness ----------------------------------------------------------------
+
+def test_readyz_ok_and_degraded(repo, tmp_path):
+    svc = QueryService()
+    svc.register("bpi", repo)
+    app = make_app(svc, tmp_path)
+
+    async def go(a):
+        srv = TransportServer(a)
+        await srv.start()
+        loop = asyncio.get_running_loop()
+        out = await loop.run_in_executor(
+            None, lambda: _http("GET", srv.address + "/readyz")
+        )
+        await srv.stop()
+        return out
+
+    status, _, body = run(go(app))
+    report = json.loads(body)
+    assert status == 200 and report["ready"] is True
+    assert report["checks"]["lane_hot"]["depth"] == 0
+
+    # a zero-capacity hot lane is permanently saturated: degraded
+    svc2 = QueryService()
+    svc2.register("bpi", repo)
+    app2 = make_app(svc2, None, max_depth_hot=0)
+    status, _, body = run(go(app2))
+    report = json.loads(body)
+    assert status == 503 and report["ready"] is False
+    assert "lane_hot_saturated" in report["reasons"]

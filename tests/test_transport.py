@@ -60,7 +60,7 @@ class GatedService(QueryService):
         self.gate_after_execute = False
         self.gate_first_call_only = False
 
-    def query(self, request):
+    def query(self, request, trace_context=None):
         with self._calls_lock:
             self.calls.append(dict(request))
             nth = len(self.calls)
@@ -69,7 +69,7 @@ class GatedService(QueryService):
         )
         if gated and not self.gate_after_execute:
             assert self.gate.wait(timeout=30), "gate timeout"
-        out = super().query(request)
+        out = super().query(request, trace_context)
         if gated and self.gate_after_execute:
             assert self.gate.wait(timeout=30), "gate timeout"
         return out
